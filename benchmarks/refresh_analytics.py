@@ -1,0 +1,36 @@
+"""Recompute analytic flops/bytes + roofline terms in existing dry-run JSONs
+(collectives stay as measured; no recompilation needed)."""
+import glob, json, sys
+
+from repro.configs import get_config
+from repro.configs.base import ALL_SHAPES
+from repro.launch import analytic, roofline
+from repro.launch.dryrun import VARIANTS
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+def main(dirname="results/dryrun"):
+    for p in sorted(glob.glob(dirname + "/*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            continue
+        parts = p.split("/")[-1][:-5].split("__")
+        variant = parts[3] if len(parts) > 3 else "base"
+        cfg = VARIANTS[variant](get_config(r["arch"]))
+        shape = SHAPES[r["shape"]]
+        an = analytic.report(cfg, shape)
+        coll_pp = r["collectives"].get("total", 0.0)
+        r["analytic"] = an
+        r["roofline"] = roofline.terms(
+            flops_global=an["flops"], bytes_global=an["hbm_bytes"],
+            coll_bytes_per_partition=coll_pp, n_partitions=r["chips"])
+        r["model_flops"] = roofline.model_flops(cfg, shape)
+        r["useful_compute_ratio"] = r["model_flops"] / an["flops"]
+        r["dominant"] = roofline.dominant(r["roofline"])
+        with open(p, "w") as f:
+            json.dump(r, f, indent=1)
+    print("refreshed")
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,193 @@
+"""Benchmark harness — one function per paper figure/claim.
+
+Paper: Figure 1 has two panels: (left) runtime vs resolution, serial vs
+parallel; (right) runtime vs hyperedge count at fixed resolution. Claims:
+  C1 serial runtime linear to ~2000^2, inflecting above; crossover exists
+  C2 parallel wins 2x-10x at high resolution
+  C3 runtime invariant to hyperedge count (147 -> 4.1M)
+
+Hardware note: the paper compares a GeForce 310M (16 CUDA cores) against an
+i5-480M. This container is a single CPU core: "parallel" here is the
+data-parallel formulation (vectorized JAX / Pallas-interpret); "serial" is
+the paper's scalar column walk (core/serial.py). The speedup numbers are
+therefore formulation speedups, not device speedups; curve *shapes* and the
+invariance claim are the reproduction targets (EXPERIMENTS.md §Paper-claims).
+
+Output: ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import serial, ychg
+from repro.data import modis
+from repro.kernels import ops as kops
+
+
+def _t(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall time (us) of fn(*args) with jax sync."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
+            r, (jax.Array, tuple, dict)) else None
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if isinstance(r, (jax.Array, tuple, dict)):
+            jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def bench_resolution_sweep() -> list[str]:
+    """Figure 1 (left): runtime vs resolution, serial vs data-parallel."""
+    rows = []
+    jit_analyze = jax.jit(ychg.analyze)
+    for res in (250, 500, 1000, 2000, 4000):
+        img = modis.snowfield(res, seed=0)
+        jimg = jax.device_put(img)
+        t_par = _t(lambda x: jit_analyze(x).n_hyperedges, jimg)
+        t_ser = _t(serial.analyze_numpy, img, reps=3)
+        if res <= 500:
+            t_scalar = _t(serial.analyze_scalar, img, reps=1, warmup=0)
+            rows.append(f"ychg_scalar_res{res},{t_scalar:.1f},"
+                        f"speedup_vs_parallel={t_scalar / t_par:.1f}x")
+        rows.append(f"ychg_serial_res{res},{t_ser:.1f},")
+        rows.append(f"ychg_parallel_res{res},{t_par:.1f},"
+                    f"speedup={t_ser / t_par:.2f}x")
+    return rows
+
+
+def bench_hyperedge_sweep() -> list[str]:
+    """Figure 1 (right): runtime vs hyperedge count at fixed resolution (C3)."""
+    rows = []
+    res = 2048
+    jit_analyze = jax.jit(ychg.analyze)
+    times = []
+    for n in (147, 1_000, 10_000, 100_000, 1_000_000):
+        img = jax.device_put(modis.striped(res, n))
+        t = _t(lambda x: jit_analyze(x).n_hyperedges, img)
+        times.append(t)
+        rows.append(f"ychg_hyperedges_{n},{t:.1f},n_hyperedges={n}")
+    spread = max(times) / min(times)
+    rows.append(f"ychg_hyperedge_invariance,{np.mean(times):.1f},"
+                f"max_over_min={spread:.3f}")
+    return rows
+
+
+def bench_kernel_colscan() -> list[str]:
+    """Step-1 kernel (Pallas interpret on CPU) vs jnp production path."""
+    rows = []
+    img = modis.snowfield(1024, seed=1)
+    jimg = jax.device_put(img)
+    t_jnp = _t(lambda x: ychg.column_runs(x), jimg)
+    t_pal = _t(lambda x: kops.colscan_runs(x), jimg)
+    rows.append(f"kernel_colscan_jnp_1024,{t_jnp:.1f},")
+    rows.append(f"kernel_colscan_pallas_interp_1024,{t_pal:.1f},"
+                "note=interpret-mode-correctness-only")
+    return rows
+
+
+def bench_kernel_packed() -> list[str]:
+    """§Perf iteration on the paper's kernel: 1-bit row packing (8x less HBM
+    traffic on the memory-bound scan). CPU wall time + the v5e roofline terms
+    both reported; correctness asserted inline."""
+    import jax.numpy as jnp
+
+    from repro.core import ychg
+    from repro.kernels.ychg_packed import pack_rows, packed_analyze
+
+    rows = []
+    res = 4096
+    img = modis.snowfield(res, seed=2)
+    jimg = jax.device_put(img)
+    base = jax.jit(ychg.analyze)
+    n_base = int(base(jimg).n_hyperedges)
+    n_pack = int(packed_analyze(jimg)["n_hyperedges"])
+    assert n_base == n_pack, (n_base, n_pack)
+    packed = jax.block_until_ready(pack_rows(jimg))
+    t_unpacked = _t(lambda x: base(x).n_hyperedges, jimg)
+    t_packed_jit = _t(
+        lambda x: packed_analyze(x)["n_hyperedges"], jimg
+    )
+    # v5e roofline (memory term dominates both): bytes / 819 GB/s
+    hbm = 819e9
+    t_roof_base = res * res / hbm
+    t_roof_pack = res * res / 8 / hbm
+    rows.append(f"ychg_kernel_baseline_4096,{t_unpacked:.1f},"
+                f"v5e_mem_term_us={t_roof_base * 1e6:.1f}")
+    rows.append(f"ychg_kernel_bitpacked_4096,{t_packed_jit:.1f},"
+                f"v5e_mem_term_us={t_roof_pack * 1e6:.1f}_(8x_less_traffic)")
+    return rows
+
+
+def bench_lm_train_microstep() -> list[str]:
+    """Tiny LM train step (the framework's hot loop on this box)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.models import init_params
+    from repro.optim import adamw_init
+    from repro.train.step import make_train_step
+
+    cfg = ModelConfig(
+        name="bench-tiny", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+        param_dtype="float32", activation_dtype="float32", remat="none",
+        attn_chunk=128,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jax.device_put(rng.integers(0, 512, (8, 128)).astype(np.int32)),
+        "labels": jax.device_put(rng.integers(0, 512, (8, 128)).astype(np.int32)),
+    }
+    t = _t(lambda p, o, b: step(p, o, b)[2]["loss"], params, opt, batch)
+    toks = 8 * 128
+    return [f"lm_train_microstep_1M,{t:.1f},tokens_per_s={toks / (t / 1e6):.0f}"]
+
+
+def bench_serve_decode() -> list[str]:
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.models import init_cache, init_params
+    from repro.train.step import make_serve_step
+
+    cfg = ModelConfig(
+        name="bench-decode", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=512,
+        param_dtype="float32", activation_dtype="float32", remat="none",
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, 8, 256)
+    step = jax.jit(make_serve_step(cfg))
+    tok = jax.device_put(np.ones((8, 1), np.int32))
+    t = _t(lambda: step(params, cache, tok, jnp.int32(5))[0])
+    return [f"lm_serve_decode_b8,{t:.1f},tokens_per_s={8 / (t / 1e6):.0f}"]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in (
+        bench_resolution_sweep,
+        bench_hyperedge_sweep,
+        bench_kernel_colscan,
+        bench_kernel_packed,
+        bench_lm_train_microstep,
+        bench_serve_decode,
+    ):
+        for row in fn():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end satellite ROI pipeline (the paper's deployment scenario).
+
+Tiles of a large MODIS-like scene flow through the data pipeline:
+  1. background prefetch of tile batches,
+  2. the paper's two-step yCHG operator on device (batched),
+  3. empty-tile filtering + anyres crop ranking for a VLM frontend.
+
+Run:  PYTHONPATH=src python examples/satellite_roi.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.data import modis
+from repro.data.pipeline import Prefetcher, anyres_select, filter_empty_tiles, ychg_stats
+
+
+def tile_stream(scene: np.ndarray, tile: int):
+    h, w = scene.shape
+    batch = []
+    for y in range(0, h - tile + 1, tile):
+        for x in range(0, w - tile + 1, tile):
+            batch.append(scene[y:y + tile, x:x + tile])
+            if len(batch) == 8:
+                yield np.stack(batch)
+                batch = []
+    if batch:
+        yield np.stack(batch)
+
+
+def main():
+    scene = modis.snowfield(1024, seed=11)
+    print(f"scene {scene.shape}, coverage {scene.mean():.1%}")
+
+    t0 = time.perf_counter()
+    n_tiles = n_kept = n_edges = 0
+    for batch in Prefetcher(tile_stream(scene, 128), depth=2):
+        stats = ychg_stats(batch)
+        kept = filter_empty_tiles(batch)
+        n_tiles += len(batch)
+        n_kept += len(kept)
+        n_edges += int(stats["n_hyperedges"].sum())
+    dt = time.perf_counter() - t0
+    print(f"processed {n_tiles} tiles in {dt:.2f}s "
+          f"({n_tiles / dt:.1f} tiles/s 1-core CPU); kept {n_kept}, "
+          f"total hyperedges {n_edges}")
+
+    # anyres: pick the 5 most structurally complex crops for the VLM frontend
+    offs = anyres_select(scene, tile=256, k=5)
+    print(f"anyres-selected crops (by yCHG hyperedge density): {offs}")
+
+
+if __name__ == "__main__":
+    main()

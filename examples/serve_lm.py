@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + decode with the fixed-slot engine.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import count_params, init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = get_config("qwen2-0.5b").scaled(
+        name="qwen2-serve-tiny", num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=2, head_dim=64, d_ff=1024, vocab_size=4096,
+        param_dtype="float32", activation_dtype="float32", remat="none",
+        attn_chunk=256,
+    )
+    print(f"serving {cfg.name}: {count_params(cfg) / 1e6:.1f}M params")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=192)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (8, 64)).astype(np.int32)
+
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new=64, temperature=0.8, seed=1)
+    dt = time.perf_counter() - t0
+    total = out.tokens.size
+    print(f"batch=8 prompt=64 generated {out.n_generated} steps "
+          f"({total} tokens) in {dt:.2f}s -> {total / dt:.1f} tok/s (1-core CPU)")
+    print("sample:", out.tokens[0, :16].tolist())
+
+    # greedy determinism check
+    a = eng.generate(prompts[:2], max_new=8)
+    b = eng.generate(prompts[:2], max_new=8)
+    assert np.array_equal(a.tokens, b.tokens)
+    print("greedy decode deterministic — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""yCHG-JAX: a multi-pod JAX framework built around the data-parallel
+yConvex Hypergraph algorithm (Jha, Agarwal, Kanna — ICS'13).
+
+Public surface:
+  repro.core       — the paper's contribution (column cut-vertex scan + transitions)
+  repro.kernels    — Pallas TPU kernels for the scan (+ jnp oracles)
+  repro.models     — assigned LM architectures (dense/GQA/MLA/MoE/SSM/RWKV/hybrid)
+  repro.configs    — one config per assigned architecture (+ the paper's workload)
+  repro.launch     — production mesh, multi-pod dry-run, train/serve drivers
+"""
+
+__version__ = "0.1.0"

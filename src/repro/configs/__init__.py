@@ -1,0 +1,27 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    LayerSpec,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    shapes_for,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "TRAIN_4K",
+    "LayerSpec",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "list_archs",
+    "shapes_for",
+]

@@ -1,0 +1,28 @@
+"""The paper's own workload: yCHG over MODIS-like scenes.
+
+Knobs mirror the poster's experiments: resolution series up to the
+21000x21000 scene (knob a) and hyperedge series 147 -> 4,124,319 (knob b).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class YCHGWorkloadConfig:
+    name: str = "ychg-modis"
+    resolutions: Tuple[int, ...] = (250, 500, 1000, 2000, 4000, 8000, 12000, 21000)
+    hyperedge_series: Tuple[int, ...] = (
+        147, 1_000, 10_000, 100_000, 1_000_000, 4_124_319
+    )
+    hyperedge_resolution: int = 8192   # fixed resolution for knob (b)
+    batch: int = 8                     # tiles per device batch in the pipeline
+    block_w: int = 128                 # Pallas lane tile
+    block_h: int = 2048                # streamed kernel row tile
+    backends: Tuple[str, ...] = ("scalar", "serial", "jax", "pallas")
+
+
+def config() -> YCHGWorkloadConfig:
+    return YCHGWorkloadConfig()

@@ -1,0 +1,36 @@
+"""The paper's contribution: data-parallel yConvex Hypergraph construction.
+
+Two-step structure, exactly as in the poster:
+  step 1  column_runs / cut_vertices  — per-column maximal-run (cut-vertex) counts
+  step 2  hyperedge_transitions       — neighbour-column diff -> births/deaths
+
+`ychg` is the pure-JAX production implementation (CPU/TPU, vmap-able).
+`serial` is the paper's CPU baseline (honest scalar loops).
+`regions` materialises the hyperedges (beyond-paper; the poster only counts).
+"""
+
+from repro.core.ychg import (
+    column_runs,
+    cut_vertices,
+    hyperedge_transitions,
+    hyperedge_count,
+    analyze,
+    analyze_jit,
+    check_conservation,
+    YCHGSummary,
+)
+from repro.core import serial
+from repro.core import regions
+
+__all__ = [
+    "column_runs",
+    "cut_vertices",
+    "hyperedge_transitions",
+    "hyperedge_count",
+    "analyze",
+    "analyze_jit",
+    "check_conservation",
+    "YCHGSummary",
+    "serial",
+    "regions",
+]

@@ -1,0 +1,43 @@
+"""High-level yCHG entry point with backend selection.
+
+Backends:
+  "jax"    — repro.core.ychg (pure jnp, jit; default; runs anywhere)
+  "pallas" — repro.kernels.ops (Pallas kernels; interpret off-TPU)
+  "serial" — repro.core.serial NumPy single-core (the paper's CPU baseline)
+  "scalar" — repro.core.serial per-pixel Python loops (the literal baseline;
+             only sensible for tiny images)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core import serial, ychg
+from repro.kernels import ops as kernel_ops
+
+BACKENDS = ("jax", "pallas", "serial", "scalar")
+
+
+def analyze_image(img: Any, backend: str = "jax") -> Dict[str, np.ndarray]:
+    """Run the paper's two-step algorithm; returns host NumPy values."""
+    if backend == "jax":
+        s = ychg.analyze_jit(img)
+        return {
+            "runs": np.asarray(s.runs),
+            "cut_vertices": np.asarray(s.cut_vertices),
+            "transitions": np.asarray(s.transitions),
+            "births": np.asarray(s.births),
+            "deaths": np.asarray(s.deaths),
+            "n_hyperedges": np.asarray(s.n_hyperedges),
+            "n_transitions": np.asarray(s.n_transitions),
+        }
+    if backend == "pallas":
+        out = kernel_ops.analyze(img)
+        return {k: np.asarray(v) for k, v in out.items()}
+    if backend == "serial":
+        return serial.analyze_numpy(np.asarray(img))
+    if backend == "scalar":
+        return serial.analyze_scalar(np.asarray(img))
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")

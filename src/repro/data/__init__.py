@@ -1,0 +1,3 @@
+from repro.data import modis, pipeline, synthetic
+
+__all__ = ["modis", "pipeline", "synthetic"]

@@ -1,0 +1,95 @@
+"""Host data pipeline: background prefetch + the yCHG preprocessing operator.
+
+The yCHG operator is where the paper's technique is a first-class framework
+feature: mask tiles flow through ``ychg_stats`` (two-step algorithm on
+device) and the resulting per-tile ROI statistics drive (a) filtering —
+empty tiles are dropped before they reach a model, and (b) anyres tile
+selection for the VLM frontend — tiles are ranked by hyperedge density
+(boundary complexity), which is a cheap O(HW) proxy for "interesting
+structure" that the llava-style frontend uses to pick which crops to encode.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core import ychg
+
+
+class Prefetcher:
+    """Runs an iterator in a background thread with a bounded queue.
+
+    Straggler note: on a real cluster the get() timeout is the per-step
+    data deadline; a timeout surfaces as StopIteration + a counter that the
+    training loop reports (see train/loop.py) rather than a hang.
+    """
+
+    def __init__(self, it: Iterator, depth: int = 2, timeout: float = 300.0):
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.timeout = timeout
+        self._done = object()
+        self.timeouts = 0
+
+        def run():
+            try:
+                for item in it:
+                    self.q.put(item)
+            finally:
+                self.q.put(self._done)
+
+        self.thread = threading.Thread(target=run, daemon=True)
+        self.thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            item = self.q.get(timeout=self.timeout)
+        except queue.Empty:
+            self.timeouts += 1
+            raise StopIteration
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+def ychg_stats(masks: np.ndarray) -> Dict[str, np.ndarray]:
+    """(B,H,W) uint8 -> per-tile ROI statistics via the two-step algorithm."""
+    s = ychg.analyze_jit(masks)
+    return {
+        "n_hyperedges": np.asarray(s.n_hyperedges),
+        "n_transitions": np.asarray(s.n_transitions),
+        "coverage": np.asarray(masks).mean(axis=(-1, -2)),
+    }
+
+
+def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1
+                       ) -> np.ndarray:
+    """Drop tiles whose ROI has no hyperedges (paper's step 1+2 as a filter)."""
+    stats = ychg_stats(masks)
+    keep = stats["n_hyperedges"] >= min_hyperedges
+    return masks[keep]
+
+
+def anyres_select(image: np.ndarray, tile: int, k: int) -> List[tuple]:
+    """llava-next anyres: split image into (tile x tile) crops, return the k
+    crop offsets with the highest yCHG hyperedge density (boundary-complexity
+    ranking). Returns [(y, x), ...]."""
+    h, w = image.shape
+    ys = range(0, h - tile + 1, tile)
+    xs = range(0, w - tile + 1, tile)
+    crops, offs = [], []
+    for y in ys:
+        for x in xs:
+            crops.append(image[y : y + tile, x : x + tile])
+            offs.append((y, x))
+    if not crops:
+        return [(0, 0)]
+    stats = ychg_stats(np.stack(crops))
+    order = np.argsort(-stats["n_hyperedges"])
+    return [offs[i] for i in order[:k]]

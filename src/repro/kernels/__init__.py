@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spot the paper optimizes:
+the yCHG column scan (step 1) and neighbour diff (step 2).
+
+  ychg_colscan.py  pl.pallas_call kernels + BlockSpec VMEM tiling
+  ops.py           jit'd wrappers (interpret=True off-TPU)
+  ref.py           pure-jnp oracles for the allclose sweeps
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

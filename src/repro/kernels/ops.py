@@ -1,0 +1,76 @@
+"""jit'd public wrappers for the yCHG Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
+mode executes the kernel body in Python for correctness validation). On a real
+TPU backend the same calls compile to Mosaic.
+
+The heuristic between the full-column and streamed step-1 kernels is a VMEM
+budget: a full (H, block_w) int8 tile plus boolean temporaries must fit
+comfortably in 16 MiB VMEM; past ~4 MiB for the raw tile we stream over H.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ychg_colscan as _k
+
+Array = jax.Array
+
+# raw int8 tile budget before switching to the streamed kernel (bytes)
+_FULL_COLUMN_VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def colscan_runs(
+    img: Array,
+    *,
+    block_w: int = 128,
+    block_h: int = 2048,
+    interpret: bool | None = None,
+) -> Array:
+    """Step 1: per-column maximal-run counts. (H, W) mask -> (W,) int32."""
+    if interpret is None:
+        interpret = _default_interpret()
+    h, _ = img.shape
+    if h * block_w > _FULL_COLUMN_VMEM_BUDGET:
+        return _k.colscan_runs_streamed(
+            img, block_w=block_w, block_h=block_h, interpret=interpret
+        )
+    return _k.colscan_runs_pallas(img, block_w=block_w, interpret=interpret)
+
+
+def transitions(
+    runs: Array, *, block_w: int = 128, interpret: bool | None = None
+) -> tuple[Array, Array, Array]:
+    """Step 2: (W,) run counts -> (transitions bool, births i32, deaths i32)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _k.transitions_pallas(runs, block_w=block_w, interpret=interpret)
+
+
+def analyze(
+    img: Array,
+    *,
+    block_w: int = 128,
+    block_h: int = 2048,
+    interpret: bool | None = None,
+) -> Dict[str, Array]:
+    """Both steps fused end-to-end on device; returns the poster's outputs."""
+    runs = colscan_runs(img, block_w=block_w, block_h=block_h, interpret=interpret)
+    trans, births, deaths = transitions(runs, block_w=block_w, interpret=interpret)
+    return {
+        "runs": runs,
+        "cut_vertices": 2 * runs,
+        "transitions": trans,
+        "births": births,
+        "deaths": deaths,
+        "n_hyperedges": jnp.sum(births, dtype=jnp.int32),
+        "n_transitions": jnp.sum(trans, dtype=jnp.int32),
+    }

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the yCHG Pallas kernels.
+
+These restate the kernel math with plain jnp ops; the kernel tests sweep
+shapes/dtypes and assert exact equality (integer outputs) against these.
+They intentionally do NOT share code with repro.core.ychg so that a bug in
+one implementation cannot hide in both (ychg.py is additionally cross-checked
+against core.serial).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def colscan_runs_ref(img: Array) -> Array:
+    """(H, W) mask -> (W,) int32 maximal-run counts per column."""
+    x = (img != 0).astype(jnp.int32)
+    # rising edges scanning down each column; row 0 compares against 0.
+    interior = jnp.clip(x[1:, :] - x[:-1, :], 0, 1)
+    return x[0, :] + jnp.sum(interior, axis=0, dtype=jnp.int32)
+
+
+def transitions_ref(runs: Array) -> tuple[Array, Array, Array]:
+    """(W,) int32 -> (transitions bool, births i32, deaths i32), runs[-1]:=0."""
+    prev = jnp.concatenate([jnp.zeros((1,), runs.dtype), runs[:-1]])
+    delta = (runs - prev).astype(jnp.int32)
+    return delta != 0, jnp.maximum(delta, 0), jnp.maximum(-delta, 0)
+
+
+def analyze_ref(img: Array) -> dict[str, Array]:
+    runs = colscan_runs_ref(img)
+    t, b, d = transitions_ref(runs)
+    return {
+        "runs": runs,
+        "transitions": t,
+        "births": b,
+        "deaths": d,
+        "n_hyperedges": jnp.sum(b, dtype=jnp.int32),
+    }

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+
+  single-pod: (16, 16)    axes ("data", "model")     = 256 chips (one v5e pod)
+  multi-pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+"model" maps to the TP/EP/SP group (intra-pod ICI ring), "data" to the DP/
+FSDP group, "pod" to pure DP across the DCN link between pods.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

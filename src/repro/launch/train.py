@@ -1,0 +1,75 @@
+"""CLI train driver: --arch <id> [--smoke] trains on this host's devices.
+
+Pod-scale runs use the same step builder with the production mesh (the
+multi-pod dry-run proves those lower+compile); on a real cluster this entry
+point is launched per host with jax.distributed.initialize.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --batch 8 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.archs import smoke_config
+from repro.data.synthetic import TokenDataset, TokenDatasetConfig
+from repro.models import count_params, init_params
+from repro.optim import adamw_init
+from repro.train import TrainLoop, TrainLoopConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"{cfg.name}: {count_params(cfg) / 1e6:.2f}M params "
+          f"({len(jax.devices())} devices)")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    ds = TokenDataset(TokenDatasetConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+    ))
+    step = jax.jit(make_train_step(
+        cfg, peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps, grad_accum=args.grad_accum,
+    ))
+    loop = TrainLoop(step, TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt, log_every=10,
+    ))
+    params, opt, start = loop.resume_or_init(params, opt)
+
+    def batches():
+        i = start
+        while True:
+            b = ds.batch(i)
+            out = {k: jnp.asarray(v) for k, v in b.items()}
+            if cfg.frontend != "none" and cfg.frontend_tokens:
+                out["frontend_embeds"] = jnp.zeros(
+                    (args.batch, cfg.frontend_tokens, cfg.d_model),
+                    jnp.dtype(cfg.activation_dtype),
+                )
+            yield out
+            i += 1
+
+    loop.run(params, opt, batches(), start_step=start)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Composable model zoo for the assigned architectures.
+
+Params are plain pytrees (nested dicts). Every leaf carries a parallel
+"logical axes" spec (see repro.sharding.logical) used to derive pjit
+shardings per mesh. Layer stacks are scanned over layer *groups* (the
+repeating pattern period), keeping HLO size O(period), not O(depth).
+"""
+
+from repro.models.model import (
+    init_params,
+    abstract_params,
+    param_logical_axes,
+    forward,
+    init_cache,
+    abstract_cache,
+    cache_logical_axes,
+    decode_step,
+    loss_fn,
+    count_params,
+    active_params,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "param_logical_axes",
+    "forward",
+    "init_cache",
+    "abstract_cache",
+    "cache_logical_axes",
+    "decode_step",
+    "loss_fn",
+    "count_params",
+    "active_params",
+]

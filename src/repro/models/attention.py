@@ -1,0 +1,301 @@
+"""Attention token mixers: GQA/MHA (qk_norm/bias options) and MLA.
+
+Train/prefill use a chunked, flash-style causal attention in pure jnp
+(numerically stable online softmax over kv chunks). The baseline computes the
+full block rectangle with a causal mask — a known ~2x FLOP overhead on the
+strictly-causal half that we track in the roofline's useful-compute ratio and
+attack in §Perf (the Pallas flash kernel with real block skipping is the TPU
+runtime path; the jnp path is what the dry-run lowers so cost_analysis sees
+honest XLA HLO).
+
+Decode attends one new token against the cache: GQA caches (k, v) per layer;
+MLA caches the *compressed* kv latent + shared rope key (its whole point) and
+uses the absorbed-matmul formulation (DeepSeek-V2 appendix) so no per-step
+re-expansion of the cache happens.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    Builder,
+    Sharder,
+    apply_norm,
+    apply_rope,
+    init_norm,
+    rmsnorm,
+    rope_angles,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def init_attn(b: Builder, cfg) -> dict:
+    d, h, g, k = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": b.make((d, h, k), ("embed", "heads", "head")),
+        "wk": b.make((d, g, k), ("embed", "kv_heads", "head")),
+        "wv": b.make((d, g, k), ("embed", "kv_heads", "head")),
+        "wo": b.make((h, k, d), ("heads", "head", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.make((h, k), ("heads", "head"), init="zeros")
+        p["bk"] = b.make((g, k), ("kv_heads", "head"), init="zeros")
+        p["bv"] = b.make((g, k), ("kv_heads", "head"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b.make((k,), (None,), init="ones")
+        p["k_norm"] = b.make((k,), (None,), init="ones")
+    return p
+
+
+def init_mla(b: Builder, cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_down": b.make((d, rq), ("embed", "q_lora")),
+        "q_norm": b.make((rq,), (None,), init="ones"),
+        "wq_up": b.make((rq, h, dn + dr), ("q_lora", "heads", "head")),
+        "wkv_down": b.make((d, rkv), ("embed", "kv_lora")),
+        "kv_norm": b.make((rkv,), (None,), init="ones"),
+        "wk_rope": b.make((d, dr), ("embed", "head")),
+        "wk_up": b.make((rkv, h, dn), ("kv_lora", "heads", "head")),
+        "wv_up": b.make((rkv, h, dv), ("kv_lora", "heads", "head")),
+        "wo": b.make((h, dv, d), ("heads", "head", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention core (train / prefill)
+
+
+def _chunked_attention(q: Array, k: Array, v: Array, chunk: int, shd: Sharder) -> Array:
+    """q: (B,S,H,K), k/v: (B,S,H,K) (kv already head-expanded). Causal.
+
+    Online-softmax over kv chunks, scanned over q chunks. Baseline computes
+    every (q-chunk, kv-chunk) pair and masks — see module docstring.
+    """
+    b_, s, h, d = q.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    t = s // c
+    scale = d**-0.5
+    qc = q.reshape(b_, t, c, h, d)
+    kc = k.reshape(b_, t, c, h, d).transpose(1, 0, 2, 3, 4)  # (t,B,c,H,K)
+    vc = v.reshape(b_, t, c, h, d).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi, q_blk):
+        # q_blk: (B,c,H,K); online softmax over kv chunks
+        m0 = jnp.full((b_, h, c), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b_, h, c), jnp.float32)
+        o0 = jnp.zeros((b_, h, c, d), jnp.float32)
+
+        def kv_block(carry, inp):
+            m, l, o = carry
+            kj, k_blk, v_blk = inp
+            s_ = jnp.einsum(
+                "bqhd,bkhd->bhqk", q_blk, k_blk, preferred_element_type=jnp.float32
+            ) * scale
+            # causal mask at chunk granularity + within the diagonal chunk
+            qpos = qi * c + jnp.arange(c)[:, None]
+            kpos = kj * c + jnp.arange(c)[None, :]
+            s_ = jnp.where(qpos >= kpos, s_, -jnp.inf)
+            m_new = jnp.maximum(m, s_.max(-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, v_blk, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0), (jnp.arange(t), kc, vc)
+        )
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return o.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,c,H,K)
+
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(t), qc.transpose(1, 0, 2, 3, 4)))
+    # out: (t, B, c, H, K) -> (B, S, H, K)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b_, s, h, d)
+
+
+def _full_attention(q: Array, k: Array, v: Array) -> Array:
+    """Reference full-matrix causal attention (small S; used by tests)."""
+    b_, s, h, d = q.shape
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s_ = s_ * (d**-0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    s_ = jnp.where(mask, s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v, preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
+def _expand_kv(x: Array, num_heads: int) -> Array:
+    """(B,S,G,K) -> (B,S,H,K) by repeating each kv head H//G times."""
+    b_, s, g, k = x.shape
+    rep = num_heads // g
+    if rep == 1:
+        return x
+    return jnp.repeat(x, rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# GQA apply
+
+
+def attn_forward(p: dict, x: Array, cfg, shd: Sharder, positions: Array,
+                 use_chunked: bool = True) -> tuple[Array, dict]:
+    """Train/prefill path. Returns (output, cache_entries)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shd(q, ("act_batch", "act_seq", "act_heads", None))
+    k = shd(k, ("act_batch", "act_seq", "act_kv_heads", None))
+    v = shd(v, ("act_batch", "act_seq", "act_kv_heads", None))
+    cache = {"k": k, "v": v}
+    kx, vx = _expand_kv(k, cfg.num_heads), _expand_kv(v, cfg.num_heads)
+    s_len = x.shape[1]
+    if use_chunked and s_len > cfg.attn_chunk and s_len % cfg.attn_chunk == 0:
+        o = _chunked_attention(q, kx, vx, cfg.attn_chunk, shd)
+    else:
+        o = _full_attention(q, kx, vx)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shd(out, ("act_batch", "act_seq", "act_embed")), cache
+
+
+def attn_decode(p: dict, x: Array, cfg, shd: Sharder, cache: dict, cur_index: Array
+                ) -> tuple[Array, dict]:
+    """x: (B,1,D) new token; cache: k/v (B,Smax,G,K). Returns (out, cache')."""
+    b_, _, _ = x.shape
+    g, h, kd = cfg.num_kv_heads, cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        pos = jnp.full((b_, 1), cur_index, jnp.int32)
+        cos, sin = rope_angles(pos, kd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cur_index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cur_index, axis=1)
+    ck = shd(ck, ("act_batch", "act_kv_seq", "act_kv_heads", None))
+    cv = shd(cv, ("act_batch", "act_kv_seq", "act_kv_heads", None))
+    rep = h // g
+    qg = q.reshape(b_, g, rep, kd)
+    s_ = jnp.einsum("bgrk,bsgk->bgrs", qg, ck, preferred_element_type=jnp.float32)
+    s_ = s_ * (kd**-0.5)
+    smax = ck.shape[1]
+    valid = jnp.arange(smax)[None, None, None, :] <= cur_index
+    s_ = jnp.where(valid, s_, -jnp.inf)
+    w = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bgrs,bsgk->bgrk", w, cv, preferred_element_type=jnp.float32)
+    o = o.reshape(b_, 1, h, kd).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA apply
+
+
+def _mla_qkv(p: dict, x: Array, cfg, positions: Array):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_down"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_up"])  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wkv_down"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wk_rope"])  # shared across heads
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p: dict, x: Array, cfg, shd: Sharder, positions: Array,
+                use_chunked: bool = True) -> tuple[Array, dict]:
+    """Train/prefill MLA with explicit (uncompressed) attention math."""
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_up"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_up"])
+    h = cfg.num_heads
+    k_rope_h = jnp.broadcast_to(k_rope[..., None, :], (*k_rope.shape[:2], h, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q = shd(q, ("act_batch", "act_seq", "act_heads", None))
+    k = shd(k, ("act_batch", "act_seq", "act_heads", None))
+    # v head dim may differ from qk dim; pad v to qk width for the shared core
+    dqk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    dv = cfg.v_head_dim
+    s_len = x.shape[1]
+    if use_chunked and s_len > cfg.attn_chunk and s_len % cfg.attn_chunk == 0:
+        vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dqk - dv))) if dqk > dv else v
+        o = _chunked_attention(q, k, vpad, cfg.attn_chunk, shd)[..., :dv]
+    else:
+        s_ = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+        s_ = s_ * (dqk**-0.5)
+        s = x.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        w = jax.nn.softmax(jnp.where(mask, s_, -jnp.inf), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", w, v, preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    cache = {"ckv": ckv, "k_rope": k_rope}
+    return shd(out, ("act_batch", "act_seq", "act_embed")), cache
+
+
+def mla_decode(p: dict, x: Array, cfg, shd: Sharder, cache: dict, cur_index: Array
+               ) -> tuple[Array, dict]:
+    """Absorbed-matmul MLA decode against the compressed cache.
+
+    score(q, t) = q_nope^T (W_uk c_t) + q_rope^T k_rope_t
+                = (W_uk^T q_nope)^T c_t + q_rope^T k_rope_t
+    out_head    = W_uv^T (sum_t w_t c_t)
+    so the cache stays compressed: (B, S, r_kv) + (B, S, dr).
+    """
+    b_ = x.shape[0]
+    pos = jnp.full((b_, 1), cur_index, jnp.int32)
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qkv(p, x, cfg, pos)
+    c = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cur_index, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), cur_index, axis=1)
+    c = shd(c, ("act_batch", "act_kv_seq", None))
+    kr = shd(kr, ("act_batch", "act_kv_seq", None))
+    # absorb W_uk into q:  (B,1,H,dn) x (r,h,dn) -> (B,H,r)
+    q_c = jnp.einsum("bshk,rhk->bhr", q_nope, p["wk_up"])
+    s_c = jnp.einsum("bhr,bsr->bhs", q_c, c, preferred_element_type=jnp.float32)
+    s_r = jnp.einsum("bshk,btk->bht", q_rope, kr, preferred_element_type=jnp.float32)
+    dqk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    s_ = (s_c + s_r) * (dqk**-0.5)
+    smax = c.shape[1]
+    valid = jnp.arange(smax)[None, None, :] <= cur_index
+    w = jax.nn.softmax(jnp.where(valid, s_, -jnp.inf), axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", w, c, preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhr,rhv->bhv", o_c.astype(x.dtype), p["wv_up"])
+    out = jnp.einsum("bhv,hvd->bd", o, p["wo"])[:, None, :]
+    return out, {"ckv": c, "k_rope": kr}

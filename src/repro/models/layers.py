@@ -1,0 +1,178 @@
+"""Shared building blocks: param builder, norms, rope, embeddings, sharder.
+
+Param convention: init functions return nested dicts whose leaves are
+``P(value, axes)``; ``split_tree`` separates them into a value tree and a
+logical-axes tree of identical structure. ``Builder`` works in concrete mode
+(real rng init) or abstract mode (ShapeDtypeStruct leaves — used by the
+dry-run so no host RAM is ever allocated for 400B-param models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class P:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_tree(tree):
+    """P-leaf tree -> (value tree, logical-axes tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_p)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_p)
+    return values, axes
+
+
+class Builder:
+    """Creates parameters (concrete or abstract) with logical axes attached."""
+
+    def __init__(self, key, dtype: str, abstract: bool = False):
+        self.key = key
+        self.dtype = jnp.dtype(dtype)
+        self.abstract = abstract
+
+    def make(self, shape, axes, init: str = "fan_in", scale: float | None = None) -> P:
+        assert len(shape) == len(axes), (shape, axes)
+        if self.abstract:
+            return P(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        self.key, sub = jax.random.split(self.key)
+        if init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            v = (scale if scale is not None else 0.02) * jax.random.normal(
+                sub, shape, self.dtype
+            )
+        elif init == "fan_in":
+            # fan-in = product of all dims but the last
+            fan_in = max(1, int(np.prod(shape[:-1])))
+            v = jax.random.normal(sub, shape, self.dtype) / np.sqrt(fan_in)
+        else:
+            raise ValueError(init)
+        return P(v, tuple(axes))
+
+
+# ---------------------------------------------------------------------------
+# sharding hook
+
+
+class Sharder:
+    """Applies with_sharding_constraint from logical activation axes.
+
+    A no-op unless constructed with (mesh, rules); the model code calls
+    ``shd(x, ("act_batch", "act_seq", "act_embed"))`` everywhere it matters
+    and stays mesh-agnostic.
+    """
+
+    def __init__(self, mesh=None, rules=None):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __call__(self, x: Array, axes: Tuple[Optional[str], ...]) -> Array:
+        if self.mesh is None or self.rules is None:
+            return x
+        from repro.sharding.logical import spec_for  # local import, no cycle
+
+        spec = spec_for(axes, self.rules, self.mesh, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec)
+        )
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rmsnorm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale + (
+        bias if bias is not None else 0
+    )
+
+
+def init_norm(b: Builder, d: int, norm_type: str) -> dict:
+    out = {"scale": b.make((d,), (None,), init="ones")}
+    if norm_type == "layernorm":
+        out["bias"] = b.make((d,), (None,), init="zeros")
+    return out
+
+
+def apply_norm(p: dict, x: Array, norm_type: str, eps: float) -> Array:
+    if norm_type == "layernorm":
+        return layernorm(x, p["scale"], p.get("bias"), eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+def groupnorm_heads(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    """Per-head groupnorm over the last dim; x: (..., H, K)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# position embeddings
+
+
+def rope_angles(positions: Array, dim: int, theta: float) -> tuple[Array, Array]:
+    """positions: (...,) int -> cos/sin of shape (..., dim//2)."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )  # (dim/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., S, H, K); cos/sin: (..., S, K//2) -> rotate-half rope."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def sinusoidal_pos(positions: Array, d_model: int) -> Array:
+    """(...,) int -> (..., d_model) fixed sinusoidal table (musicgen-style)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (np.log(10000.0) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def act_fn(name: str, x: Array) -> Array:
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(name)

@@ -1,0 +1,37 @@
+"""Channel mixers: dense MLP (swiglu / gelu) and the RWKV channel-mix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Builder, Sharder, act_fn
+
+Array = jax.Array
+
+
+def init_mlp(b: Builder, cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        return {
+            "w_gate": b.make((d, f), ("embed", "mlp")),
+            "w_up": b.make((d, f), ("embed", "mlp")),
+            "w_down": b.make((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": b.make((d, f), ("embed", "mlp")),
+        "b_up": b.make((f,), ("mlp",), init="zeros"),
+        "w_down": b.make((f, d), ("mlp", "embed")),
+        "b_down": b.make((d,), ("embed",), init="zeros"),
+    }
+
+
+def mlp_apply(p: dict, x: Array, cfg, shd: Sharder) -> Array:
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = shd(h, ("act_batch", "act_seq", "act_mlp"))
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    h = act_fn("gelu", jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"])
+    h = shd(h, ("act_batch", "act_seq", "act_mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]) + p["b_down"]

@@ -1,0 +1,450 @@
+"""Config-driven LM assembly.
+
+Layer stack = ``lax.scan`` over layer *groups* (one group = one period of
+``cfg.layer_pattern``), so HLO is O(period) in depth: every leaf of
+``params["layers"]["p<k>"]`` carries a leading ``num_groups`` axis (logical
+axis "layers", never sharded). Remat wraps the group body per ``cfg.remat``.
+
+Three entry points per model:
+  forward(...)                train / prefill (optionally returns the cache)
+  decode_step(...)            one new token against the cache (serve_step)
+  loss_fn(...)                next-token CE + MoE aux loss
+
+Param/cache trees exist in concrete form (rng init — used on CPU for the
+small-scale examples/tests) and abstract form (ShapeDtypeStruct — used by the
+multi-pod dry-run; a 400B-param tree costs nothing to "init").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Builder,
+    P,
+    Sharder,
+    apply_norm,
+    init_norm,
+    sinusoidal_pos,
+    split_tree,
+)
+from repro.models.mlp import init_mlp, mlp_apply
+
+Array = jax.Array
+
+
+class _Stacked:
+    """Builder proxy that prepends the (num_groups,) 'layers' axis."""
+
+    def __init__(self, b: Builder, g: int):
+        self.b = b
+        self.g = g
+
+    def make(self, shape, axes, **kw) -> P:
+        return self.b.make((self.g, *shape), ("layers", *axes), **kw)
+
+
+def _init_mixer(b, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    if spec.mixer == "attn":
+        return attn.init_attn(b, cfg)
+    if spec.mixer == "mla":
+        return attn.init_mla(b, cfg)
+    if spec.mixer == "mamba":
+        return ssm_mod.init_mamba(b, cfg)
+    if spec.mixer == "rwkv":
+        return rwkv_mod.init_rwkv_time(b, cfg)
+    raise ValueError(spec.mixer)
+
+
+def _init_channel(b, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    if spec.channel == "mlp":
+        return init_mlp(b, cfg)
+    if spec.channel == "moe":
+        return moe_mod.init_moe(b, cfg)
+    if spec.channel == "rwkv_ffn":
+        return rwkv_mod.init_rwkv_channel(b, cfg)
+    raise ValueError(spec.channel)
+
+
+def _build(cfg: ModelConfig, key, abstract: bool):
+    b = Builder(key, cfg.param_dtype, abstract=abstract)
+    sb = _Stacked(b, cfg.num_groups)
+    layers: Dict[str, Any] = {}
+    for k, spec in enumerate(cfg.layer_pattern):
+        entry = {
+            "norm1": init_norm(sb, cfg.d_model, cfg.norm_type),
+            "mixer": _init_mixer(sb, cfg, spec),
+            "channel": _init_channel(sb, cfg, spec),
+        }
+        if not cfg.parallel_block:
+            entry["norm2"] = init_norm(sb, cfg.d_model, cfg.norm_type)
+        layers[f"p{k}"] = entry
+    tree = {
+        "embed": b.make((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        init="normal", scale=0.02),
+        "final_norm": init_norm(b, cfg.d_model, cfg.norm_type),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = b.make((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return tree
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    params, _ = split_tree(_build(cfg, key, abstract=False))
+    if cfg.weight_quant == "int8":
+        from repro.models import quant
+
+        q, s = quant.quantize_layers(params["layers"])
+        params["layers"], params["layers_scale"] = q, s
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    params, _ = split_tree(_build(cfg, None, abstract=True))
+    if cfg.weight_quant == "int8":
+        from repro.models import quant
+
+        q, s = quant.abstract_quantized_layers(params["layers"])
+        params["layers"], params["layers_scale"] = q, s
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig) -> Any:
+    _, axes = split_tree(_build(cfg, None, abstract=True))
+    if cfg.weight_quant == "int8":
+        from repro.models import quant
+
+        axes["layers_scale"] = quant.scale_logical_axes(axes["layers"])
+    return axes
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(
+        int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params(cfg))
+    )
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: routed experts_per_token of num_experts)."""
+    total = 0
+    for leaf_path, leaf in jax.tree_util.tree_leaves_with_path(abstract_params(cfg)):
+        n = int(np.prod(leaf.shape))
+        path = jax.tree_util.keystr(leaf_path)
+        if (
+            "'channel'" in path
+            and cfg.num_experts
+            and any(w in path for w in ("'w_gate'", "'w_up'", "'w_down'"))
+            and "'shared'" not in path
+        ):
+            n = n * cfg.experts_per_token // cfg.num_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# block application
+
+
+def _apply_mixer(spec, p, x, cfg, shd, positions):
+    if spec.mixer == "attn":
+        return attn.attn_forward(p, x, cfg, shd, positions)
+    if spec.mixer == "mla":
+        return attn.mla_forward(p, x, cfg, shd, positions)
+    if spec.mixer == "mamba":
+        return ssm_mod.mamba_forward(p, x, cfg, shd)
+    if spec.mixer == "rwkv":
+        return rwkv_mod.rwkv_time_forward(p, x, cfg, shd)
+    raise ValueError(spec.mixer)
+
+
+def _apply_channel(spec, p, x, cfg, shd):
+    """Returns (y, aux_loss, state)."""
+    if spec.channel == "mlp":
+        return mlp_apply(p, x, cfg, shd), 0.0, None
+    if spec.channel == "moe":
+        y, aux = moe_mod.moe_apply(p, x, cfg, shd)
+        return y, aux, None
+    if spec.channel == "rwkv_ffn":
+        y, st = rwkv_mod.rwkv_channel_forward(p, x, cfg, shd)
+        return y, 0.0, st
+    raise ValueError(spec.channel)
+
+
+def _group_body(cfg: ModelConfig, shd: Sharder, positions, collect_cache: bool,
+                carry, group_params):
+    x, aux = carry
+    caches = {}
+    for k, spec in enumerate(cfg.layer_pattern):
+        gp = group_params[f"p{k}"]
+        h = apply_norm(gp["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        mix_out, mix_cache = _apply_mixer(spec, gp["mixer"], h, cfg, shd, positions)
+        if cfg.parallel_block:
+            ch_out, a, ch_state = _apply_channel(spec, gp["channel"], h, cfg, shd)
+            x = x + mix_out + ch_out
+        else:
+            x = x + mix_out
+            h2 = apply_norm(gp["norm2"], x, cfg.norm_type, cfg.norm_eps)
+            ch_out, a, ch_state = _apply_channel(spec, gp["channel"], h2, cfg, shd)
+            x = x + ch_out
+        x = shd(x, ("act_batch", "act_seq", "act_embed"))
+        aux = aux + a
+        if collect_cache:
+            caches[f"p{k}"] = {"mixer": mix_cache, "channel": ch_state}
+    return (x, aux), caches if collect_cache else None
+
+
+def forward(
+    params: Any,
+    cfg: ModelConfig,
+    tokens: Array,
+    shd: Optional[Sharder] = None,
+    frontend_embeds: Optional[Array] = None,
+    return_cache: bool = False,
+) -> Tuple[Array, Array, Any]:
+    """tokens: (B,S) int32 -> (logits (B,S,V), aux_loss, cache|None)."""
+    shd = shd or Sharder()
+    b_, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if frontend_embeds is not None and cfg.frontend != "none":
+        f = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, f:, :]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b_, s))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)
+    x = shd(x, ("act_batch", "act_seq", "act_embed"))
+
+    body = functools.partial(_group_body, cfg, shd, positions, return_cache)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    carry = (x, jnp.float32(0.0))
+    if cfg.scan_layers:
+        (x, aux), caches = jax.lax.scan(body, carry, params["layers"])
+    else:  # unrolled (cost probes / tiny models): same math, straight-line HLO
+        cache_list = []
+        for i in range(cfg.num_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            carry, c = body(carry, gp)
+            cache_list.append(c)
+        (x, aux) = carry
+        caches = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cache_list)
+            if return_cache else None
+        )
+
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    logits = shd(logits, ("act_batch", "act_seq", "act_vocab"))
+    return logits, aux, caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+
+
+def _decode_group_body(cfg, shd, cur_index, carry, xs):
+    x = carry
+    group_params, cache = xs
+    new_caches = {}
+    for k, spec in enumerate(cfg.layer_pattern):
+        gp = group_params[f"p{k}"]
+        c = cache[f"p{k}"]
+        h = apply_norm(gp["norm1"], x, cfg.norm_type, cfg.norm_eps)
+        if spec.mixer == "attn":
+            mix_out, mc = attn.attn_decode(gp["mixer"], h, cfg, shd, c["mixer"], cur_index)
+        elif spec.mixer == "mla":
+            mix_out, mc = attn.mla_decode(gp["mixer"], h, cfg, shd, c["mixer"], cur_index)
+        elif spec.mixer == "mamba":
+            mix_out, mc = ssm_mod.mamba_decode(gp["mixer"], h, cfg, shd, c["mixer"])
+        elif spec.mixer == "rwkv":
+            mix_out, mc = rwkv_mod.rwkv_time_decode(gp["mixer"], h, cfg, shd, c["mixer"])
+        else:
+            raise ValueError(spec.mixer)
+        if cfg.parallel_block:
+            ch_out, _, cc = _decode_channel(spec, gp["channel"], h, cfg, shd, c["channel"])
+            x = x + mix_out + ch_out
+        else:
+            x = x + mix_out
+            h2 = apply_norm(gp["norm2"], x, cfg.norm_type, cfg.norm_eps)
+            ch_out, _, cc = _decode_channel(spec, gp["channel"], h2, cfg, shd, c["channel"])
+            x = x + ch_out
+        new_caches[f"p{k}"] = {"mixer": mc, "channel": cc}
+    return x, new_caches
+
+
+def _decode_channel(spec, p, x, cfg, shd, state):
+    if spec.channel == "mlp":
+        return mlp_apply(p, x, cfg, shd), 0.0, None
+    if spec.channel == "moe":
+        y, aux = moe_mod.moe_apply(p, x, cfg, shd)
+        return y, aux, None
+    if spec.channel == "rwkv_ffn":
+        y, st = rwkv_mod.rwkv_channel_decode(p, x, cfg, shd, state)
+        return y, 0.0, st
+    raise ValueError(spec.channel)
+
+
+def decode_step(
+    params: Any,
+    cfg: ModelConfig,
+    cache: Any,
+    tokens: Array,
+    cur_index: Array,
+    shd: Optional[Sharder] = None,
+) -> Tuple[Array, Any]:
+    """tokens: (B,1) -> (logits (B,V), new cache). cur_index: scalar int32."""
+    shd = shd or Sharder()
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.pos_embed == "sinusoidal":
+        pos = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
+        x = x + sinusoidal_pos(pos, cfg.d_model).astype(x.dtype)
+    x = shd(x, ("act_batch", None, "act_embed"))
+    inner = functools.partial(_decode_group_body, cfg, shd, cur_index)
+    if cfg.weight_quant == "int8":
+        from repro.models import quant
+
+        def body(carry, xs):
+            gp_q, gp_s, c = xs
+            gp = quant.dequantize_group(gp_q, gp_s, cfg.activation_dtype)
+            return inner(carry, (gp, c))
+
+        xs_all = (params["layers"], params["layers_scale"], cache)
+    else:
+        def body(carry, xs):
+            return inner(carry, xs)
+
+        xs_all = (params["layers"], cache)
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(body, x, xs_all)
+    else:
+        entries = []
+        for i in range(cfg.num_groups):
+            xs = jax.tree_util.tree_map(lambda a: a[i], xs_all)
+            x, c = body(x, xs)
+            entries.append(c)
+        new_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *entries)
+    x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+
+def _cache_entry(cfg: ModelConfig, spec: LayerSpec, batch: int, seq: int,
+                 abstract: bool):
+    dt = jnp.dtype(cfg.activation_dtype)
+
+    def mk(shape, dtype, axes):
+        if abstract:
+            return P(jax.ShapeDtypeStruct(shape, dtype), axes)
+        return P(jnp.zeros(shape, dtype), axes)
+
+    g = cfg.num_groups
+    if spec.mixer == "attn":
+        kv = (g, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+        ax = ("layers", "act_batch", "act_kv_seq", "act_kv_heads", None)
+        mixer = {"k": mk(kv, dt, ax), "v": mk(kv, dt, ax)}
+    elif spec.mixer == "mla":
+        mixer = {
+            "ckv": mk((g, batch, seq, cfg.kv_lora_rank), dt,
+                      ("layers", "act_batch", "act_kv_seq", None)),
+            "k_rope": mk((g, batch, seq, cfg.qk_rope_dim), dt,
+                         ("layers", "act_batch", "act_kv_seq", None)),
+        }
+    elif spec.mixer == "mamba":
+        di = ssm_mod.d_inner_of(cfg)
+        mixer = {
+            "h": mk((g, batch, di, cfg.ssm_state_dim), jnp.float32,
+                    ("layers", "act_batch", "act_mlp", None)),
+            "conv": mk((g, batch, cfg.ssm_conv_dim - 1, di), dt,
+                       ("layers", "act_batch", None, "act_mlp")),
+        }
+    elif spec.mixer == "rwkv":
+        h = rwkv_mod.num_heads_of(cfg)
+        k = cfg.rwkv_head_dim
+        mixer = {
+            "wkv": mk((g, batch, h, k, k), jnp.float32,
+                      ("layers", "act_batch", "act_heads", None, None)),
+            "shift": mk((g, batch, cfg.d_model), dt,
+                        ("layers", "act_batch", "act_embed")),
+        }
+    else:
+        raise ValueError(spec.mixer)
+    channel = None
+    if spec.channel == "rwkv_ffn":
+        channel = {"shift": mk((g, batch, cfg.d_model), dt,
+                               ("layers", "act_batch", "act_embed"))}
+    return {"mixer": mixer, "channel": channel}
+
+
+def _cache_tree(cfg: ModelConfig, batch: int, seq: int, abstract: bool):
+    return {
+        f"p{k}": _cache_entry(cfg, spec, batch, seq, abstract)
+        for k, spec in enumerate(cfg.layer_pattern)
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    cache, _ = split_tree(_cache_tree(cfg, batch, seq, abstract=False))
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Any:
+    cache, _ = split_tree(_cache_tree(cfg, batch, seq, abstract=True))
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int = 1, seq: int = 8) -> Any:
+    _, axes = split_tree(_cache_tree(cfg, batch, seq, abstract=True))
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# loss
+
+
+def loss_fn(
+    params: Any,
+    cfg: ModelConfig,
+    tokens: Array,
+    labels: Array,
+    shd: Optional[Sharder] = None,
+    frontend_embeds: Optional[Array] = None,
+    loss_mask: Optional[Array] = None,
+    aux_coeff: float = 0.01,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token CE (f32) + MoE aux. labels: (B,S) int32, -1 = ignore."""
+    logits, aux, _ = forward(params, cfg, tokens, shd, frontend_embeds)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    if loss_mask is not None:
+        valid = valid & (loss_mask != 0)
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    ce = jnp.where(valid, nll, 0.0).sum() / denom
+    loss = ce + aux_coeff * aux
+    return loss, {"ce": ce, "aux": aux, "ntokens": denom}

@@ -1,0 +1,201 @@
+"""RWKV-6 "Finch" blocks: time-mix (data-dependent decay linear attention)
+and channel-mix. Attention-free: the recurrent state (B, H, K, V) replaces a
+KV cache, so long_500k decode is O(1) in sequence length.
+
+Recurrence per head (K = V = head dim):
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), data-dependent)
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Token-shift uses the data-dependent linear interpolation (ddlerp) of RWKV-6
+with low-rank adapters. The sequence dimension is processed by a chunked
+lax.scan (checkpointed body; within-chunk steps unrolled by a tiny inner
+scan) — same chunking scheme as ssm.py, adapted for the matrix-valued state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Builder, Sharder, groupnorm_heads
+
+Array = jax.Array
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def num_heads_of(cfg) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv_time(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    lr = cfg.rwkv_mix_lora
+    dr = cfg.rwkv_decay_lora
+    h = num_heads_of(cfg)
+    k = cfg.rwkv_head_dim
+    p = {
+        "mu_x": b.make((d,), (None,), init="zeros"),
+        "mix_w1": b.make((d, len(_MIX_NAMES) * lr), ("embed", None)),
+        "mix_w2": b.make((len(_MIX_NAMES), lr, d), (None, None, "embed"),
+                         init="normal", scale=0.01),
+        "mu": b.make((len(_MIX_NAMES), d), (None, None), init="zeros"),
+        "w_r": b.make((d, d), ("embed", "heads_flat")),
+        "w_k": b.make((d, d), ("embed", "heads_flat")),
+        "w_v": b.make((d, d), ("embed", "heads_flat")),
+        "w_g": b.make((d, d), ("embed", "heads_flat")),
+        "w_o": b.make((d, d), ("heads_flat", "embed")),
+        "decay_base": b.make((d,), (None,), init="zeros"),
+        "decay_w1": b.make((d, dr), ("embed", None)),
+        "decay_w2": b.make((dr, d), (None, "embed"), init="normal", scale=0.01),
+        "bonus_u": b.make((h, k), ("heads", None), init="zeros"),
+        "ln_scale": b.make((h, k), ("heads", None), init="ones"),
+        "ln_bias": b.make((h, k), ("heads", None), init="zeros"),
+    }
+    return p
+
+
+def init_rwkv_channel(b: Builder, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": b.make((d,), (None,), init="zeros"),
+        "mu_r": b.make((d,), (None,), init="zeros"),
+        "w_k": b.make((d, f), ("embed", "mlp")),
+        "w_v": b.make((f, d), ("mlp", "embed")),
+        "w_r": b.make((d, d), ("embed", "embed_out")),
+    }
+
+
+def _ddlerp(p: dict, x: Array, sx: Array) -> list[Array]:
+    """Data-dependent token-shift interpolation -> one mixed x per quantity."""
+    xx = x + sx * p["mu_x"]
+    z = jnp.tanh(jnp.einsum("bsd,dr->bsr", xx, p["mix_w1"]))
+    z = z.reshape(*z.shape[:-1], len(_MIX_NAMES), -1)  # (B,S,5,lr)
+    adj = jnp.einsum("bsnr,nrd->bnsd", z, p["mix_w2"])  # (B,5,S,d)
+    outs = []
+    for i in range(len(_MIX_NAMES)):
+        mix = p["mu"][i] + adj[:, i]
+        outs.append(x + sx * mix)
+    return outs
+
+
+def _time_mix_scan(r: Array, k: Array, v: Array, w: Array, u: Array,
+                   s0: Array, chunk: int) -> Tuple[Array, Array]:
+    """r/k/v/w: (B,S,H,K); u: (H,K); s0: (B,H,K,V). Returns (out (B,S,H,K), s_last)."""
+    b_, s, h, kd = r.shape
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        # identity updates: w=1 (no decay), k=0 -> state and out[:s] unaffected
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    sp = s + pad
+    t = sp // c
+
+    def chunk_fn(state, xs):
+        rc, kc, vc, wc = xs  # (B,c,H,K)
+
+        def step(st, ts):
+            rt, kt, vt, wt = ts  # (B,H,K)
+            kv = kt[..., :, None] * vt[..., None, :]  # (B,H,K,V)
+            out = jnp.einsum("bhk,bhkv->bhv", rt, st + u[..., None] * kv)
+            st = wt[..., None] * st + kv
+            return st, out
+
+        st, outs = jax.lax.scan(
+            step, state,
+            (rc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1), wc.swapaxes(0, 1)),
+        )
+        return st, outs.swapaxes(0, 1)  # (B,c,H,K)
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    xs = tuple(
+        a.reshape(b_, t, c, h, kd).swapaxes(0, 1) for a in (r, k, v, w)
+    )
+    s_last, out_t = jax.lax.scan(chunk_fn, s0, xs)
+    return out_t.swapaxes(0, 1).reshape(b_, sp, h, kd)[:, :s], s_last
+
+
+def rwkv_time_forward(p: dict, x: Array, cfg, shd: Sharder,
+                      state: dict | None = None) -> Tuple[Array, dict]:
+    """Train/prefill time-mix. x: (B,S,D)."""
+    b_, s, d = x.shape
+    h, kd = num_heads_of(cfg), cfg.rwkv_head_dim
+    prev = state["shift"][:, None, :] if state else jnp.zeros((b_, 1, d), x.dtype)
+    x_prev = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    sx = x_prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(b_, s, h, kd)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(b_, s, h, kd)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(b_, s, h, kd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))
+    dec = p["decay_base"] + jnp.einsum(
+        "bsd,dr,re->bse", xw, p["decay_w1"], p["decay_w2"]
+    )
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(b_, s, h, kd)
+    r = shd(r, ("act_batch", "act_seq", "act_heads", None))
+    k = shd(k, ("act_batch", "act_seq", "act_heads", None))
+    s0 = state["wkv"] if state else jnp.zeros((b_, h, kd, kd), jnp.float32)
+    out, s_last = _time_mix_scan(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["bonus_u"].astype(jnp.float32), s0, cfg.ssm_chunk,
+    )
+    out = groupnorm_heads(out, p["ln_scale"], p["ln_bias"], cfg.norm_eps)
+    out = out.reshape(b_, s, d).astype(x.dtype) * g
+    y = jnp.einsum("bse,ed->bsd", out, p["w_o"])
+    new_state = {"wkv": s_last, "shift": x[:, -1, :]}
+    return shd(y, ("act_batch", "act_seq", "act_embed")), new_state
+
+
+def rwkv_time_decode(p: dict, x: Array, cfg, shd: Sharder, state: dict
+                     ) -> Tuple[Array, dict]:
+    """One-token step; state: wkv (B,H,K,V) f32, shift (B,D)."""
+    b_, _, d = x.shape
+    h, kd = num_heads_of(cfg), cfg.rwkv_head_dim
+    sx = state["shift"][:, None, :] - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"]).reshape(b_, h, kd)
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"]).reshape(b_, h, kd)
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"]).reshape(b_, h, kd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]))[:, 0]
+    dec = p["decay_base"] + jnp.einsum("bsd,dr,re->bse", xw, p["decay_w1"], p["decay_w2"])
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(b_, h, kd)
+    st = state["wkv"]
+    kv = k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                     st + p["bonus_u"].astype(jnp.float32)[..., None] * kv)
+    st = w[..., None] * st + kv
+    out = groupnorm_heads(out, p["ln_scale"], p["ln_bias"], cfg.norm_eps)
+    out = (out.reshape(b_, d).astype(x.dtype) * g)[:, None, :]
+    y = jnp.einsum("bse,ed->bsd", out, p["w_o"])
+    return y, {"wkv": st, "shift": x[:, -1, :]}
+
+
+def rwkv_channel_forward(p: dict, x: Array, cfg, shd: Sharder,
+                         state: dict | None = None) -> Tuple[Array, dict]:
+    b_, s, d = x.shape
+    prev = state["shift"][:, None, :] if state else jnp.zeros((b_, 1, d), x.dtype)
+    x_prev = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
+    k = shd(k, ("act_batch", "act_seq", "act_mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    y = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"])) * kv
+    return y, {"shift": x[:, -1, :]}
+
+
+def rwkv_channel_decode(p: dict, x: Array, cfg, shd: Sharder, state: dict
+                        ) -> Tuple[Array, dict]:
+    sx = state["shift"][:, None, :] - x
+    xk = x + sx * p["mu_k"]
+    xr = x + sx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["w_k"])))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    y = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"])) * kv
+    return y, {"shift": x[:, -1, :]}

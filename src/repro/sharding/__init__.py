@@ -1,0 +1,17 @@
+from repro.sharding.logical import (
+    TRAIN_RULES,
+    DECODE_RULES,
+    make_rules,
+    spec_for,
+    param_shardings,
+    tree_shardings,
+)
+
+__all__ = [
+    "TRAIN_RULES",
+    "DECODE_RULES",
+    "make_rules",
+    "spec_for",
+    "param_shardings",
+    "tree_shardings",
+]

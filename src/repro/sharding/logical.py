@@ -1,0 +1,137 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, with fallback).
+
+Every param/activation/cache leaf carries a tuple of logical axis names
+(see models/). A *rule table* maps logical names to mesh axis names (or
+tuples for multi-axis sharding, or None). ``spec_for`` resolves a leaf to a
+PartitionSpec against a concrete mesh with production guard rails:
+
+  * mesh axes absent from the mesh are ignored (the same table works for
+    the (data, model) single-pod mesh and the (pod, data, model) one);
+  * a dim not divisible by its mesh-axis product *falls back* by dropping
+    trailing axes until divisible (never crash on e.g. 14 heads vs 16-way
+    TP — replicate instead, the dry-run records what actually sharded);
+  * a mesh axis never appears twice in one spec (first dim wins).
+
+Rule tables:
+  TRAIN_RULES  — TP over "model" + FSDP ("embed" params over "data") +
+                 batch DP over ("pod", "data").
+  DECODE_RULES — TP over "model", batch over ("pod", "data"), no FSDP
+                 (weights stay resident), cache seq replicated by default;
+                 long-context cells override act_kv_seq -> "data" (sequence-
+                 parallel KV) and act_batch -> None via ShapeConfig.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+Rule = Union[None, str, Tuple[str, ...]]
+
+TRAIN_RULES: Dict[str, Rule] = {
+    # params
+    "vocab": "model",
+    # FSDP axis (ZeRO-3-style 2-D weight sharding); spans pods when present
+    # (400B-param optimizer state does not fit one pod's worth of chips)
+    "embed": ("pod", "data"),
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_flat": "model",
+    "embed_out": "model",
+    "experts": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "head": None,
+    "layers": None,
+    # activations
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_kv_seq": None,
+    "act_vocab": "model",
+}
+
+DECODE_RULES: Dict[str, Rule] = {
+    **TRAIN_RULES,
+    "embed": None,            # no FSDP at inference
+    # KV cache sharded along SEQUENCE over the TP axis (flash-decode style):
+    # every assigned arch has kv_heads < 16, so head-sharding alone would
+    # fall back to replication and a 32k cache would not fit HBM (the llama4
+    # decode_32k cell measured 99.6 GiB/device under head-sharding fallback).
+    # Softmax over the sharded axis lowers to a max/sum all-reduce pair.
+    "act_kv_seq": "model",
+    "act_kv_heads": None,
+}
+
+
+def make_rules(kind: str, overrides: Optional[Dict[str, Rule]] = None
+               ) -> Dict[str, Rule]:
+    base = TRAIN_RULES if kind in ("train", "prefill") else DECODE_RULES
+    rules = dict(base)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _norm(rule: Rule, mesh) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    rules: Dict[str, Rule],
+    mesh,
+    shape: Sequence[int],
+) -> PartitionSpec:
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical_axes):
+        axes = () if name is None else _norm(rules.get(name), mesh)
+        axes = tuple(a for a in axes if a not in used)
+        # divisibility fallback: drop trailing axes until the dim divides
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            if dim % prod == 0:
+                break
+            axes = axes[:-1]
+        used.update(axes)
+        if not axes:
+            out.append(None)
+        elif len(axes) == 1:
+            out.append(axes[0])
+        else:
+            out.append(axes)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_shardings(axes_tree, rules: Dict[str, Rule], mesh, shape_tree):
+    """Map (logical-axes tree, shape tree) -> NamedSharding tree."""
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, spec_for(axes, rules, mesh, leaf.shape))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+def param_shardings(cfg, rules, mesh):
+    from repro.models import abstract_params, param_logical_axes
+
+    return tree_shardings(param_logical_axes(cfg), rules, mesh, abstract_params(cfg))

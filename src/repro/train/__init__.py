@@ -1,0 +1,4 @@
+from repro.train.step import make_train_step, make_prefill_step
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = ["make_train_step", "make_prefill_step", "TrainLoop", "TrainLoopConfig"]

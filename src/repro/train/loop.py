@@ -1,0 +1,113 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and exercised by tests on CPU):
+
+  * checkpoint cadence + atomic save (see checkpoint/) and auto-resume from
+    the newest complete step, so a killed job restarts losslessly — data is
+    a pure function of (seed, step), so the token stream resumes exactly;
+  * step deadline (straggler mitigation): a step exceeding ``step_timeout_s``
+    is recorded and — after ``max_step_retries`` consecutive budget misses —
+    the loop checkpoints and exits nonzero so the scheduler can reschedule
+    (on TPU pods the usual cause is a degraded host; self-eviction beats
+    hanging the whole ring);
+  * NaN handling: skip-and-count (grad spikes on bad batches); the step is
+    retried with the next batch rather than poisoning params;
+  * elastic restart: save/restore re-shards across different meshes (see
+    Checkpointer.restore(shardings=...)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 10
+    step_timeout_s: float = math.inf
+    max_step_retries: int = 3
+    async_ckpt: bool = False
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        step_fn: Callable,
+        loop_cfg: TrainLoopConfig,
+        log_fn: Callable[[int, Dict[str, float]], None] | None = None,
+    ):
+        self.step_fn = step_fn
+        self.cfg = loop_cfg
+        self.log_fn = log_fn or (lambda s, m: print(
+            f"step {s}: " + " ".join(f"{k}={v:.4g}" for k, v in m.items())
+        ))
+        self.ckpt = (
+            Checkpointer(loop_cfg.ckpt_dir, keep=loop_cfg.keep,
+                         async_save=loop_cfg.async_ckpt)
+            if loop_cfg.ckpt_dir else None
+        )
+        self.nan_skips = 0
+        self.deadline_misses = 0
+
+    def resume_or_init(self, params, opt_state):
+        """If a complete checkpoint exists, restore; else return inputs."""
+        start = 0
+        if self.ckpt is not None:
+            latest = self.ckpt.latest_step()
+            if latest is not None:
+                tree = self.ckpt.restore(latest, {"params": params, "opt": opt_state})
+                params, opt_state = tree["params"], tree["opt"]
+                start = latest
+        return params, opt_state, start
+
+    def run(self, params, opt_state, batches: Iterator[Dict[str, np.ndarray]],
+            start_step: int = 0):
+        cfg = self.cfg
+        step = start_step
+        consecutive_misses = 0
+        for batch in batches:
+            if step >= cfg.total_steps:
+                break
+            t0 = time.monotonic()
+            new_params, new_opt, metrics = self.step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            if not math.isfinite(loss):
+                self.nan_skips += 1  # skip the update, keep old state
+                step += 1
+                continue
+            params, opt_state = new_params, new_opt
+            if dt > cfg.step_timeout_s:
+                self.deadline_misses += 1
+                consecutive_misses += 1
+                if consecutive_misses > cfg.max_step_retries:
+                    if self.ckpt:
+                        self.ckpt.save(step + 1, {"params": params, "opt": opt_state})
+                        self.ckpt.wait()
+                    raise TimeoutError(
+                        f"{consecutive_misses} consecutive steps over "
+                        f"{cfg.step_timeout_s}s deadline — self-evicting for reschedule"
+                    )
+            else:
+                consecutive_misses = 0
+            step += 1
+            if step % cfg.log_every == 0:
+                self.log_fn(step, {k: float(v) for k, v in metrics.items()})
+            if self.ckpt and step % cfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+        if self.ckpt:
+            self.ckpt.save(step, {"params": params, "opt": opt_state})
+            self.ckpt.wait()
+        return params, opt_state, step

@@ -1,0 +1,117 @@
+"""Step builders: train_step (grads + AdamW update, optional microbatch
+accumulation) and prefill_step (forward + cache materialisation).
+
+Gradient accumulation is a ``lax.scan`` over microbatches; the single
+parameter update at the end means XLA sees exactly one gradient all-reduce
+per step, which its latency-hiding scheduler overlaps with the last
+microbatch's backward pass on TPU (the dry-run verifies the collective
+count/schedule, not the overlap — CPU has no LHS).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn, forward
+from repro.models.layers import Sharder
+from repro.optim import adamw_update, clip_by_global_norm, warmup_cosine
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh=None,
+    rules=None,
+    *,
+    grad_accum: int = 1,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+    weight_decay: float = 0.1,
+) -> Callable:
+    shd = Sharder(mesh, rules)
+
+    def compute_loss(params, tokens, labels, frontend_embeds):
+        return loss_fn(params, cfg, tokens, labels, shd, frontend_embeds)
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch: Dict[str, Any]):
+        tokens, labels = batch["tokens"], batch["labels"]
+        fe = batch.get("frontend_embeds")
+
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, tokens, labels, fe)
+        else:
+            b = tokens.shape[0]
+            assert b % grad_accum == 0
+            mb = b // grad_accum
+
+            def micro(carry, xs):
+                g_acc, l_acc = carry
+                t, y = xs
+                (l, _), g = grad_fn(params, t, y, None)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            xs = (
+                tokens.reshape(grad_accum, mb, -1),
+                labels.reshape(grad_accum, mb, -1),
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.float32(0.0)), xs)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = {"ce": loss, "aux": jnp.float32(0.0), "ntokens": jnp.int32(0)}
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = warmup_cosine(
+            opt_state.step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay
+        )
+        out_metrics = {
+            "loss": loss,
+            "ce": metrics["ce"],
+            "aux": metrics["aux"],
+            "grad_norm": gnorm,
+            "lr": lr,
+        }
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, rules=None) -> Callable:
+    """Returns prefill(params, batch) -> (last-position logits, cache)."""
+    shd = Sharder(mesh, rules)
+
+    def prefill_step(params, batch: Dict[str, Any]):
+        logits, _, cache = forward(
+            params, cfg, batch["tokens"], shd,
+            batch.get("frontend_embeds"), return_cache=True,
+        )
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, rules=None) -> Callable:
+    """Returns serve(params, cache, tokens, cur_index) -> (logits, cache')."""
+    from repro.models import decode_step
+
+    shd = Sharder(mesh, rules)
+
+    def serve_step(params, cache, tokens, cur_index):
+        return decode_step(params, cfg, cache, tokens, cur_index, shd)
+
+    return serve_step

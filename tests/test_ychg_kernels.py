@@ -1,0 +1,106 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracle (ref.py)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.ychg_colscan import colscan_runs_pallas, colscan_runs_streamed
+
+SHAPES = [(1, 1), (7, 5), (16, 128), (33, 200), (128, 384), (257, 131), (5, 1024)]
+DTYPES = [np.uint8, np.int32, np.bool_, np.float32]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_colscan_matches_ref(shape, dtype):
+    rng = np.random.default_rng(hash((shape, str(dtype))) % 2**32)
+    img = (rng.random(shape) < 0.45).astype(dtype)
+    got = np.asarray(ops.colscan_runs(jnp.asarray(img)))
+    want = np.asarray(ref.colscan_runs_ref(jnp.asarray(img)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_w", [128, 256])
+def test_colscan_block_width_invariance(block_w):
+    rng = np.random.default_rng(0)
+    img = (rng.random((64, 300)) < 0.5).astype(np.uint8)
+    got = np.asarray(colscan_runs_pallas(jnp.asarray(img), block_w=block_w))
+    want = np.asarray(ref.colscan_runs_ref(jnp.asarray(img)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("block_h", [4, 16, 64])
+def test_streamed_kernel_carry(block_h):
+    """Carry across H-blocks must not double count runs spanning a boundary."""
+    rng = np.random.default_rng(1)
+    img = (rng.random((130, 140)) < 0.6).astype(np.uint8)
+    got = np.asarray(
+        colscan_runs_streamed(jnp.asarray(img), block_h=block_h)
+    )
+    want = np.asarray(ref.colscan_runs_ref(jnp.asarray(img)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_streamed_boundary_run():
+    """A single run crossing every block boundary (all-ones column)."""
+    img = np.ones((64, 8), np.uint8)
+    got = np.asarray(colscan_runs_streamed(jnp.asarray(img), block_h=16))
+    np.testing.assert_array_equal(got, np.ones(8, np.int32))
+
+
+@pytest.mark.parametrize("w", [1, 127, 128, 129, 300])
+def test_transitions_kernel(w):
+    rng = np.random.default_rng(w)
+    runs = jnp.asarray(rng.integers(0, 5, size=(w,)).astype(np.int32))
+    t, b, d = ops.transitions(runs)
+    tr, br, dr = ref.transitions_ref(runs)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(dr))
+
+
+def test_analyze_full_pipeline():
+    rng = np.random.default_rng(5)
+    img = (rng.random((100, 333)) < 0.4).astype(np.uint8)
+    out = ops.analyze(jnp.asarray(img))
+    want = ref.analyze_ref(jnp.asarray(img))
+    np.testing.assert_array_equal(np.asarray(out["runs"]), np.asarray(want["runs"]))
+    assert int(out["n_hyperedges"]) == int(want["n_hyperedges"])
+
+
+# ----------------------------------------------------------------- bit-packed
+
+from repro.kernels.ychg_packed import pack_rows, packed_analyze, packed_colscan
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_packed_colscan_matches_ref(shape):
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    img = (rng.random(shape) < 0.45).astype(np.uint8)
+    got = np.asarray(packed_colscan(pack_rows(jnp.asarray(img))))
+    want = np.asarray(ref.colscan_runs_ref(jnp.asarray(img)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(33, 200), (128, 384), (257, 131)])
+def test_packed_fused_analyze(shape):
+    """Fused step1+2 incl. tile-boundary stitching."""
+    rng = np.random.default_rng(7)
+    img = (rng.random(shape) < 0.5).astype(np.uint8)
+    got = packed_analyze(jnp.asarray(img))
+    want = ref.analyze_ref(jnp.asarray(img))
+    for k in ("runs", "births", "deaths"):
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+    assert int(got["n_hyperedges"]) == int(want["n_hyperedges"])
+
+
+def test_pack_rows_bit_layout():
+    img = np.zeros((9, 2), np.uint8)
+    img[0, 0] = 1   # bit 0 of byte 0
+    img[7, 0] = 1   # bit 7 of byte 0
+    img[8, 1] = 1   # bit 0 of byte 1
+    pk = np.asarray(pack_rows(jnp.asarray(img)))
+    assert pk.shape == (2, 2)
+    assert pk[0, 0] == 0x81 and pk[1, 1] == 0x01

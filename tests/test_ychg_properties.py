@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the yCHG invariants (paper §1-2)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+import jax.numpy as jnp
+
+from repro.core import regions, serial, ychg
+
+masks = hnp.arrays(
+    dtype=np.uint8,
+    shape=st.tuples(st.integers(1, 40), st.integers(1, 40)),
+    elements=st.integers(0, 1),
+)
+
+
+@given(masks)
+@settings(max_examples=60, deadline=None)
+def test_parallel_equals_serial_scalar(img):
+    """The paper's claim of correctness: parallel == serial, exactly."""
+    got = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    want = serial.column_runs_scalar(img)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(masks)
+@settings(max_examples=60, deadline=None)
+def test_conservation(img):
+    """births - deaths telescopes to the last column's run count."""
+    s = ychg.analyze(jnp.asarray(img))
+    assert bool(ychg.check_conservation(s))
+
+
+@given(masks)
+@settings(max_examples=40, deadline=None)
+def test_hyperedge_count_invariant_under_horizontal_flip(img):
+    a = int(ychg.hyperedge_count(jnp.asarray(img)))
+    b = int(ychg.hyperedge_count(jnp.asarray(img[:, ::-1].copy())))
+    assert a == b
+
+
+@given(masks)
+@settings(max_examples=40, deadline=None)
+def test_runs_invariant_under_vertical_flip(img):
+    """Reversing each column preserves its maximal-run count."""
+    a = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    b = np.asarray(ychg.column_runs(jnp.asarray(img[::-1, :].copy())))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(masks)
+@settings(max_examples=40, deadline=None)
+def test_row_duplication_preserves_runs(img):
+    """Doubling image height by repeating rows keeps run counts (y-convexity
+    is about connectivity, not thickness)."""
+    a = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    b = np.asarray(ychg.column_runs(jnp.asarray(np.repeat(img, 2, axis=0))))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(masks)
+@settings(max_examples=40, deadline=None)
+def test_blank_column_padding(img):
+    """Appending background columns adds no runs and no hyperedges."""
+    padded = np.pad(img, ((0, 0), (0, 3)))
+    a = int(ychg.hyperedge_count(jnp.asarray(img)))
+    b = int(ychg.hyperedge_count(jnp.asarray(padded)))
+    assert a == b
+
+
+@given(masks)
+@settings(max_examples=40, deadline=None)
+def test_runs_bounded_by_half_height(img):
+    runs = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    h = img.shape[0]
+    assert (runs >= 0).all() and (runs <= (h + 1) // 2).all()
+
+
+@given(masks)
+@settings(max_examples=30, deadline=None)
+def test_materialized_decomposition_is_valid(img):
+    """regions.decompose: (a) covers the ROI exactly, (b) each hyperedge is
+    y-convex (<= 1 run per column), (c) count >= the poster's count signal."""
+    labels, n = regions.label_image(img)
+    np.testing.assert_array_equal(labels > 0, img != 0)
+    for e in regions.decompose(img):
+        cols = [r.col for r in e.runs]
+        assert len(cols) == len(set(cols))          # y-convex
+        assert cols == list(range(cols[0], cols[-1] + 1))  # consecutive
+    count_model = int(ychg.hyperedge_count(jnp.asarray(img)))
+    assert n >= count_model
+
+
+@given(masks)
+@settings(max_examples=30, deadline=None)
+def test_area_estimation(img):
+    """ref [3]'s application: area via decomposition == pixel count."""
+    assert regions.total_area(img) == int((img != 0).sum())
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=20, deadline=None)
+def test_striped_generator_exact(n):
+    from repro.data import modis
+
+    img = modis.striped(64, n) if n <= 900 else None
+    if img is not None:
+        assert int(ychg.hyperedge_count(jnp.asarray(img))) == n
