@@ -94,6 +94,48 @@ def bench_kernel_colscan() -> list[str]:
     return rows
 
 
+def bench_fused_batch_sweep() -> list[str]:
+    """Fused single-launch batched kernel vs the two-pass Pallas pipeline vs
+    pure jnp, over batch size x resolution (the paper's serial/parallel
+    crossover, measured as a curve).
+
+    Launch accounting (the fusion claim): the fused pipeline issues ONE
+    pallas_call per batch; the two-pass pipeline issues two per image
+    (step-1 colscan + step-2 diff after an HBM round-trip of the counts
+    vector), i.e. 2*B per batch. The serial column walk (core/serial.py)
+    anchors the crossover threshold.
+    """
+    rows = []
+    for res in (128, 256, 512):
+        for bsz in (1, 8, 32):
+            imgs = np.stack([modis.snowfield(res, seed=s) for s in range(bsz)])
+            jimgs = jax.device_put(imgs)
+
+            def two_pass(x):
+                # tuple so _t's block_until_ready sees and syncs the results
+                return tuple(kops.analyze(x[i])["n_hyperedges"] for i in range(bsz))
+
+            t_fused = _t(lambda x: kops.analyze_fused(x).n_hyperedges, jimgs)
+            t_two = _t(two_pass, jimgs)
+            t_jnp = _t(lambda x: ychg.analyze_jit(x).n_hyperedges, jimgs)
+            t_ser = _t(
+                lambda x: [serial.analyze_numpy(x[i]) for i in range(bsz)], imgs
+            )
+            rows.append(f"ychg_fused_b{bsz}_res{res},{t_fused:.1f},launches=1")
+            rows.append(
+                f"ychg_twopass_b{bsz}_res{res},{t_two:.1f},launches={2 * bsz}"
+            )
+            rows.append(
+                f"ychg_jnp_b{bsz}_res{res},{t_jnp:.1f},"
+                f"fused_vs_twopass={t_two / t_fused:.2f}x"
+            )
+            rows.append(
+                f"ychg_serial_b{bsz}_res{res},{t_ser:.1f},"
+                f"fused_vs_serial={t_ser / t_fused:.2f}x"
+            )
+    return rows
+
+
 def bench_kernel_packed() -> list[str]:
     """§Perf iteration on the paper's kernel: 1-bit row packing (8x less HBM
     traffic on the memory-bound scan). CPU wall time + the v5e roofline terms
@@ -181,6 +223,7 @@ def main() -> None:
         bench_resolution_sweep,
         bench_hyperedge_sweep,
         bench_kernel_colscan,
+        bench_fused_batch_sweep,
         bench_kernel_packed,
         bench_lm_train_microstep,
         bench_serve_decode,

@@ -2,7 +2,9 @@
 
 Backends:
   "jax"    — repro.core.ychg (pure jnp, jit; default; runs anywhere)
-  "pallas" — repro.kernels.ops (Pallas kernels; interpret off-TPU)
+  "fused"  — repro.kernels.ops.analyze_fused (single-launch fused batched
+             Pallas kernel; interpret off-TPU; accepts (H, W) or (B, H, W))
+  "pallas" — repro.kernels.ops (two-pass Pallas kernels; interpret off-TPU)
   "serial" — repro.core.serial NumPy single-core (the paper's CPU baseline)
   "scalar" — repro.core.serial per-pixel Python loops (the literal baseline;
              only sensible for tiny images)
@@ -17,22 +19,27 @@ import numpy as np
 from repro.core import serial, ychg
 from repro.kernels import ops as kernel_ops
 
-BACKENDS = ("jax", "pallas", "serial", "scalar")
+BACKENDS = ("jax", "fused", "pallas", "serial", "scalar")
+
+
+def _summary_to_dict(s: ychg.YCHGSummary) -> Dict[str, np.ndarray]:
+    return {
+        "runs": np.asarray(s.runs),
+        "cut_vertices": np.asarray(s.cut_vertices),
+        "transitions": np.asarray(s.transitions),
+        "births": np.asarray(s.births),
+        "deaths": np.asarray(s.deaths),
+        "n_hyperedges": np.asarray(s.n_hyperedges),
+        "n_transitions": np.asarray(s.n_transitions),
+    }
 
 
 def analyze_image(img: Any, backend: str = "jax") -> Dict[str, np.ndarray]:
     """Run the paper's two-step algorithm; returns host NumPy values."""
     if backend == "jax":
-        s = ychg.analyze_jit(img)
-        return {
-            "runs": np.asarray(s.runs),
-            "cut_vertices": np.asarray(s.cut_vertices),
-            "transitions": np.asarray(s.transitions),
-            "births": np.asarray(s.births),
-            "deaths": np.asarray(s.deaths),
-            "n_hyperedges": np.asarray(s.n_hyperedges),
-            "n_transitions": np.asarray(s.n_transitions),
-        }
+        return _summary_to_dict(ychg.analyze_jit(img))
+    if backend == "fused":
+        return _summary_to_dict(kernel_ops.analyze_fused(np.asarray(img)))
     if backend == "pallas":
         out = kernel_ops.analyze(img)
         return {k: np.asarray(v) for k, v in out.items()}

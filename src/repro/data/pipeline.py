@@ -17,7 +17,10 @@ from typing import Callable, Dict, Iterator, List, Optional
 
 import numpy as np
 
+import jax
+
 from repro.core import ychg
+from repro.kernels import ops as kernel_ops
 
 
 class Prefetcher:
@@ -58,9 +61,26 @@ class Prefetcher:
         return item
 
 
-def ychg_stats(masks: np.ndarray) -> Dict[str, np.ndarray]:
-    """(B,H,W) uint8 -> per-tile ROI statistics via the two-step algorithm."""
-    s = ychg.analyze_jit(masks)
+def ychg_stats(masks: np.ndarray, backend: str = "auto") -> Dict[str, np.ndarray]:
+    """(B,H,W) uint8 -> per-tile ROI statistics via the two-step algorithm.
+
+    backend "fused" runs the whole batch as ONE Pallas kernel launch
+    (``kernels.ops.analyze_fused``: no per-image step-1/step-2 round-trip);
+    "jnp" is the pure-jnp jit path. Both are bit-identical. "auto"
+    (default) picks "fused" on TPU and "jnp" elsewhere — off-TPU the fused
+    kernel executes in interpret mode (Python-level grid evaluation), which
+    is for correctness, not speed.
+    """
+    if backend == "auto":
+        backend = "fused" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "fused":
+        s = kernel_ops.analyze_fused(masks)
+    elif backend == "jnp":
+        s = ychg.analyze_jit(masks)
+    else:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'auto', 'fused', or 'jnp'"
+        )
     return {
         "n_hyperedges": np.asarray(s.n_hyperedges),
         "n_transitions": np.asarray(s.n_transitions),
@@ -68,10 +88,17 @@ def ychg_stats(masks: np.ndarray) -> Dict[str, np.ndarray]:
     }
 
 
-def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1
+def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1,
+                       backend: str = "auto",
+                       stats: Optional[Dict[str, np.ndarray]] = None
                        ) -> np.ndarray:
-    """Drop tiles whose ROI has no hyperedges (paper's step 1+2 as a filter)."""
-    stats = ychg_stats(masks)
+    """Drop tiles whose ROI has no hyperedges (paper's step 1+2 as a filter).
+
+    Pass ``stats`` (a prior ``ychg_stats`` result for the same masks) to
+    filter without recomputing — callers that already ran the operator for
+    ranking should not pay a second kernel launch."""
+    if stats is None:
+        stats = ychg_stats(masks, backend=backend)
     keep = stats["n_hyperedges"] >= min_hyperedges
     return masks[keep]
 

@@ -16,7 +16,9 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.ychg import YCHGSummary
 from repro.kernels import ychg_colscan as _k
+from repro.kernels import ychg_fused as _f
 
 Array = jax.Array
 
@@ -74,3 +76,47 @@ def analyze(
         "n_hyperedges": jnp.sum(births, dtype=jnp.int32),
         "n_transitions": jnp.sum(trans, dtype=jnp.int32),
     }
+
+
+def analyze_fused(
+    img: Array,
+    *,
+    block_w: int = 128,
+    block_h: int = 2048,
+    interpret: bool | None = None,
+) -> YCHGSummary:
+    """Fused batched pipeline: one kernel launch for a whole (B, H, W) stack.
+
+    Accepts (H, W) or (B, H, W); returns a ``YCHGSummary`` bit-identical to
+    ``repro.core.ychg.analyze`` (same dtypes, shapes, and values). Tall
+    images (full column tile over the VMEM budget) stream over H inside the
+    same single launch via the carry-row variant.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    squeeze = img.ndim == 2
+    imgs = img[None] if squeeze else img
+    if imgs.ndim != 3:
+        raise ValueError(f"expected (H, W) or (B, H, W) mask, got {img.shape}")
+    b, h, _ = imgs.shape
+    if b == 0:  # nothing to launch; keep the contract via the jnp path
+        from repro.core import ychg as _ychg
+
+        return _ychg.analyze(img)
+    if h * block_w > _FULL_COLUMN_VMEM_BUDGET:
+        out = _f.fused_analyze_streamed(
+            imgs, block_w=block_w, block_h=block_h, interpret=interpret
+        )
+    else:
+        out = _f.fused_analyze_pallas(imgs, block_w=block_w, interpret=interpret)
+    if squeeze:
+        out = {k: v[0] for k, v in out.items()}
+    return YCHGSummary(
+        runs=out["runs"],
+        cut_vertices=2 * out["runs"],
+        transitions=out["transitions"],
+        births=out["births"],
+        deaths=out["deaths"],
+        n_hyperedges=out["n_hyperedges"],
+        n_transitions=out["n_transitions"],
+    )

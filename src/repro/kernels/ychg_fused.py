@@ -1,0 +1,263 @@
+"""Fused, batched Pallas kernels: both yCHG steps in ONE ``pallas_call``.
+
+The two-kernel pipeline in ``ychg_colscan.py`` mirrors the paper's CUDA
+structure (step 1 kernel, HBM round-trip for the (W,) run-count vector,
+step 2 kernel over a shifted copy). That round-trip is pure overhead: the
+step-2 neighbour diff needs only the previous *tile's* last column count,
+which the step-1 kernel already holds in registers. These kernels fuse the
+diff into the column scan and batch a whole (B, H, W) stack into a single
+launch:
+
+  grid (B, W tiles)            — one grid step per (image, column tile);
+  step 1 in-register           — run counts for the tile's columns from the
+                                 rising-edge reduction, never written to HBM
+                                 before step 2 consumes them;
+  inter-tile carry             — a (1, 1) int32 VMEM scratch holds the last
+                                 column's run count of the previous W tile
+                                 (TPU grid order is row-major, last dim
+                                 fastest, so tiles of one image are visited
+                                 in order; the carry is re-zeroed at j == 0
+                                 for each new image);
+  per-image totals             — ``n_hyperedges`` / ``n_transitions``
+                                 accumulate into a revisited (1, 1) output
+                                 block (standard TPU reduction pattern),
+                                 masked to the valid W columns so padding
+                                 never leaks into the totals.
+
+``fused_analyze_streamed`` extends the same structure with a third grid dim
+over H tiles for images whose full column does not fit the VMEM budget,
+reusing the carry-row pattern of ``_colscan_streamed_kernel``: an int8
+(1, block_w) scratch carries the previous H block's last row, the per-column
+counts accumulate into the revisited ``runs`` block, and the step-2 diff +
+total accumulation fire on the final H tile of each column tile, when the
+tile's counts are complete.
+
+Both wrappers return per-image (B, W) planes and (B,) totals; padding
+columns (W rounded up to the lane multiple) are sliced off and padded rows
+(streamed variant) are zero, which cannot start a run. Outputs are
+bit-identical to ``repro.core.ychg.analyze`` — the parity suite in
+``tests/test_ychg_fused.py`` enforces exact equality including dtypes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocator; TPU-only import kept local (interpret mode
+    accepts the spec unchanged)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _valid_cols(j, *, w: int, block_w: int) -> Array:
+    """(block_w,) bool — True for columns of tile j inside the real width w."""
+    col = j * block_w + jax.lax.broadcasted_iota(jnp.int32, (1, block_w), 1)
+    return col[0] < w
+
+
+def _step2_finish(runs, j, carry_ref, nh_ref, nt_ref, *, w: int, block_w: int):
+    """In-register step 2 for a tile's completed (bw,) run counts: diff
+    against the carried left-neighbour count, accumulate the masked per-image
+    totals, advance the carry. Shared by both kernels so the seam/masking
+    logic cannot diverge. Returns (trans_i32, births, deaths) as
+    (1, 1, bw) output planes."""
+    prev = jnp.concatenate([carry_ref[0], runs[:-1]])
+    delta = runs - prev
+    births = jnp.maximum(delta, 0)
+    deaths = jnp.maximum(-delta, 0)
+    trans = delta != 0
+    valid = _valid_cols(j, w=w, block_w=block_w)
+    nh_ref[...] += jnp.sum(jnp.where(valid, births, 0), dtype=jnp.int32)
+    nt_ref[...] += jnp.sum(
+        jnp.where(valid, trans, False).astype(jnp.int32), dtype=jnp.int32
+    )
+    carry_ref[...] = runs[-1:].reshape(1, 1)
+    return (
+        trans.astype(jnp.int32)[None, None, :],
+        births[None, None, :],
+        deaths[None, None, :],
+    )
+
+
+def _fused_kernel(
+    img_ref,
+    runs_ref,
+    trans_ref,
+    births_ref,
+    deaths_ref,
+    nh_ref,
+    nt_ref,
+    carry_ref,
+    *,
+    w: int,
+    block_w: int,
+):
+    """Grid (B, W tiles). Block: img (1, H, bw) int8 -> all step-1/2 outputs.
+
+    carry_ref (1, 1) int32: run count of the previous tile's last column.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _new_image():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+        nh_ref[...] = jnp.zeros_like(nh_ref)
+        nt_ref[...] = jnp.zeros_like(nt_ref)
+
+    x = img_ref[0] != 0  # (H, bw) bool in VREGs
+    first = x[0:1, :].astype(jnp.int32)
+    rising = jnp.logical_and(x[1:, :], jnp.logical_not(x[:-1, :]))
+    runs = first.sum(axis=0) + rising.astype(jnp.int32).sum(axis=0)  # (bw,)
+
+    # step 2 in-register: the only cross-tile dependency is one scalar.
+    trans_p, births_p, deaths_p = _step2_finish(
+        runs, j, carry_ref, nh_ref, nt_ref, w=w, block_w=block_w
+    )
+    runs_ref[...] = runs[None, None, :]
+    trans_ref[...] = trans_p
+    births_ref[...] = births_p
+    deaths_ref[...] = deaths_p
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def fused_analyze_pallas(
+    imgs: Array, *, block_w: int = 128, interpret: bool = True
+) -> dict[str, Array]:
+    """Both yCHG steps for a (B, H, W) stack in one kernel launch.
+
+    Returns dict of runs/transitions/births/deaths (B, W) and
+    n_hyperedges/n_transitions (B,) — same values as ``core.ychg.analyze``.
+    """
+    b, h, w = imgs.shape
+    x = (imgs != 0).astype(jnp.int8)
+    w_pad = -w % block_w
+    if w_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, w_pad)))
+    wp = w + w_pad
+    vec = pl.BlockSpec((1, 1, block_w), lambda bi, j: (bi, 0, j))
+    tot = pl.BlockSpec((1, 1), lambda bi, j: (bi, 0))
+    runs, trans, births, deaths, nh, nt = pl.pallas_call(
+        functools.partial(_fused_kernel, w=w, block_w=block_w),
+        grid=(b, wp // block_w),
+        in_specs=[pl.BlockSpec((1, h, block_w), lambda bi, j: (bi, 0, j))],
+        out_specs=[vec, vec, vec, vec, tot, tot],
+        out_shape=[jax.ShapeDtypeStruct((b, 1, wp), jnp.int32)] * 4
+        + [jax.ShapeDtypeStruct((b, 1), jnp.int32)] * 2,
+        scratch_shapes=[_vmem((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return {
+        "runs": runs[:, 0, :w],
+        "transitions": trans[:, 0, :w] != 0,
+        "births": births[:, 0, :w],
+        "deaths": deaths[:, 0, :w],
+        "n_hyperedges": nh[:, 0],
+        "n_transitions": nt[:, 0],
+    }
+
+
+def _fused_streamed_kernel(
+    img_ref,
+    runs_ref,
+    trans_ref,
+    births_ref,
+    deaths_ref,
+    nh_ref,
+    nt_ref,
+    row_carry_ref,
+    tile_carry_ref,
+    *,
+    w: int,
+    block_w: int,
+):
+    """Grid (B, W tiles, H tiles); H fastest so each column tile completes
+    before the next starts.
+
+    row_carry_ref  (1, bw) int8  — previous H block's last row (run detection
+                                   across the H seam).
+    tile_carry_ref (1, 1) int32  — previous W tile's last-column run count
+                                   (step-2 seam), updated only on final H
+                                   tiles so it survives the H loop.
+    """
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+    last_i = pl.num_programs(2) - 1
+
+    @pl.when(jnp.logical_and(j == 0, i == 0))
+    def _new_image():
+        tile_carry_ref[...] = jnp.zeros_like(tile_carry_ref)
+        nh_ref[...] = jnp.zeros_like(nh_ref)
+        nt_ref[...] = jnp.zeros_like(nt_ref)
+
+    @pl.when(i == 0)
+    def _new_tile():
+        row_carry_ref[...] = jnp.zeros_like(row_carry_ref)
+        runs_ref[...] = jnp.zeros_like(runs_ref)
+        trans_ref[...] = jnp.zeros_like(trans_ref)
+        births_ref[...] = jnp.zeros_like(births_ref)
+        deaths_ref[...] = jnp.zeros_like(deaths_ref)
+
+    x = img_ref[0] != 0  # (bh, bw)
+    prev_last = row_carry_ref[...] != 0  # (1, bw)
+    prev_rows = jnp.concatenate([prev_last, x[:-1, :]], axis=0)
+    rising = jnp.logical_and(x, jnp.logical_not(prev_rows))
+    runs_ref[...] += rising.astype(jnp.int32).sum(axis=0)[None, None, :]
+    row_carry_ref[...] = x[-1:, :].astype(jnp.int8)
+
+    @pl.when(i == last_i)
+    def _finish_tile():
+        runs = runs_ref[0, 0, :]  # complete per-column counts for tile j
+        trans_p, births_p, deaths_p = _step2_finish(
+            runs, j, tile_carry_ref, nh_ref, nt_ref, w=w, block_w=block_w
+        )
+        trans_ref[...] = trans_p
+        births_ref[...] = births_p
+        deaths_ref[...] = deaths_p
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "block_h", "interpret"))
+def fused_analyze_streamed(
+    imgs: Array,
+    *,
+    block_w: int = 128,
+    block_h: int = 2048,
+    interpret: bool = True,
+) -> dict[str, Array]:
+    """Streamed fused pipeline for tall images: one launch, H tiled too."""
+    b, h, w = imgs.shape
+    x = (imgs != 0).astype(jnp.int8)
+    w_pad = -w % block_w
+    h_pad = -h % block_h
+    if w_pad or h_pad:
+        # zero rows end runs and start none; zero cols carry zero counts.
+        x = jnp.pad(x, ((0, 0), (0, h_pad), (0, w_pad)))
+    hp, wp = h + h_pad, w + w_pad
+    vec = pl.BlockSpec((1, 1, block_w), lambda bi, j, i: (bi, 0, j))
+    tot = pl.BlockSpec((1, 1), lambda bi, j, i: (bi, 0))
+    runs, trans, births, deaths, nh, nt = pl.pallas_call(
+        functools.partial(_fused_streamed_kernel, w=w, block_w=block_w),
+        grid=(b, wp // block_w, hp // block_h),
+        in_specs=[pl.BlockSpec((1, block_h, block_w), lambda bi, j, i: (bi, i, j))],
+        out_specs=[vec, vec, vec, vec, tot, tot],
+        out_shape=[jax.ShapeDtypeStruct((b, 1, wp), jnp.int32)] * 4
+        + [jax.ShapeDtypeStruct((b, 1), jnp.int32)] * 2,
+        scratch_shapes=[_vmem((1, block_w), jnp.int8), _vmem((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return {
+        "runs": runs[:, 0, :w],
+        "transitions": trans[:, 0, :w] != 0,
+        "births": births[:, 0, :w],
+        "deaths": deaths[:, 0, :w],
+        "n_hyperedges": nh[:, 0],
+        "n_transitions": nt[:, 0],
+    }

@@ -6,6 +6,12 @@ from repro.sharding.logical import (
     param_shardings,
     tree_shardings,
 )
+from repro.sharding.ychg import (
+    BATCH_AXIS,
+    batch_sharded_analyze,
+    make_batch_mesh,
+    pad_batch,
+)
 
 __all__ = [
     "TRAIN_RULES",
@@ -14,4 +20,8 @@ __all__ = [
     "spec_for",
     "param_shardings",
     "tree_shardings",
+    "BATCH_AXIS",
+    "batch_sharded_analyze",
+    "make_batch_mesh",
+    "pad_batch",
 ]

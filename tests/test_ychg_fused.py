@@ -1,0 +1,190 @@
+"""Parity suite: fused batched Pallas kernel vs the core.ychg oracle.
+
+Acceptance bar: ``kernels.ops.analyze_fused`` is BIT-identical to
+``core.ychg.analyze`` — same dtypes, shapes, values — across the shape x
+dtype sweep, batch dims, degenerate masks, and streamed-carry edge cases
+(H/W not multiples of the block sizes).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ychg
+from repro.kernels import ops
+from repro.kernels.ychg_fused import fused_analyze_pallas, fused_analyze_streamed
+from ychg_invariants import SUMMARY_FIELDS as FIELDS, assert_bit_identical
+
+SHAPES = [(1, 1), (7, 5), (16, 128), (33, 200), (128, 384), (257, 131), (5, 1024)]
+DTYPES = [np.uint8, np.int32, np.bool_, np.float32]
+
+
+def _dict_vs_oracle(got: dict, imgs: np.ndarray):
+    want = ychg.analyze(jnp.asarray(imgs))
+    for k, w in (("runs", want.runs), ("transitions", want.transitions),
+                 ("births", want.births), ("deaths", want.deaths),
+                 ("n_hyperedges", want.n_hyperedges),
+                 ("n_transitions", want.n_transitions)):
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(w), err_msg=k)
+
+
+# ------------------------------------------------------------ shape x dtype
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_parity_single_image(shape, dtype):
+    rng = np.random.default_rng(hash((shape, str(dtype))) % 2**32)
+    img = (rng.random(shape) < 0.45).astype(dtype)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(img)),
+                         ychg.analyze(jnp.asarray(img)))
+
+
+@pytest.mark.parametrize("batch", [1, 2, 5])
+def test_fused_parity_batched(batch):
+    rng = np.random.default_rng(batch)
+    imgs = (rng.random((batch, 33, 200)) < 0.5).astype(np.uint8)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+def test_fused_batch_heterogeneous_images():
+    """Images in one launch must not leak carry state into each other: an
+    all-foreground image sits between two structured ones."""
+    rng = np.random.default_rng(9)
+    a = (rng.random((40, 260)) < 0.3).astype(np.uint8)
+    b = np.ones((40, 260), np.uint8)
+    c = (rng.random((40, 260)) < 0.9).astype(np.uint8)
+    imgs = np.stack([a, b, c])
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+# -------------------------------------------------------------- degenerate
+
+
+@pytest.mark.parametrize("fill", [0, 1])
+def test_fused_constant_masks(fill):
+    imgs = np.full((3, 19, 141), fill, np.uint8)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+def test_fused_single_column():
+    rng = np.random.default_rng(11)
+    imgs = (rng.random((2, 200, 1)) < 0.5).astype(np.uint8)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+def test_fused_single_row():
+    rng = np.random.default_rng(12)
+    imgs = (rng.random((2, 1, 300)) < 0.5).astype(np.uint8)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+# ----------------------------------------------------------- streamed carry
+
+
+@pytest.mark.parametrize("block_h", [4, 16, 64])
+def test_fused_streamed_carry(block_h):
+    """H-block seams must not double-count runs; W-tile seams must diff
+    against the true left neighbour."""
+    rng = np.random.default_rng(1)
+    imgs = (rng.random((2, 130, 140)) < 0.6).astype(np.uint8)
+    got = fused_analyze_streamed(jnp.asarray(imgs), block_h=block_h)
+    _dict_vs_oracle(got, imgs)
+
+
+@pytest.mark.parametrize("shape", [(2, 33, 129), (1, 130, 257), (3, 257, 131)])
+def test_fused_streamed_nonmultiple_blocks(shape):
+    """H and W deliberately not multiples of (block_h, block_w)."""
+    rng = np.random.default_rng(sum(shape))
+    imgs = (rng.random(shape) < 0.5).astype(np.uint8)
+    got = fused_analyze_streamed(jnp.asarray(imgs), block_w=128, block_h=16)
+    _dict_vs_oracle(got, imgs)
+
+
+def test_fused_streamed_boundary_run():
+    """A single run crossing every H-block boundary (all-ones columns)."""
+    imgs = np.ones((2, 64, 8), np.uint8)
+    got = fused_analyze_streamed(jnp.asarray(imgs), block_h=16)
+    np.testing.assert_array_equal(np.asarray(got["runs"]),
+                                  np.ones((2, 8), np.int32))
+    np.testing.assert_array_equal(np.asarray(got["n_hyperedges"]), [1, 1])
+
+
+def test_fused_streamed_matches_full():
+    rng = np.random.default_rng(2)
+    imgs = (rng.random((2, 96, 200)) < 0.5).astype(np.uint8)
+    full = fused_analyze_pallas(jnp.asarray(imgs))
+    streamed = fused_analyze_streamed(jnp.asarray(imgs), block_h=32)
+    for k in full:
+        np.testing.assert_array_equal(np.asarray(full[k]),
+                                      np.asarray(streamed[k]), err_msg=k)
+
+
+def test_fused_budget_routes_to_streamed(monkeypatch):
+    """analyze_fused must switch to the streamed variant past the VMEM
+    budget and stay bit-identical."""
+    monkeypatch.setattr(ops, "_FULL_COLUMN_VMEM_BUDGET", 1)
+    rng = np.random.default_rng(3)
+    imgs = (rng.random((2, 70, 150)) < 0.5).astype(np.uint8)
+    assert_bit_identical(ops.analyze_fused(jnp.asarray(imgs), block_h=32),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+# ------------------------------------------------------- wrappers / routing
+
+
+def test_sharded_wrapper_parity():
+    from repro.sharding import batch_sharded_analyze
+
+    rng = np.random.default_rng(4)
+    imgs = (rng.random((5, 33, 200)) < 0.5).astype(np.uint8)
+    assert_bit_identical(batch_sharded_analyze(jnp.asarray(imgs)),
+                         ychg.analyze(jnp.asarray(imgs)))
+
+
+def test_pad_batch_is_inert():
+    from repro.sharding import pad_batch
+
+    rng = np.random.default_rng(5)
+    imgs = (rng.random((5, 20, 30)) < 0.5).astype(np.uint8)
+    padded, b = pad_batch(jnp.asarray(imgs), 4)
+    assert b == 5 and padded.shape[0] == 8
+    s = ops.analyze_fused(padded)
+    assert int(np.asarray(s.n_hyperedges)[b:].sum()) == 0
+    assert_bit_identical(
+        ychg.YCHGSummary(*[getattr(s, f)[:b] for f in FIELDS]),
+        ychg.analyze(jnp.asarray(imgs)),
+    )
+
+
+def test_pipeline_backends_agree():
+    from repro.data.pipeline import ychg_stats
+
+    rng = np.random.default_rng(6)
+    masks = (rng.random((7, 32, 48)) < 0.4).astype(np.uint8)
+    fused = ychg_stats(masks, backend="fused")
+    jnp_ = ychg_stats(masks, backend="jnp")
+    auto = ychg_stats(masks)  # "auto": fused on TPU, jnp elsewhere
+    for k in fused:
+        np.testing.assert_array_equal(fused[k], jnp_[k], err_msg=k)
+        np.testing.assert_array_equal(auto[k], jnp_[k], err_msg=k)
+    with pytest.raises(ValueError):
+        ychg_stats(masks, backend="nope")
+
+
+def test_api_fused_backend_matches_jax():
+    from repro.core.api import analyze_image
+
+    rng = np.random.default_rng(7)
+    img = (rng.random((45, 77)) < 0.5).astype(np.uint8)
+    a = analyze_image(img, backend="jax")
+    b = analyze_image(img, backend="fused")
+    for k in a:
+        assert a[k].dtype == b[k].dtype, k
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)

@@ -1,0 +1,29 @@
+"""Hypothesis fuzzing of the same yCHG invariants as the seeded fallback.
+
+``hypothesis`` is an optional test dependency: this whole module skips on a
+bare install (tier-1 must collect with zero errors without it), while
+test_ychg_properties.py keeps the invariants covered via its seeded corpus.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from ychg_invariants import ALL_CHECKS
+
+masks = hnp.arrays(
+    dtype=np.uint8,
+    shape=st.tuples(st.integers(1, 40), st.integers(1, 40)),
+    elements=st.integers(0, 1),
+)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_CHECKS))
+@given(img=masks)
+@settings(max_examples=25, deadline=None)
+def test_invariant_fuzzed(name, img):
+    ALL_CHECKS[name](img)

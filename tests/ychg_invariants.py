@@ -1,0 +1,188 @@
+"""Shared yCHG invariant checks (paper §1-2) + a deterministic mask corpus.
+
+Two test modules consume these:
+
+  test_ychg_properties.py             — seeded-random pure-pytest fallback;
+                                        always runs, even on a bare install.
+  test_ychg_properties_hypothesis.py  — the same invariants driven by
+                                        hypothesis fuzzing; skipped when
+                                        hypothesis is not installed.
+
+Each check takes one (H, W) uint8/bool mask and raises on violation, so the
+same functions serve as hypothesis properties and as plain assertions over
+the corpus.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import regions, serial, ychg
+
+
+# --------------------------------------------------------------- invariants
+
+
+def check_parallel_equals_serial(img: np.ndarray) -> None:
+    """The paper's correctness claim: parallel step 1 == scalar walk, exactly."""
+    got = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    want = serial.column_runs_scalar(img)
+    np.testing.assert_array_equal(got, want)
+
+
+def check_conservation(img: np.ndarray) -> None:
+    """births - deaths telescopes to the last column's run count."""
+    s = ychg.analyze(jnp.asarray(img))
+    assert bool(ychg.check_conservation(s))
+    # restated on host so the jnp reduction cannot hide a sign bug:
+    b = int(np.asarray(s.births).sum())
+    d = int(np.asarray(s.deaths).sum())
+    assert b - d == int(np.asarray(s.runs)[-1])
+
+
+def check_hyperedge_count_horizontal_flip(img: np.ndarray) -> None:
+    a = int(ychg.hyperedge_count(jnp.asarray(img)))
+    b = int(ychg.hyperedge_count(jnp.asarray(img[:, ::-1].copy())))
+    assert a == b
+
+
+def check_runs_vertical_flip(img: np.ndarray) -> None:
+    """Reversing each column preserves its maximal-run count."""
+    a = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    b = np.asarray(ychg.column_runs(jnp.asarray(img[::-1, :].copy())))
+    np.testing.assert_array_equal(a, b)
+
+
+def check_row_duplication_preserves_runs(img: np.ndarray) -> None:
+    """Doubling height by repeating rows keeps run counts (y-convexity is
+    about connectivity, not thickness)."""
+    a = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    b = np.asarray(ychg.column_runs(jnp.asarray(np.repeat(img, 2, axis=0))))
+    np.testing.assert_array_equal(a, b)
+
+
+def check_blank_column_padding(img: np.ndarray) -> None:
+    """Appending background columns adds no runs and no hyperedges."""
+    padded = np.pad(img, ((0, 0), (0, 3)))
+    a = int(ychg.hyperedge_count(jnp.asarray(img)))
+    b = int(ychg.hyperedge_count(jnp.asarray(padded)))
+    assert a == b
+
+
+def check_runs_bounded_by_half_height(img: np.ndarray) -> None:
+    runs = np.asarray(ychg.column_runs(jnp.asarray(img)))
+    h = img.shape[0]
+    assert (runs >= 0).all() and (runs <= (h + 1) // 2).all()
+
+
+def check_decomposition_valid(img: np.ndarray) -> None:
+    """regions.decompose: (a) covers the ROI exactly, (b) each hyperedge is
+    y-convex over consecutive columns, (c) count >= the poster's signal."""
+    labels, n = regions.label_image(img)
+    np.testing.assert_array_equal(labels > 0, img != 0)
+    for e in regions.decompose(img):
+        cols = [r.col for r in e.runs]
+        assert len(cols) == len(set(cols))                  # y-convex
+        assert cols == list(range(cols[0], cols[-1] + 1))   # consecutive
+    count_model = int(ychg.hyperedge_count(jnp.asarray(img)))
+    assert n >= count_model
+
+
+def check_births_bound_chain_heads(img: np.ndarray) -> None:
+    """Per-column tie between the transition signal and the materialised
+    decomposition: the number of hyperedge chains *starting* at column j is
+    at least births[j] (the count model's lower bound — a chain head is a run
+    with no one-to-one left partner, and #heads >= runs[j] - runs[j-1])."""
+    s = ychg.analyze(jnp.asarray(img))
+    births = np.asarray(s.births)
+    heads = np.zeros(img.shape[1], dtype=np.int64)
+    for e in regions.decompose(img):
+        heads[e.runs[0].col] += 1
+    assert (heads >= births).all(), (heads, births)
+
+
+def check_area_estimation(img: np.ndarray) -> None:
+    """ref [3]'s application: area via decomposition == pixel count."""
+    assert regions.total_area(img) == int((img != 0).sum())
+
+
+SUMMARY_FIELDS = ("runs", "cut_vertices", "transitions", "births", "deaths",
+                  "n_hyperedges", "n_transitions")
+
+
+def assert_bit_identical(got: ychg.YCHGSummary, want: ychg.YCHGSummary) -> None:
+    """The parity bar: same dtypes, shapes, and values on every field."""
+    for f in SUMMARY_FIELDS:
+        g, w = getattr(got, f), getattr(want, f)
+        assert g.dtype == w.dtype, f"{f}: {g.dtype} != {w.dtype}"
+        assert g.shape == w.shape, f"{f}: {g.shape} != {w.shape}"
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=f)
+
+
+def check_fused_kernel_parity(img: np.ndarray) -> None:
+    """The fused single-launch Pallas kernel is bit-identical to core.ychg."""
+    from repro.kernels import ops as kops
+
+    assert_bit_identical(kops.analyze_fused(jnp.asarray(img)),
+                         ychg.analyze(jnp.asarray(img)))
+
+
+ALL_CHECKS = {
+    "parallel_equals_serial": check_parallel_equals_serial,
+    "conservation": check_conservation,
+    "horizontal_flip": check_hyperedge_count_horizontal_flip,
+    "vertical_flip_runs": check_runs_vertical_flip,
+    "row_duplication": check_row_duplication_preserves_runs,
+    "blank_column_padding": check_blank_column_padding,
+    "runs_bounded": check_runs_bounded_by_half_height,
+    "decomposition_valid": check_decomposition_valid,
+    "births_bound_chain_heads": check_births_bound_chain_heads,
+    "area_estimation": check_area_estimation,
+    "fused_kernel_parity": check_fused_kernel_parity,
+}
+
+
+# ------------------------------------------------------------------- corpus
+
+
+def structured_masks() -> list[np.ndarray]:
+    """Deterministic adversarial masks: degenerate shapes + the documented
+    branch/merge and same-count reconnection cases."""
+    donut = np.array([[1, 1, 1], [1, 0, 1], [1, 1, 1]], np.uint8)  # branch+merge
+    # same-count reconnection: runs 2 -> 2 but every chain breaks at col 1
+    # (no row overlap). The count signal sees NO transition there; the
+    # materialised decomposition must still split (documented limitation).
+    reconnect = np.zeros((7, 2), np.uint8)
+    reconnect[[0, 4], 0] = 1
+    reconnect[[2, 6], 1] = 1
+    checker = np.indices((8, 8)).sum(axis=0) % 2
+    return [
+        np.zeros((1, 1), np.uint8),
+        np.ones((1, 1), np.uint8),
+        np.zeros((5, 7), np.uint8),           # all background
+        np.ones((5, 7), np.uint8),            # all foreground
+        np.ones((40, 1), np.uint8),           # single column
+        np.ones((1, 40), np.uint8),           # single row
+        donut,
+        reconnect,
+        checker.astype(np.uint8),
+    ]
+
+
+def random_masks(n: int = 24, seed: int = 20130610) -> list[np.ndarray]:
+    """Seeded random masks over the same shape/density space the hypothesis
+    strategy samples (1..40 per side, density 5%..95%)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        h = int(rng.integers(1, 41))
+        w = int(rng.integers(1, 41))
+        p = float(rng.uniform(0.05, 0.95))
+        out.append((rng.random((h, w)) < p).astype(np.uint8))
+    return out
+
+
+def corpus() -> list[np.ndarray]:
+    return structured_masks() + random_masks()
