@@ -1,13 +1,18 @@
 """Quickstart: the paper's two-step yCHG algorithm on a synthetic scene.
 
+The canonical entry point is ``repro.engine.YCHGEngine``: one engine, every
+backend, device-resident results. ``backend="auto"`` resolves from the
+registry (jit'd jnp on CPU/GPU, the fused single-launch Pallas kernel on
+TPU).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import regions, ychg
-from repro.core.api import analyze_image
+from repro.core import regions
 from repro.data import modis
+from repro.engine import YCHGConfig, YCHGEngine
 
 
 def main():
@@ -15,15 +20,18 @@ def main():
     img = modis.snowfield(512, seed=7)
     print(f"scene: {img.shape}, coverage {img.mean():.1%}")
 
-    # Step 1 + 2 on the "GPU" (data-parallel JAX; Pallas kernel on TPU)
-    out = analyze_image(img, backend="jax")
+    # Step 1 + 2 on the "GPU": one engine call, result stays on device
+    engine = YCHGEngine()  # backend="auto"
+    result = engine.analyze(img)
+    print(f"engine dispatched to backend={engine.resolve_backend()!r}")
+    out = result.to_host()  # host copy only where the example prints
     print(f"step 1: cut-vertex counts per column — max runs "
           f"{out['runs'].max()}, mean {out['runs'].mean():.1f}")
     print(f"step 2: {out['n_transitions']} transition columns, "
           f"{out['n_hyperedges']} yConvex hyperedges")
 
-    # Paper's serial baseline agrees exactly
-    ser = analyze_image(img, backend="serial")
+    # Paper's serial baseline agrees exactly (same engine API, host backend)
+    ser = YCHGEngine(YCHGConfig(backend="serial")).analyze(img).to_host()
     assert np.array_equal(out["runs"], ser["runs"])
     print("serial baseline agrees exactly")
 

@@ -1,13 +1,15 @@
 """End-to-end satellite ROI pipeline (the paper's deployment scenario).
 
-Tiles of a large MODIS-like scene flow through the data pipeline:
+Tiles of a large MODIS-like scene flow through the data pipeline behind a
+single ``YCHGEngine`` built from the workload config:
   1. background prefetch of tile batches,
-  2. the paper's two-step yCHG operator on device — the FUSED batched
-     Pallas kernel: one kernel launch per tile batch (vs two launches per
-     image for the original step-1/step-2 pipeline),
+  2. the paper's two-step yCHG operator on device — the engine's fused
+     backend: one kernel launch per tile batch (vs two launches per image
+     for the original step-1/step-2 pipeline),
   3. empty-tile filtering + anyres crop ranking for a VLM frontend,
-  4. a batch-sharded pass over the whole tile stack (shard_map over the
-     device mesh; a 1-device CPU mesh degrades to the plain fused call).
+  4. the same engine with a mesh attached: the batch shard_maps over the
+     device mesh (a 1-device CPU mesh degrades to the plain fused call;
+     ragged batches are padded and stripped inside the engine).
 
 Run:  PYTHONPATH=src python examples/satellite_roi.py
 """
@@ -16,11 +18,11 @@ import time
 
 import numpy as np
 
-import jax.numpy as jnp
-
+from repro.configs.ychg_modis import config as workload_config
 from repro.data import modis
 from repro.data.pipeline import Prefetcher, anyres_select, filter_empty_tiles, ychg_stats
-from repro.sharding import batch_sharded_analyze, make_batch_mesh
+from repro.engine import YCHGEngine
+from repro.sharding import make_batch_mesh
 
 
 def tile_stream(scene: np.ndarray, tile: int):
@@ -40,10 +42,14 @@ def main():
     scene = modis.snowfield(1024, seed=11)
     print(f"scene {scene.shape}, coverage {scene.mean():.1%}")
 
+    wl = workload_config()
+    # force the fused single-launch path (auto would pick jit'd jnp on CPU)
+    engine = YCHGEngine(wl.engine.to_engine_config(backend="fused"))
+
     t0 = time.perf_counter()
     n_tiles = n_kept = n_edges = n_launches = 0
     for batch in Prefetcher(tile_stream(scene, 128), depth=2):
-        stats = ychg_stats(batch, backend="fused")  # ONE kernel launch/batch
+        stats = ychg_stats(batch, engine=engine)  # ONE kernel launch/batch
         # filter on the stats already in hand — no second launch per batch
         kept = filter_empty_tiles(batch, stats=stats)
         n_tiles += len(batch)
@@ -57,14 +63,26 @@ def main():
     print(f"fused kernel launches: {n_launches} "
           f"(two-pass pipeline would have issued {2 * n_tiles})")
 
-    # batch-sharded pass over the full tile stack (multi-device MODIS path)
+    # the same engine as a streaming operator: device-resident results per
+    # batch, host copy only for the running total
+    streamed = sum(
+        int(np.asarray(r.n_hyperedges).sum())
+        for r in engine.analyze_stream(tile_stream(scene, 128))
+    )
+    assert streamed == n_edges
+    print(f"analyze_stream pass agrees: {streamed} hyperedges")
+
+    # batch-sharded pass over the full tile stack (multi-device MODIS path):
+    # the fused backend with a mesh attached — nothing else changes
     mesh = make_batch_mesh()
-    stack = jnp.asarray(np.stack([t for b in tile_stream(scene, 128) for t in b]))
-    sharded = batch_sharded_analyze(stack, mesh=mesh)
-    assert int(sharded.n_hyperedges.sum()) == n_edges
+    meshed = engine.with_mesh(mesh)
+    stack = np.stack([t for b in tile_stream(scene, 128) for t in b])
+    sharded = meshed.analyze_batch(stack)
+    assert sharded.batch_size == stack.shape[0]  # pad stripped internally
+    assert int(np.asarray(sharded.n_hyperedges).sum()) == n_edges
     print(f"batch-sharded pass over {stack.shape[0]} tiles on a "
           f"{dict(mesh.shape)} mesh: total hyperedges "
-          f"{int(sharded.n_hyperedges.sum())} (matches streaming pass)")
+          f"{int(np.asarray(sharded.n_hyperedges).sum())} (matches streaming pass)")
 
     # anyres: pick the 5 most structurally complex crops for the VLM frontend
     offs = anyres_select(scene, tile=256, k=5)

@@ -1,50 +1,53 @@
-"""High-level yCHG entry point with backend selection.
+"""DEPRECATED shim over :mod:`repro.engine` — use ``YCHGEngine`` instead.
 
-Backends:
-  "jax"    — repro.core.ychg (pure jnp, jit; default; runs anywhere)
-  "fused"  — repro.kernels.ops.analyze_fused (single-launch fused batched
-             Pallas kernel; interpret off-TPU; accepts (H, W) or (B, H, W))
-  "pallas" — repro.kernels.ops (two-pass Pallas kernels; interpret off-TPU)
-  "serial" — repro.core.serial NumPy single-core (the paper's CPU baseline)
-  "scalar" — repro.core.serial per-pixel Python loops (the literal baseline;
-             only sensible for tiny images)
+``analyze_image`` was the original high-level entry point with string
+backend selection. It survives only for backwards compatibility: every call
+emits a ``DeprecationWarning`` and delegates to the engine, returning the
+exact legacy host-NumPy dict. New code should construct the engine
+directly::
+
+    from repro.engine import YCHGConfig, YCHGEngine
+    engine = YCHGEngine(YCHGConfig(backend="jax"))
+    result = engine.analyze(img)          # device-resident YCHGResult
+    legacy = result.to_host()             # the dict this shim returns
+
+Backend names are unchanged ("jax", "fused", "pallas", "serial", "scalar");
+see ``repro.engine.backends`` for their capability flags and
+``repro.engine`` for the full migration table.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict
 
 import numpy as np
 
-from repro.core import serial, ychg
-from repro.kernels import ops as kernel_ops
-
 BACKENDS = ("jax", "fused", "pallas", "serial", "scalar")
 
+_ENGINES: Dict[str, Any] = {}
 
-def _summary_to_dict(s: ychg.YCHGSummary) -> Dict[str, np.ndarray]:
-    return {
-        "runs": np.asarray(s.runs),
-        "cut_vertices": np.asarray(s.cut_vertices),
-        "transitions": np.asarray(s.transitions),
-        "births": np.asarray(s.births),
-        "deaths": np.asarray(s.deaths),
-        "n_hyperedges": np.asarray(s.n_hyperedges),
-        "n_transitions": np.asarray(s.n_transitions),
-    }
+
+def _engine(backend: str):
+    if backend not in _ENGINES:
+        from repro.engine import YCHGConfig, YCHGEngine
+
+        _ENGINES[backend] = YCHGEngine(YCHGConfig(backend=backend))
+    return _ENGINES[backend]
 
 
 def analyze_image(img: Any, backend: str = "jax") -> Dict[str, np.ndarray]:
-    """Run the paper's two-step algorithm; returns host NumPy values."""
-    if backend == "jax":
-        return _summary_to_dict(ychg.analyze_jit(img))
-    if backend == "fused":
-        return _summary_to_dict(kernel_ops.analyze_fused(np.asarray(img)))
-    if backend == "pallas":
-        out = kernel_ops.analyze(img)
-        return {k: np.asarray(v) for k, v in out.items()}
-    if backend == "serial":
-        return serial.analyze_numpy(np.asarray(img))
-    if backend == "scalar":
-        return serial.analyze_scalar(np.asarray(img))
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    """DEPRECATED: use ``repro.engine.YCHGEngine``. Returns host NumPy values."""
+    warnings.warn(
+        "repro.core.api.analyze_image is deprecated; use "
+        "repro.engine.YCHGEngine(...).analyze(img) (and .to_host() for this "
+        "dict form)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    engine = _engine(backend)
+    if np.ndim(img) == 3:  # legacy jax/fused paths accepted (B, H, W) stacks
+        return engine.analyze_batch(img).to_host()
+    return engine.analyze(img).to_host()

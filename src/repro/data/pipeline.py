@@ -11,16 +11,15 @@ structure" that the llava-style frontend uses to pick which crops to encode.
 
 from __future__ import annotations
 
+import functools
 import queue
 import threading
-from typing import Callable, Dict, Iterator, List, Optional
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional
 
 import numpy as np
 
-import jax
-
-from repro.core import ychg
-from repro.kernels import ops as kernel_ops
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.engine import YCHGEngine
 
 
 class Prefetcher:
@@ -61,26 +60,37 @@ class Prefetcher:
         return item
 
 
-def ychg_stats(masks: np.ndarray, backend: str = "auto") -> Dict[str, np.ndarray]:
+# legacy backend names accepted by ychg_stats, mapped to engine backends
+_STATS_BACKENDS = {"auto": "auto", "fused": "fused", "jnp": "jax"}
+
+
+@functools.lru_cache(maxsize=None)
+def _default_engine(backend: str) -> "YCHGEngine":
+    from repro.engine import YCHGConfig, YCHGEngine
+
+    return YCHGEngine(YCHGConfig(backend=backend))
+
+
+def ychg_stats(masks: np.ndarray, backend: str = "auto", *,
+               engine: Optional["YCHGEngine"] = None) -> Dict[str, np.ndarray]:
     """(B,H,W) uint8 -> per-tile ROI statistics via the two-step algorithm.
 
-    backend "fused" runs the whole batch as ONE Pallas kernel launch
-    (``kernels.ops.analyze_fused``: no per-image step-1/step-2 round-trip);
-    "jnp" is the pure-jnp jit path. Both are bit-identical. "auto"
-    (default) picks "fused" on TPU and "jnp" elsewhere — off-TPU the fused
-    kernel executes in interpret mode (Python-level grid evaluation), which
-    is for correctness, not speed.
+    Pass ``engine`` (a ``repro.engine.YCHGEngine``) to control dispatch —
+    the whole batch runs as one device computation under that engine's
+    policy (fused = ONE Pallas kernel launch per batch, no per-image
+    step-1/step-2 round-trip). Without an engine, the legacy ``backend``
+    string picks a cached default engine: "auto" resolves per platform
+    (fused on TPU, jit'd jnp elsewhere), "fused"/"jnp" force those paths.
+    All are bit-identical.
     """
-    if backend == "auto":
-        backend = "fused" if jax.default_backend() == "tpu" else "jnp"
-    if backend == "fused":
-        s = kernel_ops.analyze_fused(masks)
-    elif backend == "jnp":
-        s = ychg.analyze_jit(masks)
-    else:
-        raise ValueError(
-            f"unknown backend {backend!r}; expected 'auto', 'fused', or 'jnp'"
-        )
+    if engine is None:
+        try:
+            engine = _default_engine(_STATS_BACKENDS[backend])
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected 'auto', 'fused', or 'jnp'"
+            ) from None
+    s = engine.analyze_batch(masks)
     return {
         "n_hyperedges": np.asarray(s.n_hyperedges),
         "n_transitions": np.asarray(s.n_transitions),
@@ -90,7 +100,8 @@ def ychg_stats(masks: np.ndarray, backend: str = "auto") -> Dict[str, np.ndarray
 
 def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1,
                        backend: str = "auto",
-                       stats: Optional[Dict[str, np.ndarray]] = None
+                       stats: Optional[Dict[str, np.ndarray]] = None,
+                       engine: Optional["YCHGEngine"] = None
                        ) -> np.ndarray:
     """Drop tiles whose ROI has no hyperedges (paper's step 1+2 as a filter).
 
@@ -98,7 +109,7 @@ def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1,
     filter without recomputing — callers that already ran the operator for
     ranking should not pay a second kernel launch."""
     if stats is None:
-        stats = ychg_stats(masks, backend=backend)
+        stats = ychg_stats(masks, backend=backend, engine=engine)
     keep = stats["n_hyperedges"] >= min_hyperedges
     return masks[keep]
 

@@ -1,0 +1,58 @@
+"""`repro.engine` — the canonical entry point for yCHG computations.
+
+One device-resident API over every backend, batch shape, and mesh. Build a
+:class:`YCHGEngine` from a frozen :class:`YCHGConfig`; call ``analyze``
+(one mask), ``analyze_batch`` (a stack), or ``analyze_stream`` (an
+iterable). Every call returns a :class:`YCHGResult` pytree that stays on
+device; ``.to_host()`` gives the old host dict, ``.to_summary()`` the
+``core.ychg.YCHGSummary`` view.
+
+Backend dispatch lives in :mod:`repro.engine.registry`: implementations
+self-register with capability flags and ``backend="auto"`` resolves per
+call from the input shape and available devices — no if/elif chains, and
+the shard_map path is just the fused backend with a mesh attached
+(``engine.with_mesh(mesh)``).
+
+Migration from the four legacy call sites (all now route through here):
+
+  legacy call                                   engine form
+  --------------------------------------------  ---------------------------------
+  core.api.analyze_image(img, backend="jax")    YCHGEngine(YCHGConfig(
+                                                  backend="jax")
+                                                ).analyze(img).to_host()
+  kernels.ops.analyze_fused(stack)              YCHGEngine(YCHGConfig(
+                                                  backend="fused")
+                                                ).analyze_batch(stack)
+  sharding.batch_sharded_analyze(stack,         YCHGEngine(YCHGConfig(
+      mesh=mesh)                                  backend="fused"),
+                                                  mesh=mesh,
+                                                ).analyze_batch(stack)
+  data.pipeline.ychg_stats(masks,               data.pipeline.ychg_stats(masks,
+      backend="fused")                              engine=engine)
+
+``core.api.analyze_image`` and ``sharding.batch_sharded_analyze`` remain as
+thin shims that emit ``DeprecationWarning`` and delegate here; CI runs the
+examples with ``-W error::DeprecationWarning`` so no in-repo caller can
+regress onto them.
+"""
+
+from repro.engine.engine import YCHGConfig, YCHGEngine, YCHGResult
+from repro.engine.registry import (
+    BackendSpec,
+    backend_names,
+    get_backend,
+    register_backend,
+    resolve,
+)
+from repro.engine import backends as _backends  # noqa: F401  (self-registration)
+
+__all__ = [
+    "BackendSpec",
+    "YCHGConfig",
+    "YCHGEngine",
+    "YCHGResult",
+    "backend_names",
+    "get_backend",
+    "register_backend",
+    "resolve",
+]

@@ -1,0 +1,120 @@
+"""The five in-repo yCHG backends, self-registered on import.
+
+Each ``run(imgs, config)`` maps a (B, H, W) stack to a batched
+``core.ychg.YCHGSummary`` bit-identical to ``core.ychg.analyze`` — the
+parity suite in ``tests/test_engine.py`` enforces this for every entry in
+the registry, so a new backend is held to the same bar just by registering.
+
+Capability summary (drives ``backend="auto"``):
+
+  name     batch  mesh   runs on        auto-picked on
+  jax      yes    no     cpu/gpu/tpu    cpu, gpu (jit'd jnp — fastest there)
+  fused    yes    yes    tpu, cpu*      tpu (single-launch Pallas pipeline)
+  pallas   no     no     tpu, cpu*      — (two-pass kernels; explicit only)
+  serial   no     no     cpu            — (paper's NumPy CPU baseline)
+  scalar   no     no     cpu            — (per-pixel loops; tiny images only)
+
+  * cpu = Pallas interpret mode (exact, Python-evaluated; correctness, not
+    speed). Device backends never copy device arrays through the host.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import serial, ychg
+from repro.core.ychg import YCHGSummary
+from repro.engine.registry import BackendSpec, register_backend
+from repro.kernels import ops as kops
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.engine.engine import YCHGConfig
+
+
+def _stack_host(dicts: list[dict]) -> YCHGSummary:
+    """Per-image host result dicts -> one batched device YCHGSummary."""
+    return YCHGSummary(
+        runs=jnp.asarray(np.stack([d["runs"] for d in dicts])),
+        cut_vertices=jnp.asarray(np.stack([d["cut_vertices"] for d in dicts])),
+        transitions=jnp.asarray(np.stack([d["transitions"] for d in dicts])),
+        births=jnp.asarray(np.stack([d["births"] for d in dicts])),
+        deaths=jnp.asarray(np.stack([d["deaths"] for d in dicts])),
+        n_hyperedges=jnp.asarray(np.stack([d["n_hyperedges"] for d in dicts])),
+        n_transitions=jnp.asarray(np.stack([d["n_transitions"] for d in dicts])),
+    )
+
+
+def _run_jax(imgs, config: "YCHGConfig") -> YCHGSummary:
+    return ychg.analyze_jit(imgs)
+
+
+def _run_fused(imgs, config: "YCHGConfig") -> YCHGSummary:
+    return kops.analyze_fused(
+        imgs,
+        block_w=config.block_w,
+        block_h=config.block_h,
+        interpret=config.interpret,
+        vmem_budget=config.stream_vmem_budget,
+    )
+
+
+def _run_pallas(imgs, config: "YCHGConfig") -> YCHGSummary:
+    """Two-pass kernels are single-image; batch = one two-launch pass each."""
+    if imgs.shape[0] == 0:
+        return ychg.analyze(imgs)
+    outs = [
+        kops.analyze(
+            imgs[i],
+            block_w=config.block_w,
+            block_h=config.block_h,
+            interpret=config.interpret,
+            vmem_budget=config.stream_vmem_budget,
+        )
+        for i in range(imgs.shape[0])
+    ]
+    return YCHGSummary(**{k: jnp.stack([o[k] for o in outs]) for k in outs[0]})
+
+
+def _run_serial(imgs, config: "YCHGConfig") -> YCHGSummary:
+    if imgs.shape[0] == 0:
+        return ychg.analyze(imgs)
+    host = np.asarray(imgs)
+    return _stack_host([serial.analyze_numpy(host[i]) for i in range(len(host))])
+
+
+def _run_scalar(imgs, config: "YCHGConfig") -> YCHGSummary:
+    if imgs.shape[0] == 0:
+        return ychg.analyze(imgs)
+    host = np.asarray(imgs)
+    return _stack_host([serial.analyze_scalar(host[i]) for i in range(len(host))])
+
+
+register_backend(BackendSpec(
+    name="jax", run=_run_jax, supports_batch=True, supports_mesh=False,
+    device_kinds=("cpu", "gpu", "tpu"),
+    priority={"cpu": 100, "gpu": 100, "tpu": 50},
+))
+register_backend(BackendSpec(
+    name="fused", run=_run_fused, supports_batch=True, supports_mesh=True,
+    device_kinds=("tpu", "cpu", "gpu"),
+    priority={"tpu": 100, "cpu": 40, "gpu": 40},
+))
+register_backend(BackendSpec(
+    name="pallas", run=_run_pallas, supports_batch=False, supports_mesh=False,
+    device_kinds=("tpu", "cpu", "gpu"),
+    priority={"tpu": 60, "cpu": 20, "gpu": 20},
+))
+register_backend(BackendSpec(
+    name="serial", run=_run_serial, supports_batch=False, supports_mesh=False,
+    device_kinds=("cpu",),
+    priority={"cpu": 10},
+))
+register_backend(BackendSpec(
+    name="scalar", run=_run_scalar, supports_batch=False, supports_mesh=False,
+    device_kinds=("cpu",),
+    priority={"cpu": 1},
+))

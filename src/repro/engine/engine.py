@@ -1,0 +1,267 @@
+"""`YCHGConfig` / `YCHGResult` / `YCHGEngine` — the unified entry point.
+
+One engine instance owns one dispatch policy (backend selection, Pallas tile
+sizes, streaming threshold, optional device mesh) and exposes three verbs:
+
+  * ``analyze(img)``         — one (H, W) mask; internally a B=1 view of the
+                               batched path, NOT a separate code path;
+  * ``analyze_batch(stack)`` — a (B, H, W) stack in one device computation;
+  * ``analyze_stream(it)``   — an iterable of masks/stacks, one
+                               ``YCHGResult`` yielded per item.
+
+Every verb returns a :class:`YCHGResult`: a ``jax.tree_util``-registered
+pytree of device arrays (it can cross ``jit``/``shard_map`` boundaries and
+never leaves the device implicitly). ``.to_host()`` produces the legacy
+host dict that ``core.api.analyze_image`` used to return.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.ychg import YCHGSummary
+from repro.engine import registry
+
+Array = jax.Array
+
+_FIELDS = ("runs", "cut_vertices", "transitions", "births", "deaths",
+           "n_hyperedges", "n_transitions")
+
+
+@dataclasses.dataclass(frozen=True)
+class YCHGConfig:
+    """Frozen, hashable engine construction knobs.
+
+    backend            "auto" resolves per call from the registry (platform +
+                       batch shape + mesh); or any registered name
+                       ("jax", "fused", "pallas", "serial", "scalar").
+    block_w, block_h   Pallas lane / streamed-row tile sizes.
+    dtype              optional dtype name masks are cast to on ingest
+                       (None = accept as-is; nonzero = foreground either way).
+    mesh_axis          batch axis name used when a mesh is attached.
+    interpret          Pallas interpret flag (None = auto: interpret off-TPU).
+    stream_vmem_budget raw-tile bytes past which the fused/colscan kernels
+                       switch to the H-streamed variant (VMEM threshold).
+    """
+
+    backend: str = "auto"
+    block_w: int = 128
+    block_h: int = 2048
+    dtype: Optional[str] = None
+    mesh_axis: str = "data"
+    interpret: Optional[bool] = None
+    stream_vmem_budget: int = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class YCHGResult:
+    """Device-resident batched output of the two-step algorithm.
+
+    Arrays always carry the leading batch dim — a single image is a B=1
+    view. Registered with ``jax.tree_util`` (the ``batched`` flag is static
+    aux data), so results flow through ``jit``/``vmap``/``tree_map``
+    untouched. Nothing is copied to the host until ``to_host()``.
+    """
+
+    runs: Array           # (B, W) int32  step-1 per-column run counts
+    cut_vertices: Array   # (B, W) int32  2*runs
+    transitions: Array    # (B, W) bool   step-2 change signal
+    births: Array         # (B, W) int32
+    deaths: Array         # (B, W) int32
+    n_hyperedges: Array   # (B,)   int32  total births
+    n_transitions: Array  # (B,)   int32  number of transition columns
+    batched: bool = dataclasses.field(default=True, metadata=dict(static=True))
+
+    @property
+    def batch_size(self) -> int:
+        return self.runs.shape[0]
+
+    def block_until_ready(self) -> "YCHGResult":
+        jax.block_until_ready(tuple(getattr(self, f) for f in _FIELDS))
+        return self
+
+    def to_summary(self) -> YCHGSummary:
+        """``core.ychg.YCHGSummary`` view (squeezed to (W,)/() for B=1 input)."""
+        if self.batched:
+            return YCHGSummary(*(getattr(self, f) for f in _FIELDS))
+        return YCHGSummary(*(getattr(self, f)[0] for f in _FIELDS))
+
+    def to_host(self) -> Dict[str, np.ndarray]:
+        """The legacy ``core.api.analyze_image`` dict: host NumPy values."""
+        s = self.to_summary()
+        return {f: np.asarray(getattr(s, f)) for f in _FIELDS}
+
+
+jax.tree_util.register_dataclass(
+    YCHGResult, data_fields=list(_FIELDS), meta_fields=["batched"]
+)
+
+
+def _from_summary(s: YCHGSummary, batched: bool) -> YCHGResult:
+    # hot-path constructor: fills __dict__ directly instead of going through
+    # the frozen-dataclass __init__ (8 object.__setattr__ calls) — this sits
+    # inside the engine's <=5us/call dispatch-overhead budget
+    r = object.__new__(YCHGResult)
+    d = r.__dict__
+    d["runs"] = s.runs
+    d["cut_vertices"] = s.cut_vertices
+    d["transitions"] = s.transitions
+    d["births"] = s.births
+    d["deaths"] = s.deaths
+    d["n_hyperedges"] = s.n_hyperedges
+    d["n_transitions"] = s.n_transitions
+    d["batched"] = batched
+    return r
+
+
+class YCHGEngine:
+    """The sole dispatch point for yCHG computations.
+
+    ``YCHGEngine()`` (all defaults) resolves the best backend per call;
+    attach a device mesh with ``with_mesh`` to batch-shard the fused kernel
+    over it (padding to the mesh size and stripping the pad internally, so
+    callers never see padded-length results).
+    """
+
+    def __init__(self, config: YCHGConfig = YCHGConfig(), *,
+                 mesh: Optional[Mesh] = None):
+        if mesh is not None and config.mesh_axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has axes {mesh.axis_names}, config.mesh_axis="
+                f"{config.mesh_axis!r}"
+            )
+        self.config = config
+        self.mesh = mesh
+        # platform is fixed per process; cache it out of the hot dispatch path
+        self._platform = jax.default_backend()
+        self._cast_dtype = None if config.dtype is None else jnp.dtype(config.dtype)
+        # (registry generation, resolved spec) — revalidated against
+        # registry.generation() so late register_backend() calls still apply
+        self._spec_cache: Optional[tuple[int, registry.BackendSpec]] = None
+
+    # ------------------------------------------------------------- plumbing
+
+    def with_mesh(self, mesh: Optional[Mesh]) -> "YCHGEngine":
+        """Same policy, batch-sharded over ``mesh`` (None detaches)."""
+        return YCHGEngine(self.config, mesh=mesh)
+
+    def with_config(self, **overrides: Any) -> "YCHGEngine":
+        """New engine with ``dataclasses.replace``d config, same mesh."""
+        return YCHGEngine(dataclasses.replace(self.config, **overrides),
+                          mesh=self.mesh)
+
+    def resolve_backend(self) -> str:
+        """Name of the backend this engine dispatches to right now."""
+        return self._resolve().name
+
+    def _resolve(self) -> registry.BackendSpec:
+        gen = registry.generation()
+        cached = self._spec_cache
+        if cached is not None and cached[0] == gen:
+            return cached[1]
+        spec = registry.resolve(
+            self.config.backend,
+            platform=self._platform,
+            need_mesh=self.mesh is not None,
+        )
+        self._spec_cache = (gen, spec)
+        return spec
+
+    def _ingest(self, imgs: Any) -> Array:
+        # device arrays pass through untouched: no host round-trip, and no
+        # jnp.asarray no-op either (it costs ~17us/call of pure dispatch —
+        # the engine's <=5us/call overhead budget lives or dies here)
+        x = imgs if isinstance(imgs, jax.Array) else jnp.asarray(imgs)
+        if self._cast_dtype is not None and x.dtype != self._cast_dtype:
+            x = x.astype(self._cast_dtype)
+        return x
+
+    # ------------------------------------------------------------- dispatch
+
+    def analyze(self, img: Any) -> YCHGResult:
+        """One (H, W) mask -> B=1 ``YCHGResult`` (never copies device->host)."""
+        x = self._ingest(img)
+        if x.ndim != 2:
+            raise ValueError(f"analyze expects an (H, W) mask, got {x.shape}; "
+                             "use analyze_batch for stacks")
+        return self._run(x[None], batched=False)
+
+    def analyze_batch(self, stack: Any) -> YCHGResult:
+        """A (B, H, W) stack in one device computation -> ``YCHGResult``."""
+        x = self._ingest(stack)
+        if x.ndim != 3:
+            raise ValueError(f"analyze_batch expects a (B, H, W) stack, "
+                             f"got {x.shape}")
+        return self._run(x, batched=True)
+
+    def analyze_stream(self, items: Iterable[Any]) -> Iterator[YCHGResult]:
+        """Lazily map ``analyze``/``analyze_batch`` over an iterable.
+
+        Each item may be an (H, W) mask or a (B, H, W) stack; one
+        ``YCHGResult`` is yielded per item. Compose with
+        ``data.pipeline.Prefetcher`` for background host I/O.
+        """
+        for item in items:
+            x = self._ingest(item)
+            if x.ndim == 2:
+                yield self._run(x[None], batched=False)
+            elif x.ndim == 3:
+                yield self._run(x, batched=True)
+            else:
+                raise ValueError(
+                    f"stream items must be (H, W) or (B, H, W), got {x.shape}"
+                )
+
+    def _run(self, imgs: Array, *, batched: bool) -> YCHGResult:
+        spec = self._resolve()
+        if self.mesh is not None:
+            return _from_summary(self._run_meshed(spec, imgs), batched)
+        return _from_summary(spec.run(imgs, self.config), batched)
+
+    def _run_meshed(self, spec: registry.BackendSpec, imgs: Array) -> YCHGSummary:
+        """shard_map ``spec`` over the 1-D batch mesh.
+
+        Ragged batches are padded with blank images (zero runs, zero
+        hyperedges — inert end to end) to a multiple of the mesh size and
+        the pad is stripped before returning, so non-divisible batch sizes
+        are invisible to callers.
+        """
+        from repro.sharding.ychg import pad_batch
+
+        axis = self.config.mesh_axis
+        x, b = pad_batch(imgs, self.mesh.shape[axis])
+        cfg = self.config
+
+        def local(xs: Array):
+            s = spec.run(xs, cfg)
+            return tuple(getattr(s, f) for f in _FIELDS)
+
+        pspec = P(axis)
+        outs = shard_map(local, mesh=self.mesh, in_specs=pspec,
+                         out_specs=pspec, check_rep=False)(x)
+        return YCHGSummary(*(o[:b] for o in outs))
+
+    # ------------------------------------------------------------ tooling
+
+    def lower(self, stack_shape: tuple[int, int, int],
+              dtype: Any = jnp.uint8) -> Any:
+        """jit-lower this engine's batched path for an abstract input shape.
+
+        Used by ``launch.dryrun`` to prove a (backend x shape) cell lowers
+        and compiles without allocating the stack.
+        """
+        spec = self._resolve()
+        cfg = self.config
+
+        def run(x: Array) -> YCHGResult:
+            return _from_summary(spec.run(x, cfg), batched=True)
+
+        return jax.jit(run).lower(jax.ShapeDtypeStruct(stack_shape, dtype))

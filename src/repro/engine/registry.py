@@ -1,0 +1,138 @@
+"""Backend registry for the yCHG engine.
+
+Every implementation of the paper's two-step algorithm registers itself
+here as a :class:`BackendSpec` with capability flags instead of being named
+in an if/elif chain. ``backend="auto"`` resolution is then a pure function
+of (platform, batch shape, mesh attached) over the registered specs:
+
+  * ``device_kinds`` — platforms the backend can execute on at all
+    (``"cpu"`` includes Pallas interpret mode: exact, Python-evaluated);
+  * ``priority`` — per-platform preference; highest wins for ``auto``.
+    This is how "fused on TPU, jnp elsewhere" is expressed as data:
+    ``jax`` outranks ``fused`` on cpu/gpu, ``fused`` outranks ``jax`` on tpu;
+  * ``supports_batch`` — the callable consumes a whole (B, H, W) stack in
+    one device computation (vs the engine looping images on host);
+  * ``supports_mesh`` — safe to ``shard_map`` over a batch-sharded device
+    mesh (pure per-image math, no cross-image state).
+
+The five in-repo backends (``jax``/``fused``/``pallas``/``serial``/
+``scalar``) self-register on ``import repro.engine`` (see
+``repro.engine.backends``). Out-of-tree code may register additional
+backends with :func:`register_backend`; ``resolve.cache_clear()`` runs
+automatically on registration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Mapping, Tuple
+
+__all__ = [
+    "BackendSpec",
+    "backend_names",
+    "get_backend",
+    "register_backend",
+    "resolve",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered yCHG implementation.
+
+    ``run(imgs, config)`` takes a (B, H, W) mask stack (jax array for device
+    backends, anything ``np.asarray``-able for host baselines) plus a
+    ``YCHGConfig`` and returns a batched ``core.ychg.YCHGSummary`` that is
+    bit-identical to ``core.ychg.analyze`` on the same stack.
+    """
+
+    name: str
+    run: Callable
+    supports_batch: bool
+    supports_mesh: bool
+    device_kinds: Tuple[str, ...]
+    # per-device-kind preference used by "auto"; kinds absent from the map
+    # fall back to 0. Must only contain kinds from device_kinds.
+    priority: Mapping[str, int] = dataclasses.field(default_factory=dict)
+
+    def priority_on(self, platform: str) -> int:
+        return self.priority.get(platform, 0)
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+_GENERATION = 0  # bumped on registration; engines cache resolution against it
+
+
+def generation() -> int:
+    """Monotonic registry version, for callers that cache resolved specs."""
+    return _GENERATION
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    """Register (or replace) a backend; returns the spec for chaining."""
+    global _GENERATION
+    for kind in spec.priority:
+        if kind not in spec.device_kinds:
+            raise ValueError(
+                f"backend {spec.name!r}: priority for {kind!r} but "
+                f"device_kinds={spec.device_kinds}"
+            )
+    _REGISTRY[spec.name] = spec
+    _GENERATION += 1
+    resolve.cache_clear()
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a backend (e.g. a benchmark/test stub); unknown names are a
+    no-op. Engines revalidate their cached resolution via generation()."""
+    global _GENERATION
+    if _REGISTRY.pop(name, None) is not None:
+        _GENERATION += 1
+        resolve.cache_clear()
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {backend_names()}"
+        ) from None
+
+
+@functools.lru_cache(maxsize=None)
+def resolve(backend: str, *, platform: str, need_mesh: bool = False) -> BackendSpec:
+    """Resolve a backend name (or ``"auto"``) to a spec for this call.
+
+    ``auto`` picks the highest-priority registered spec that can run on
+    ``platform`` (and, when a mesh is attached, that is mesh-capable).
+    Explicit names are honoured as-is except that ``need_mesh`` rejects
+    backends that cannot be shard_mapped.
+    """
+    if backend != "auto":
+        spec = get_backend(backend)
+        if need_mesh and not spec.supports_mesh:
+            raise ValueError(
+                f"backend {backend!r} does not support mesh execution; "
+                f"mesh-capable backends: "
+                f"{tuple(n for n, s in sorted(_REGISTRY.items()) if s.supports_mesh)}"
+            )
+        return spec
+    candidates = [
+        s for s in _REGISTRY.values()
+        if platform in s.device_kinds
+        and s.supports_batch
+        and (s.supports_mesh or not need_mesh)
+    ]
+    if not candidates:
+        raise ValueError(
+            f"no registered backend can run on platform {platform!r} "
+            f"(need_mesh={need_mesh}); registered: {backend_names()}"
+        )
+    return max(candidates, key=lambda s: (s.priority_on(platform), s.name))

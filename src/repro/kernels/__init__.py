@@ -1,6 +1,16 @@
 """Pallas TPU kernels for the compute hot-spot the paper optimizes:
 the yCHG column scan (step 1) and neighbour diff (step 2).
 
+These kernels are *backends*, not entry points: the canonical public API is
+``repro.engine.YCHGEngine``, where they register as ``"fused"`` (single
+launch, batched, mesh-capable) and ``"pallas"`` (two-pass) with capability
+flags that drive ``backend="auto"`` dispatch. Call
+``YCHGEngine(YCHGConfig(backend="fused")).analyze_batch(stack)`` rather
+than ``ops.analyze_fused`` directly — the engine keeps results
+device-resident, applies the VMEM streaming threshold from its config, and
+composes with batch sharding (a mesh attached to the engine shard_maps the
+fused backend). See ``repro.engine`` for the migration table.
+
   ychg_colscan.py  two-pass pl.pallas_call kernels + BlockSpec VMEM tiling
                    (one launch per step, HBM round-trip for the counts)
   ychg_fused.py    fused batched pipeline: BOTH steps for a (B, H, W) stack

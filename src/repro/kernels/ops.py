@@ -36,12 +36,15 @@ def colscan_runs(
     block_w: int = 128,
     block_h: int = 2048,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> Array:
     """Step 1: per-column maximal-run counts. (H, W) mask -> (W,) int32."""
     if interpret is None:
         interpret = _default_interpret()
+    if vmem_budget is None:
+        vmem_budget = _FULL_COLUMN_VMEM_BUDGET
     h, _ = img.shape
-    if h * block_w > _FULL_COLUMN_VMEM_BUDGET:
+    if h * block_w > vmem_budget:
         return _k.colscan_runs_streamed(
             img, block_w=block_w, block_h=block_h, interpret=interpret
         )
@@ -63,9 +66,11 @@ def analyze(
     block_w: int = 128,
     block_h: int = 2048,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> Dict[str, Array]:
     """Both steps fused end-to-end on device; returns the poster's outputs."""
-    runs = colscan_runs(img, block_w=block_w, block_h=block_h, interpret=interpret)
+    runs = colscan_runs(img, block_w=block_w, block_h=block_h, interpret=interpret,
+                        vmem_budget=vmem_budget)
     trans, births, deaths = transitions(runs, block_w=block_w, interpret=interpret)
     return {
         "runs": runs,
@@ -84,6 +89,7 @@ def analyze_fused(
     block_w: int = 128,
     block_h: int = 2048,
     interpret: bool | None = None,
+    vmem_budget: int | None = None,
 ) -> YCHGSummary:
     """Fused batched pipeline: one kernel launch for a whole (B, H, W) stack.
 
@@ -94,6 +100,8 @@ def analyze_fused(
     """
     if interpret is None:
         interpret = _default_interpret()
+    if vmem_budget is None:
+        vmem_budget = _FULL_COLUMN_VMEM_BUDGET
     squeeze = img.ndim == 2
     imgs = img[None] if squeeze else img
     if imgs.ndim != 3:
@@ -103,7 +111,7 @@ def analyze_fused(
         from repro.core import ychg as _ychg
 
         return _ychg.analyze(img)
-    if h * block_w > _FULL_COLUMN_VMEM_BUDGET:
+    if h * block_w > vmem_budget:
         out = _f.fused_analyze_streamed(
             imgs, block_w=block_w, block_h=block_h, interpret=interpret
         )

@@ -117,7 +117,7 @@ def _lower(cfg, shape, mesh, rules):
 def _probe_metrics(cfg, shape, mesh, rules) -> Dict[str, float]:
     """One unrolled reduced-depth compile -> measured per-partition metrics."""
     compiled = _lower(cfg, shape, mesh, rules).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.cost_dict(compiled)
     coll = roofline.collective_bytes(compiled.as_text())
     out = {"flops": float(cost.get("flops", 0.0)),
            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
@@ -167,7 +167,7 @@ def run_cell(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool,
                 "generated_code_size_in_bytes",
             )
         }
-        cost = compiled.cost_analysis() or {}
+        cost = roofline.cost_dict(compiled)
         rec["cost_raw"] = {
             "flops": float(cost.get("flops", 0.0)),
             "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
@@ -239,6 +239,59 @@ def run_cell(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool,
     return rec
 
 
+def run_ychg_cells(out_dir: str, max_res: int = 2000) -> int:
+    """Engine-driven yCHG dry-run: jit-lower + compile the workload's
+    batched path per resolution without allocating a single scene.
+
+    Uses the ``engine`` section of ``configs/ychg_modis.py`` (the canonical
+    way this workload constructs a yCHG computation) with the jax backend,
+    which compiles on any platform; records XLA cost/memory analysis per
+    cell. Returns the number of failed cells.
+    """
+    from repro.configs.ychg_modis import config as ychg_config
+    from repro.engine import YCHGEngine
+
+    wl = ychg_config()
+    engine = YCHGEngine(wl.engine.to_engine_config(backend="jax"))
+    os.makedirs(out_dir, exist_ok=True)
+    n_fail = 0
+    for res in [r for r in wl.resolutions if r <= max_res]:
+        tag = f"ychg__{wl.name}__b{wl.batch}_res{res}"
+        rec: Dict[str, Any] = {
+            "workload": wl.name,
+            "backend": engine.resolve_backend(),
+            "batch": wl.batch,
+            "resolution": res,
+        }
+        t0 = time.monotonic()
+        try:
+            compiled = engine.lower((wl.batch, res, res)).compile()
+            cost = roofline.cost_dict(compiled)
+            mem = compiled.memory_analysis()
+            rec["cost"] = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            }
+            rec["memory"] = {
+                k: int(getattr(mem, k, 0) or 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes")
+            }
+            rec["ok"] = True
+            print(f"[OK] {tag}: flops={rec['cost']['flops']:.3g} "
+                  f"bytes={rec['cost']['bytes_accessed']:.3g}", flush=True)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec["ok"] = False
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            n_fail += 1
+            print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+        rec["total_s"] = round(time.monotonic() - t0, 2)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return n_fail
+
+
 # named config variants for the §Perf hillclimb
 VARIANTS = {
     "base": lambda c: c,
@@ -268,7 +321,15 @@ def main():
     ap.add_argument("--mesh-shape", default=None,
                     help="e.g. 32x8 — §Perf exploration on the single-pod chip count")
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--ychg", action="store_true",
+                    help="dry-run the yCHG engine cells (configs/ychg_modis "
+                         "engine section) instead of the LM arch sweep")
+    ap.add_argument("--ychg-max-res", type=int, default=2000)
     args = ap.parse_args()
+    if args.ychg:
+        raise SystemExit(
+            1 if run_ychg_cells(args.out, max_res=args.ychg_max_res) else 0
+        )
     mesh_shape = (
         tuple(int(v) for v in args.mesh_shape.split("x"))
         if args.mesh_shape else None

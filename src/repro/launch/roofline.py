@@ -34,10 +34,20 @@ model is cross-checked against them.
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Any, Dict
 
 PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # bytes/s / chip
+
+
+def cost_dict(compiled) -> Dict[str, Any]:
+    """``compiled.cost_analysis()`` compat: newer jax returns a dict, older
+    a [per-device dict] list. Single shared shim — dryrun and the tests
+    must parse the artifact identically."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    return cost
 ICI_BW = 50e9           # bytes/s / link, 1 link charged
 
 _DTYPE_BYTES = {

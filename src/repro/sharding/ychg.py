@@ -1,31 +1,31 @@
-"""Batch sharding for yCHG scene stacks: shard_map over the fused kernel.
+"""Batch-mesh helpers for yCHG scene stacks + the deprecated shard_map shim.
 
-The MODIS deployment scenario processes stacks of (H, W) scene tiles. The
-fused kernel already batches a whole stack into one launch; this module
-splits the batch across a 1-D device mesh so every device runs one fused
-launch on its shard — per-column planes and per-image totals are already
-per-image, so no cross-device collective is needed (out_specs keep the
-batch axis sharded and JAX reassembles the global arrays).
+The shard_map path now lives inside the engine: it is simply the fused
+backend with a mesh attached (``YCHGEngine(cfg, mesh=mesh)`` — see
+``repro.engine.engine.YCHGEngine._run_meshed``). The engine pads ragged
+batches with blank images (zero runs, zero hyperedges — inert end to end)
+to a multiple of the mesh size and strips the pad internally, so callers
+never see padded-length results.
 
-Single-host CPU containers see a 1-device mesh and degrade to the plain
-fused call; a TPU pod slice shards B ways for free. Ragged batches are
-padded with blank images (zero runs, zero hyperedges) to a multiple of the
-mesh size and sliced back, so callers never have to align their stacks.
+This module keeps the mesh/padding utilities (``make_batch_mesh``,
+``pad_batch``) and ``batch_sharded_analyze`` as a DEPRECATED shim that
+delegates to the engine. Single-host CPU containers see a 1-device mesh
+and degrade to the plain fused call; a TPU pod slice shards B ways for
+free.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.ychg import YCHGSummary
-from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -59,34 +59,24 @@ def batch_sharded_analyze(
     block_h: int = 2048,
     interpret: bool | None = None,
 ) -> YCHGSummary:
-    """(B, H, W) stack -> YCHGSummary, batch-sharded over the mesh.
+    """DEPRECATED: use ``YCHGEngine(cfg, mesh=mesh).analyze_batch(imgs)``.
 
-    Bit-identical to ``core.ychg.analyze`` on the same stack: each device
-    runs ``kernels.ops.analyze_fused`` on its B/n shard (one fused kernel
-    launch per device), and results are reassembled along the batch axis.
+    (B, H, W) stack -> YCHGSummary, batch-sharded over the mesh; bit-identical
+    to ``core.ychg.analyze`` on the same stack. Kept as a thin shim over the
+    engine's mesh path for old callers.
     """
-    if imgs.ndim != 3:
-        raise ValueError(f"expected (B, H, W) stack, got {imgs.shape}")
-    mesh = make_batch_mesh(axis_name) if mesh is None else mesh
-    x, b = pad_batch(imgs, mesh.shape[axis_name])
-
-    def local(xs: Array):
-        s = kops.analyze_fused(
-            xs, block_w=block_w, block_h=block_h, interpret=interpret
-        )
-        return (s.runs, s.cut_vertices, s.transitions, s.births, s.deaths,
-                s.n_hyperedges, s.n_transitions)
-
-    spec = P(axis_name)
-    runs, cuts, trans, births, deaths, nh, nt = shard_map(
-        local, mesh=mesh, in_specs=spec, out_specs=spec, check_rep=False
-    )(x)
-    return YCHGSummary(
-        runs=runs[:b],
-        cut_vertices=cuts[:b],
-        transitions=trans[:b],
-        births=births[:b],
-        deaths=deaths[:b],
-        n_hyperedges=nh[:b],
-        n_transitions=nt[:b],
+    warnings.warn(
+        "repro.sharding.batch_sharded_analyze is deprecated; use "
+        "repro.engine.YCHGEngine(YCHGConfig(backend='fused'), mesh=mesh)"
+        ".analyze_batch(imgs)",
+        DeprecationWarning,
+        stacklevel=2,
     )
+    from repro.engine import YCHGConfig, YCHGEngine
+
+    engine = YCHGEngine(
+        YCHGConfig(backend="fused", block_w=block_w, block_h=block_h,
+                   mesh_axis=axis_name, interpret=interpret),
+        mesh=make_batch_mesh(axis_name) if mesh is None else mesh,
+    )
+    return engine.analyze_batch(imgs).to_summary()
