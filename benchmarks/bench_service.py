@@ -1,0 +1,190 @@
+"""Synthetic load generator + sweep for the yCHG ROI service.
+
+Each scenario builds a mask pool (`data.modis.snowfield`/`striped`), draws a
+request schedule over it (unique traffic, zipf-ish repeated traffic, mixed
+resolutions, optionally paced to an open-loop arrival rate), then drives the
+SAME schedule through two paths:
+
+  naive    one blocking ``engine.analyze(mask)`` per request, in order —
+           the pre-service serving strategy (what launch/serve.py used to
+           approximate with one hand-built batch);
+  service  ``YCHGService.submit`` per request, futures awaited at the end —
+           micro-batching + bucket padding + result cache + overlap.
+
+Both paths are warmed first (compile time is a separate, known cost — see
+``launch/serve.py``'s cold/warm split), so the comparison is steady-state.
+Per scenario we record naive/service throughput, speedup, p50/p95 latency,
+cache hit rate, Mpx/s, and the compiled-shape count, and write the table to
+``BENCH_service.json`` for later PRs to track.
+
+Run:  PYTHONPATH=src python benchmarks/bench_service.py [--out BENCH_service.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.data import modis
+from repro.engine import YCHGEngine
+from repro.service import ServiceConfig, YCHGService
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    resolutions: Sequence[int]     # pool mask sides (mixed-res traffic)
+    pool_size: int                 # distinct masks in the pool
+    n_requests: int
+    repeat_alpha: Optional[float]  # zipf-ish skew; None = all-unique schedule
+    rate: Optional[float] = None   # open-loop arrivals/s; None = closed-loop
+    seed: int = 0
+
+
+SCENARIOS = (
+    # the acceptance scenario: repeated-mask traffic, closed loop
+    Scenario("repeat_small", (128,), pool_size=8, n_requests=160,
+             repeat_alpha=1.2),
+    # worst case for the cache: every request distinct
+    Scenario("unique_small", (128,), pool_size=160, n_requests=160,
+             repeat_alpha=None),
+    # mixed resolutions exercise the bucket ladder + striped masks the
+    # hyperedge-count invariance (paper knob (b)) inside the pool
+    Scenario("mixed_res", (64, 128, 256), pool_size=24, n_requests=120,
+             repeat_alpha=1.0),
+    # paced open-loop traffic: latency under a sustainable arrival rate
+    Scenario("paced_repeat", (128,), pool_size=8, n_requests=100,
+             repeat_alpha=1.2, rate=200.0),
+)
+
+
+def build_pool(sc: Scenario) -> List[np.ndarray]:
+    rng = np.random.default_rng(sc.seed)
+    pool = []
+    for i in range(sc.pool_size):
+        res = sc.resolutions[i % len(sc.resolutions)]
+        if i % 3 == 2:  # striped masks pin an exact hyperedge count
+            pool.append(modis.striped(res, int(rng.integers(10, 200))))
+        else:
+            pool.append(modis.snowfield(res, seed=sc.seed * 1000 + i))
+    return pool
+
+
+def build_schedule(sc: Scenario, rng: np.random.Generator) -> np.ndarray:
+    if sc.repeat_alpha is None:
+        assert sc.pool_size >= sc.n_requests
+        return rng.permutation(sc.n_requests)
+    weights = 1.0 / np.arange(1, sc.pool_size + 1) ** sc.repeat_alpha
+    return rng.choice(sc.pool_size, size=sc.n_requests, p=weights / weights.sum())
+
+
+def run_naive(engine: YCHGEngine, pool, schedule, rate) -> float:
+    """Per-request blocking engine.analyze over the schedule; returns rps."""
+    t0 = time.perf_counter()
+    for n, i in enumerate(schedule):
+        if rate is not None:
+            _pace(t0, n, rate)
+        engine.analyze(pool[i]).block_until_ready()
+    return len(schedule) / (time.perf_counter() - t0)
+
+
+def run_service(svc: YCHGService, pool, schedule, rate) -> float:
+    t0 = time.perf_counter()
+    futures = []
+    for n, i in enumerate(schedule):
+        if rate is not None:
+            _pace(t0, n, rate)
+        futures.append(svc.submit(pool[i]))
+    for f in futures:
+        f.result(timeout=600)
+    return len(schedule) / (time.perf_counter() - t0)
+
+
+def _pace(t0: float, n: int, rate: float) -> None:
+    due = t0 + n / rate
+    while True:
+        remaining = due - time.perf_counter()
+        if remaining <= 0:
+            return
+        time.sleep(min(1e-3, remaining))
+
+
+def run_scenario(sc: Scenario) -> dict:
+    pool = build_pool(sc)
+    schedule = build_schedule(sc, np.random.default_rng(sc.seed + 1))
+    sides = tuple(sorted(set(sc.resolutions)))
+    engine = YCHGEngine()
+    svc = YCHGService(engine, ServiceConfig(bucket_sides=sides, max_batch=8,
+                                            max_delay_ms=2.0))
+    with svc:
+        # warm both paths: compile each distinct shape once, outside timing
+        for res in sides:
+            warm = pool[next(i for i, m in enumerate(pool)
+                             if m.shape[0] == res)]
+            engine.analyze(warm).block_until_ready()
+            svc.submit(warm).result(timeout=600)
+        naive_rps = run_naive(engine, pool, schedule, sc.rate)
+        service_rps = run_service(svc, pool, schedule, sc.rate)
+        m = svc.metrics()
+    row = {
+        "scenario": sc.name,
+        "n_requests": sc.n_requests,
+        "resolutions": list(sides),
+        "traffic": "unique" if sc.repeat_alpha is None
+        else f"zipf(a={sc.repeat_alpha})",
+        "rate_rps": sc.rate,
+        "naive_rps": round(naive_rps, 1),
+        "service_rps": round(service_rps, 1),
+        "speedup": round(service_rps / naive_rps, 2),
+        "p50_latency_ms": round(m.p50_latency_ms, 3),
+        "p95_latency_ms": round(m.p95_latency_ms, 3),
+        "cache_hit_rate": round(m.hit_rate, 3),
+        "coalesced": m.coalesced,
+        "mpx_per_s": round(m.mpx_per_s, 2),
+        "compiled_shapes": m.n_compiled_shapes,
+        "bucket_budget": len(sides),
+        "pad_fraction": round(m.pad_fraction, 3),
+    }
+    assert m.n_compiled_shapes <= len(sides), row  # acceptance bar
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--scenario", default=None,
+                    help="run a single scenario by name")
+    args = ap.parse_args()
+    rows = []
+    for sc in SCENARIOS:
+        if args.scenario and sc.name != args.scenario:
+            continue
+        row = run_scenario(sc)
+        rows.append(row)
+        print(json.dumps(row), flush=True)
+    report = {
+        "bench": "service_load_sweep",
+        "platform": jax.default_backend(),
+        "backend": YCHGEngine().resolve_backend(),
+        "note": (
+            "steady-state (both paths warmed); naive = blocking per-request "
+            "engine.analyze on the same schedule; latency percentiles are "
+            "service submit->ready times"
+        ),
+        "scenarios": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(rows)} scenarios)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ Public surface:
   repro.kernels    — Pallas TPU kernels for the scan (+ jnp oracles)
   repro.models     — assigned LM architectures (dense/GQA/MLA/MoE/SSM/RWKV/hybrid)
   repro.configs    — one config per assigned architecture (+ the paper's workload)
+  repro.service    — batching/caching ROI request service over repro.engine
   repro.launch     — production mesh, multi-pod dry-run, train/serve drivers
 """
 

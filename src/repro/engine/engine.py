@@ -203,25 +203,55 @@ class YCHGEngine:
         return self._run(x, batched=True)
 
     def analyze_stream(self, items: Iterable[Any]) -> Iterator[YCHGResult]:
-        """Lazily map ``analyze``/``analyze_batch`` over an iterable.
+        """Lazily map ``analyze``/``analyze_batch`` over an iterable,
+        double-buffering ingest against device compute.
 
         Each item may be an (H, W) mask or a (B, H, W) stack; one
-        ``YCHGResult`` is yielded per item. Compose with
+        ``YCHGResult`` is yielded per item, strictly in order. The stream
+        runs one item ahead of the yield point: item n+1 is pulled from the
+        iterator and its host->device transfer started *before* result n is
+        yielded, so while the consumer handles result n (whose computation
+        was dispatched asynchronously) the next item's host work and
+        transfer are already in flight. Compose with
         ``data.pipeline.Prefetcher`` for background host I/O.
         """
-        for item in items:
-            x = self._ingest(item)
-            if x.ndim == 2:
-                yield self._run(x[None], batched=False)
-            elif x.ndim == 3:
-                yield self._run(x, batched=True)
-            else:
-                raise ValueError(
-                    f"stream items must be (H, W) or (B, H, W), got {x.shape}"
-                )
+        it = iter(items)
+        pending: Optional[YCHGResult] = None
+        while True:
+            # pull and ingest (start the transfer of) item n+1 first ...
+            try:
+                item = next(it)
+                x = self._ingest(item)
+                if x.ndim == 2:
+                    x, batched = x[None], False
+                elif x.ndim == 3:
+                    batched = True
+                else:
+                    raise ValueError(
+                        f"stream items must be (H, W) or (B, H, W), "
+                        f"got {x.shape}"
+                    )
+            except StopIteration:
+                break
+            except Exception:
+                # a bad item — or a source iterator that raises — must not
+                # swallow the previous item's computed result: deliver it,
+                # then raise on the consumer's next pull
+                if pending is not None:
+                    yield pending
+                    pending = None
+                raise
+            # ... only then hand result n to the consumer, overlapping its
+            # wait with the transfer above; dispatch n+1 when control returns
+            if pending is not None:
+                yield pending
+            pending = self._run(x, batched=batched)
+        if pending is not None:
+            yield pending
 
     def _run(self, imgs: Array, *, batched: bool) -> YCHGResult:
         spec = self._resolve()
+        registry.note_call(spec.name)
         if self.mesh is not None:
             return _from_summary(self._run_meshed(spec, imgs), batched)
         return _from_summary(spec.run(imgs, self.config), batched)

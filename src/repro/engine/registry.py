@@ -24,15 +24,19 @@ automatically on registration.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Callable, Mapping, Tuple
+from typing import Callable, Mapping, Optional, Tuple
 
 __all__ = [
     "BackendSpec",
     "backend_names",
+    "call_count",
     "get_backend",
+    "note_call",
     "register_backend",
+    "reset_call_counts",
     "resolve",
 ]
 
@@ -95,6 +99,29 @@ def unregister_backend(name: str) -> None:
 
 def backend_names() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
+
+
+# Per-backend invocation counters, bumped by the engine on every dispatch.
+# Best-effort observability (GIL-atomic enough for tests and metrics, not a
+# synchronised billing counter): the service layer uses them to prove that
+# cache hits never reach a backend.
+_CALL_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def note_call(name: str) -> None:
+    """Record one dispatch to backend ``name`` (called by the engine)."""
+    _CALL_COUNTS[name] += 1
+
+
+def call_count(name: Optional[str] = None) -> int:
+    """Dispatches to backend ``name`` so far (all backends when None)."""
+    if name is None:
+        return sum(_CALL_COUNTS.values())
+    return _CALL_COUNTS[name]
+
+
+def reset_call_counts() -> None:
+    _CALL_COUNTS.clear()
 
 
 def get_backend(name: str) -> BackendSpec:

@@ -1,0 +1,39 @@
+"""`repro.service` — the batching, caching yCHG ROI service.
+
+`repro.engine.YCHGEngine` answers "how do I run the two-step algorithm on
+this array"; this package answers "how do I serve it": single-mask requests
+coalesce through a micro-batching scheduler into shape-bucketed, pad-to-
+bucket `(max_batch, side, side)` stacks (bounded compiled shapes), behind a
+content-addressed LRU result cache (a hit never invokes a backend), over a
+double-buffered dispatch loop (ingest of bucket n+1 overlaps device compute
+of bucket n).
+
+    from repro.service import ServiceConfig, YCHGService
+
+    with YCHGService(config=ServiceConfig(bucket_sides=(256,))) as svc:
+        fut = svc.submit(mask)          # Future[YCHGResult], non-blocking
+        result = fut.result()           # ready, device-resident, B=1 view
+        result2 = svc.analyze(mask)     # cache hit: same object back
+        print(svc.metrics())            # queue depth, p50/p95, hit rate, ...
+
+Results are bit-identical to ``engine.analyze(mask)`` for every request —
+through padding, bucketing, arrival order, duplicates, and caching
+(``tests/test_service.py`` holds the whole pipeline to that bar).
+"""
+
+from repro.service.batching import crop_result, pad_stack, pick_bucket_side
+from repro.service.cache import ResultCache, make_key
+from repro.service.metrics import MetricsRecorder, ServiceMetrics
+from repro.service.service import ServiceConfig, YCHGService
+
+__all__ = [
+    "MetricsRecorder",
+    "ResultCache",
+    "ServiceConfig",
+    "ServiceMetrics",
+    "YCHGService",
+    "crop_result",
+    "make_key",
+    "pad_stack",
+    "pick_bucket_side",
+]

@@ -1,0 +1,94 @@
+"""Content-addressed LRU result cache for the yCHG service.
+
+The key is a pure function of everything that determines the answer:
+
+  (blake2b(mask bytes), shape, dtype, resolved backend name, engine config)
+
+Shape and dtype are part of the key because the raw byte string does not
+determine them — the same 32 bytes are a (4, 8) or an (8, 4) mask, and an
+int8 view of a uint8 buffer is a different request even though the bytes
+match. Backend and config are part of the key because the service promises
+results identical to ``engine.analyze`` under *that* engine's policy; two
+services with different policies may share one cache without ever serving
+each other's entries.
+
+Values are device-resident ``YCHGResult`` objects (immutable pytrees), so a
+hit returns the exact cached object — no copy, no host round-trip, and
+crucially no backend invocation (``tests/test_service.py`` asserts this via
+the registry call counters).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from typing import Any, Hashable, Optional, Tuple
+
+import numpy as np
+
+CacheKey = Tuple[bytes, tuple, str, str, Any, Any]
+
+
+def make_key(mask: np.ndarray, backend: str, config: Hashable,
+             mesh: Optional[Hashable] = None) -> CacheKey:
+    """Content-address a host mask under a resolved (backend, config) policy.
+
+    ``mask`` must be C-contiguous (the service canonicalises on submit);
+    ``config`` any hashable policy object (``YCHGConfig`` is frozen);
+    ``mesh`` the engine's attached device mesh, if any — a meshed engine's
+    results carry a different device layout than an unmeshed one, so the
+    two must never serve each other's entries through a shared cache.
+    """
+    digest = hashlib.blake2b(mask.tobytes(), digest_size=16).digest()
+    return (digest, mask.shape, str(mask.dtype), backend, config, mesh)
+
+
+class ResultCache:
+    """Thread-safe LRU over :func:`make_key` keys with hit/miss counters.
+
+    ``capacity`` is an entry count; 0 disables the cache entirely (every
+    ``get`` is a miss, ``put`` is a no-op) so the service can run cacheless
+    without branching at every call site.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def get(self, key: CacheKey) -> Optional[Any]:
+        with self._lock:
+            try:
+                value = self._entries[key]
+            except KeyError:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return value
+
+    def put(self, key: CacheKey, value: Any) -> None:
+        if self.capacity == 0:
+            return
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()

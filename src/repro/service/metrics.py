@@ -1,0 +1,115 @@
+"""Service observability: a thread-safe recorder + a frozen snapshot.
+
+The recorder is written from two threads (submit side and the scheduler
+loop) under one lock; ``snapshot()`` is the only read surface and returns
+an immutable :class:`ServiceMetrics`, so callers never see half-updated
+counters. Latencies keep a bounded window (recent-traffic percentiles, not
+lifetime averages); Mpx/s is real request pixels served over the
+first-submit -> last-completion window, so idle time before traffic does
+not dilute it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceMetrics:
+    """One consistent point-in-time view of the service."""
+
+    submitted: int            # requests accepted by submit()
+    completed: int            # futures fulfilled (hits + computed)
+    cache_hits: int
+    cache_misses: int
+    coalesced: int            # duplicate-in-flight requests joined to a leader
+    batches: int              # bucket stacks dispatched to the engine
+    queue_depth: int          # waiting + pending-in-bucket at snapshot time
+    compiled_shapes: Tuple[Tuple[int, int, int], ...]  # distinct dispatched
+    hit_rate: float
+    p50_latency_ms: float     # submit -> result ready, recent window
+    p95_latency_ms: float
+    mpx_per_s: float          # real (unpadded) request pixels served
+    pad_fraction: float       # dispatched pixels that were padding
+    backend: str              # engine's resolved backend at snapshot time
+
+    @property
+    def n_compiled_shapes(self) -> int:
+        return len(self.compiled_shapes)
+
+
+class MetricsRecorder:
+    def __init__(self, latency_window: int = 4096):
+        self._lock = threading.Lock()
+        self.submitted = 0
+        self.completed = 0
+        self.coalesced = 0
+        self.batches = 0
+        self._latencies: "deque[float]" = deque(maxlen=latency_window)
+        self._shapes: set = set()
+        self._real_px = 0
+        self._dispatched_px = 0
+        self._served_px = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    def record_submit(self) -> None:
+        with self._lock:
+            self.submitted += 1
+            if self._t_first is None:
+                self._t_first = time.monotonic()
+
+    def record_coalesced(self) -> None:
+        with self._lock:
+            self.coalesced += 1
+
+    def record_batch(self, shape: Tuple[int, int, int], real_px: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self._shapes.add(shape)
+            self._real_px += real_px
+            self._dispatched_px += shape[0] * shape[1] * shape[2]
+
+    def record_complete(self, latency_s: float, pixels: int,
+                        n_requests: int = 1) -> None:
+        with self._lock:
+            self.completed += n_requests
+            self._served_px += pixels * n_requests
+            self._latencies.append(latency_s)
+            self._t_last = time.monotonic()
+
+    def snapshot(self, *, queue_depth: int, cache_hits: int,
+                 cache_misses: int, backend: str) -> ServiceMetrics:
+        with self._lock:
+            lat = np.asarray(self._latencies, np.float64) * 1e3
+            span = (
+                self._t_last - self._t_first
+                if self._t_first is not None and self._t_last is not None
+                else 0.0
+            )
+            total = cache_hits + cache_misses
+            return ServiceMetrics(
+                submitted=self.submitted,
+                completed=self.completed,
+                cache_hits=cache_hits,
+                cache_misses=cache_misses,
+                coalesced=self.coalesced,
+                batches=self.batches,
+                queue_depth=queue_depth,
+                compiled_shapes=tuple(sorted(self._shapes)),
+                hit_rate=cache_hits / total if total else 0.0,
+                p50_latency_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
+                p95_latency_ms=float(np.percentile(lat, 95)) if lat.size else 0.0,
+                mpx_per_s=self._served_px / span / 1e6 if span > 0 else 0.0,
+                pad_fraction=(
+                    1.0 - self._real_px / self._dispatched_px
+                    if self._dispatched_px else 0.0
+                ),
+                backend=backend,
+            )

@@ -1,0 +1,322 @@
+"""`YCHGService` — the batching, caching ROI service on top of `YCHGEngine`.
+
+Between "a request arrives" and "the engine runs" sit three layers, each
+independently testable:
+
+  1. a content-addressed LRU **result cache** (``service.cache``): a hit
+     fulfils the future immediately and never touches the backend;
+     duplicate masks *in flight* coalesce onto one leader request, so a
+     burst of identical masks costs one bucket slot;
+  2. a **micro-batching scheduler**: misses queue into per-``(side, dtype)``
+     shape buckets and flush when a bucket reaches ``max_batch`` or its
+     oldest request ages past ``max_delay_ms``; stacks are padded to the
+     bucket side AND to ``max_batch``, so the backend only ever compiles
+     one shape per bucket — traffic cannot trigger recompiles;
+  3. a **double-buffered dispatch loop**: up to ``inflight_buckets`` bucket
+     computations are outstanding at once, so the host->device transfer and
+     batching work for bucket n+1 overlap the device compute of bucket n
+     (the same discipline ``YCHGEngine.analyze_stream`` now applies per
+     item). Completion blocks on readiness, fans per-request cropped
+     results out to futures, and records true submit->ready latency.
+
+One scheduler thread owns layers 2-3; ``submit`` only hashes, checks the
+cache, and enqueues, so the caller's thread never blocks on device work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.engine import YCHGEngine, YCHGResult
+from repro.service.batching import (
+    Bucket,
+    crop_result,
+    pad_stack,
+    pick_bucket_side,
+)
+from repro.service.cache import CacheKey, ResultCache, make_key
+from repro.service.metrics import MetricsRecorder, ServiceMetrics
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Frozen service policy knobs.
+
+    bucket_sides      ascending ladder of square bucket sides; a mask maps
+                      to the smallest side holding it and anything past the
+                      top is rejected, so compiled shapes stay bounded at
+                      one (max_batch, side, side) per (side, dtype) seen.
+    max_batch         bucket flush size; batches are padded (blank images)
+                      to exactly this, trading pad compute for a fixed
+                      compiled shape per bucket.
+    max_delay_ms      micro-batching window: the longest a queued request
+                      waits for batch-mates before a partial flush.
+    cache_entries     LRU capacity (0 disables caching).
+    inflight_buckets  max outstanding bucket computations (2 = classic
+                      double buffering: ingest n+1 overlaps compute n).
+    latency_window    number of recent latencies kept for p50/p95.
+    """
+
+    bucket_sides: Tuple[int, ...] = (128, 256, 512, 1024)
+    max_batch: int = 8
+    max_delay_ms: float = 2.0
+    cache_entries: int = 1024
+    inflight_buckets: int = 2
+    latency_window: int = 4096
+
+    def __post_init__(self):
+        if not self.bucket_sides or list(self.bucket_sides) != sorted(
+            set(self.bucket_sides)
+        ):
+            raise ValueError(
+                f"bucket_sides must be a non-empty ascending ladder, "
+                f"got {self.bucket_sides}"
+            )
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.inflight_buckets < 1:
+            raise ValueError(
+                f"inflight_buckets must be >= 1, got {self.inflight_buckets}"
+            )
+
+
+@dataclasses.dataclass
+class _Request:
+    mask: np.ndarray          # C-contiguous host mask, native shape
+    key: CacheKey
+    bucket: Bucket
+    t_submit: float
+    futures: List[Future]     # leader's future + any coalesced duplicates
+
+
+@dataclasses.dataclass
+class _Job:
+    requests: List[_Request]
+    result: YCHGResult        # dispatched, possibly not yet ready
+
+
+_SHUTDOWN = object()
+
+
+class YCHGService:
+    """Single-mask request front end over a shared :class:`YCHGEngine`.
+
+    ``submit(mask)`` returns a ``concurrent.futures.Future`` resolving to
+    the B=1 device-resident ``YCHGResult`` that ``engine.analyze(mask)``
+    would produce — bit-identical, including through bucket padding and
+    result caching. ``analyze(mask)`` is the blocking convenience form.
+    Use as a context manager, or call ``close()`` to drain and stop.
+
+    Pass ``cache`` to share one :class:`ResultCache` between services;
+    keys include each engine's resolved backend and config, so sharing is
+    always safe (policies never serve each other's entries).
+    """
+
+    def __init__(self, engine: Optional[YCHGEngine] = None,
+                 config: ServiceConfig = ServiceConfig(), *,
+                 cache: Optional[ResultCache] = None):
+        self.engine = engine if engine is not None else YCHGEngine()
+        self.config = config
+        self.cache = cache if cache is not None else ResultCache(
+            config.cache_entries)
+        self._recorder = MetricsRecorder(config.latency_window)
+        self._q: "queue.Queue" = queue.Queue()
+        self._pending: Dict[Bucket, List[_Request]] = {}
+        self._inflight: "deque[_Job]" = deque()
+        self._leaders: Dict[CacheKey, _Request] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._loop, name="ychg-service", daemon=True)
+        self._thread.start()
+
+    # ------------------------------------------------------------ requests
+
+    def submit(self, mask: Any) -> "Future[YCHGResult]":
+        """Enqueue one (H, W) mask; the future resolves to a ready result."""
+        if self._closed:
+            raise RuntimeError("service is closed")
+        a = np.ascontiguousarray(np.asarray(mask))
+        if a.ndim != 2:
+            raise ValueError(f"submit expects an (H, W) mask, got {a.shape}")
+        side = pick_bucket_side(a.shape, self.config.bucket_sides)
+        key = make_key(a, self.engine.resolve_backend(), self.engine.config,
+                       self.engine.mesh)
+        self._recorder.record_submit()
+        fut: "Future[YCHGResult]" = Future()
+        cached = self.cache.get(key)
+        if cached is not None:
+            self._recorder.record_complete(0.0, a.size)
+            fut.set_result(cached)
+            return fut
+        # registration and enqueue share the close() lock: once close() has
+        # put the shutdown sentinel (under this lock), no request can land
+        # behind it in the queue and silently never resolve
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            leader = self._leaders.get(key)
+            if leader is not None:
+                leader.futures.append(fut)
+                self._recorder.record_coalesced()
+                return fut
+            req = _Request(mask=a, key=key, bucket=(side, str(a.dtype)),
+                           t_submit=time.monotonic(), futures=[fut])
+            self._leaders[key] = req
+            self._q.put(req)
+        return fut
+
+    def analyze(self, mask: Any, timeout: Optional[float] = None) -> YCHGResult:
+        """Blocking convenience: ``submit(mask).result(timeout)``."""
+        return self.submit(mask).result(timeout)
+
+    def metrics(self) -> ServiceMetrics:
+        # _pending insert/pop happen on the scheduler thread under the same
+        # lock, so this iteration cannot see the dict resize mid-walk
+        with self._lock:
+            pending = sum(len(v) for v in self._pending.values())
+        depth = self._q.qsize() + pending
+        return self._recorder.snapshot(
+            queue_depth=depth,
+            cache_hits=self.cache.hits,
+            cache_misses=self.cache.misses,
+            backend=self.engine.resolve_backend(),
+        )
+
+    # ----------------------------------------------------------- lifecycle
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Drain queued work, stop the scheduler. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(_SHUTDOWN)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "YCHGService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------ scheduler loop
+
+    def _loop(self) -> None:
+        delay = self.config.max_delay_ms / 1e3
+        while True:
+            # fully idle: retire outstanding computations before sleeping so
+            # trailing requests are not held hostage to the next arrival
+            if self._inflight and not self._pending and self._q.empty():
+                while self._inflight:
+                    self._complete(self._inflight.popleft())
+            timeout = 0.1
+            if self._pending:
+                oldest = min(r[0].t_submit for r in self._pending.values())
+                timeout = max(0.0, oldest + delay - time.monotonic())
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            # drain the whole backlog before any age-based flush: under a
+            # burst, queued requests are older than max_delay_ms by the time
+            # they are seen, and flushing per item would degenerate to one
+            # batch per request exactly when batching matters most
+            shutdown = False
+            while item is not None:
+                if item is _SHUTDOWN:
+                    shutdown = True
+                    break
+                with self._lock:
+                    reqs = self._pending.setdefault(item.bucket, [])
+                reqs.append(item)
+                if len(reqs) >= self.config.max_batch:
+                    self._flush(item.bucket)
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    item = None
+            if shutdown:
+                break
+            now = time.monotonic()
+            for bucket in [
+                b for b, rs in self._pending.items()
+                if now - rs[0].t_submit >= delay
+            ]:
+                self._flush(bucket)
+        # drain on shutdown: flush every partial bucket, retire every job
+        for bucket in list(self._pending):
+            self._flush(bucket)
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+
+    def _flush(self, bucket: Bucket) -> None:
+        """Dispatch one bucket; keep at most ``inflight_buckets`` outstanding."""
+        with self._lock:
+            requests = self._pending.pop(bucket)
+        side, dtype = bucket
+        try:
+            stack = pad_stack([r.mask for r in requests], side,
+                              self.config.max_batch, np.dtype(dtype))
+            # the host->device transfer of THIS bucket starts here, while
+            # the previous bucket's computation is still in flight
+            x = jax.device_put(stack)
+            result = self.engine.analyze_batch(x)  # async dispatch
+        except Exception as e:  # config/backend errors -> fail these futures
+            self._fail(requests, e)
+            return
+        self._recorder.record_batch(
+            stack.shape, sum(r.mask.size for r in requests))
+        self._inflight.append(_Job(requests, result))
+        while len(self._inflight) >= self.config.inflight_buckets:
+            self._complete(self._inflight.popleft())
+
+    def _complete(self, job: _Job) -> None:
+        # any escape here would kill the scheduler thread and hang every
+        # outstanding future, so the whole fan-out (not just the device
+        # wait) routes failures to _fail — which skips already-fulfilled
+        # futures, so a partial fan-out fails only the requests it missed
+        try:
+            job.result.block_until_ready()
+            now = time.monotonic()
+            for row, req in enumerate(job.requests):
+                out = crop_result(job.result, row, req.mask.shape[1])
+                with self._lock:
+                    self._leaders.pop(req.key, None)
+                self.cache.put(req.key, out)
+                self._recorder.record_complete(
+                    now - req.t_submit, req.mask.size, len(req.futures))
+                for fut in req.futures:
+                    _fulfil(fut, out)
+        except Exception as e:
+            self._fail(job.requests, e)
+
+    def _fail(self, requests: List[_Request], exc: Exception) -> None:
+        for req in requests:
+            with self._lock:
+                self._leaders.pop(req.key, None)
+            for fut in req.futures:
+                if not fut.done() and fut.set_running_or_notify_cancel():
+                    fut.set_exception(exc)
+
+
+def _fulfil(fut: Future, value: Any) -> None:
+    """Resolve a future the client may have cancelled in the meantime.
+
+    ``submit`` hands out plain ``Future``s that are never marked running,
+    so a client-side ``cancel()`` always succeeds; an unguarded
+    ``set_result`` would then raise ``InvalidStateError`` inside the
+    scheduler thread and kill it — hanging every other outstanding request.
+    """
+    if fut.set_running_or_notify_cancel():
+        fut.set_result(value)
