@@ -46,18 +46,27 @@ def main():
     # Serving: the same computation behind the production front end.
     # YCHGService micro-batches single-mask requests into shape-bucketed
     # stacks on a shared engine and caches results by content — a repeated
-    # mask is served from the cache without touching any backend.
-    with YCHGService(config=ServiceConfig(bucket_sides=(512,),
-                                          max_batch=4)) as svc:
+    # mask is served from the cache without touching any backend. Flushes
+    # pad to the power-of-two sub-batch covering their occupancy (a lone
+    # request dispatches a (1, 512, 512) stack, not (4, 512, 512)), and
+    # max_queue_depth bounds admitted work: past it, submit blocks
+    # (overload_policy="block", backpressure) or raises ServiceOverloaded
+    # ("shed") — shed/blocked counts land in ServiceMetrics.
+    cfg = ServiceConfig(bucket_sides=(512,), max_batch=4,
+                        max_queue_depth=64, overload_policy="block")
+    with YCHGService(config=cfg) as svc:
         fresh = svc.analyze(img)            # computed (same result as above)
         repeat = svc.analyze(img.copy())    # same bytes -> cache hit
         assert repeat is fresh              # the cached object itself
         assert np.array_equal(np.asarray(fresh.n_hyperedges),
                               [out["n_hyperedges"]])
         m = svc.metrics()
-        print(f"service: {m.completed} served on backend={m.backend!r}, "
-              f"cache hit rate {m.hit_rate:.0%}, "
-              f"p95 {m.p95_latency_ms:.1f}ms")
+        print(f"service: {m.completed} served "
+              f"({m.completed_from_cache} from cache) on "
+              f"backend={m.backend!r}, hit rate {m.hit_rate:.0%}, "
+              f"p95 {m.p95_latency_ms:.1f}ms, "
+              f"dispatched shapes {m.compiled_shapes}, "
+              f"shed {m.shed} / blocked {m.blocked}")
 
 
 if __name__ == "__main__":

@@ -41,10 +41,13 @@ def serve_ychg(args):
     requests batch through YCHGService -> YCHGEngine (not the legacy
     core.ychg.analyze_jit call). Three timed passes separate the costs:
     cold (includes backend compile), warm (steady-state compute on fresh
-    masks), cached (repeat traffic served from the result cache)."""
+    masks), cached (repeat traffic served from the result cache). With
+    --overload, a fourth pass offers a burst to a bounded-queue service
+    (overload_policy="shed") and reports the shed rate — the admission
+    control path CI smoke-checks."""
     from repro.data import modis
     from repro.engine import YCHGEngine
-    from repro.service import ServiceConfig, YCHGService
+    from repro.service import ServiceConfig, ServiceOverloaded, YCHGService
 
     def timed_pass(svc, masks):
         t0 = time.perf_counter()
@@ -73,8 +76,35 @@ def serve_ychg(args):
     print(f"  cached{t_cached * 1e3:8.1f}ms "
           f"({px / t_cached / 1e6:.0f} Mpx/s, hit rate {cached_hit_rate:.0%})")
     print(f"  p50 {m.p50_latency_ms:.1f}ms p95 {m.p95_latency_ms:.1f}ms over "
-          f"{m.completed} requests in {m.batches} device batches; "
-          f"hyperedges per tile: {edges}")
+          f"{m.completed} requests ({m.completed_from_cache} from cache) "
+          f"in {m.batches} device batches; hyperedges per tile: {edges}")
+    if args.overload:
+        # admission control under a deliberate burst: a bounded queue with
+        # overload_policy="shed" fails the excess fast instead of letting
+        # latency balloon. The long delay window holds the two admitted
+        # requests pending, so the shed count is deterministic.
+        n_burst = 4 * args.batch
+        burst = [modis.snowfield(args.res, seed=10_000 + s)
+                 for s in range(n_burst)]
+        ocfg = ServiceConfig(bucket_sides=(args.res,), max_batch=args.batch,
+                             max_delay_ms=200.0, max_queue_depth=2,
+                             overload_policy="shed")
+        shed, futures = 0, []
+        with YCHGService(engine, ocfg) as osvc:
+            for b in burst:
+                try:
+                    futures.append(osvc.submit(b))
+                except ServiceOverloaded:
+                    shed += 1
+            om = osvc.metrics()
+        for f in futures:
+            f.result(timeout=600)   # admitted requests still resolve
+        print(f"  overload burst of {n_burst} at max_queue_depth=2: "
+              f"{len(futures)} admitted, {shed} shed "
+              f"(shed rate {shed / n_burst:.0%})")
+        if shed == 0 or om.shed != shed:
+            raise SystemExit(
+                "overload pass failed: admission control shed nothing")
 
 
 def main():
@@ -86,6 +116,9 @@ def main():
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--res", type=int, default=1024)
+    ap.add_argument("--overload", action="store_true",
+                    help="ychg only: add a bounded-queue overload pass and "
+                         "fail unless admission control sheds")
     args = ap.parse_args()
     if args.workload == "ychg":
         serve_ychg(args)

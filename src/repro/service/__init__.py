@@ -2,11 +2,16 @@
 
 `repro.engine.YCHGEngine` answers "how do I run the two-step algorithm on
 this array"; this package answers "how do I serve it": single-mask requests
-coalesce through a micro-batching scheduler into shape-bucketed, pad-to-
-bucket `(max_batch, side, side)` stacks (bounded compiled shapes), behind a
+coalesce through a micro-batching scheduler into shape-bucketed stacks
+padded to a power-of-two **sub-batch ladder** (a lone request pays for one
+image, not ``max_batch``; compiled shapes stay bounded at
+``len(bucket_sides) * (log2(max_batch) + 1)`` per dtype), behind a
 content-addressed LRU result cache (a hit never invokes a backend), over a
 double-buffered dispatch loop (ingest of bucket n+1 overlaps device compute
-of bucket n).
+of bucket n). ``max_queue_depth`` + ``overload_policy`` add admission
+control: past the bound, ``submit`` blocks (backpressure) or raises
+:class:`ServiceOverloaded` (shed), with shed/blocked counters in
+:class:`ServiceMetrics`.
 
     from repro.service import ServiceConfig, YCHGService
 
@@ -18,22 +23,36 @@ of bucket n).
 
 Results are bit-identical to ``engine.analyze(mask)`` for every request —
 through padding, bucketing, arrival order, duplicates, and caching
-(``tests/test_service.py`` holds the whole pipeline to that bar).
+(``tests/test_service.py`` holds the whole pipeline to that bar; the
+scheduler's policy logic is additionally unit-tested engine-free in
+``tests/test_scheduler.py``).
 """
 
 from repro.service.batching import crop_result, pad_stack, pick_bucket_side
 from repro.service.cache import ResultCache, make_key
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
+from repro.service.scheduler import (
+    Scheduler,
+    SchedulerConfig,
+    ServiceOverloaded,
+    pick_sub_batch,
+    sub_batch_ladder,
+)
 from repro.service.service import ServiceConfig, YCHGService
 
 __all__ = [
     "MetricsRecorder",
     "ResultCache",
+    "Scheduler",
+    "SchedulerConfig",
     "ServiceConfig",
     "ServiceMetrics",
+    "ServiceOverloaded",
     "YCHGService",
     "crop_result",
     "make_key",
     "pad_stack",
     "pick_bucket_side",
+    "pick_sub_batch",
+    "sub_batch_ladder",
 ]

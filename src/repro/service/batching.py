@@ -2,10 +2,11 @@
 
 The service never dispatches a request's native shape. Every mask is padded
 (bottom/right, with zeros) into a square bucket from a fixed ladder, and
-every batch is padded (blank trailing images) to the configured
-``max_batch``, so the set of shapes the backend ever compiles for is
-``{(max_batch, side, side) per (side, dtype)}`` — traffic cannot trigger
-recompiles, only config can.
+every batch is padded (blank trailing images) to the power-of-two sub-batch
+rung covering its occupancy (``scheduler.pick_sub_batch``, capped at
+``max_batch``), so the set of shapes the backend ever compiles for is
+``{(b, side, side) : b in sub_batch_ladder(max_batch), (side, dtype) seen}``
+— traffic cannot trigger recompiles, only config can.
 
 Why crop-back is bit-exact (this is the invariant the parity suite pins):
 every yCHG output is per-*column* — ``runs[j]`` counts rising edges down

@@ -4,7 +4,10 @@ The recorder is written from two threads (submit side and the scheduler
 loop) under one lock; ``snapshot()`` is the only read surface and returns
 an immutable :class:`ServiceMetrics`, so callers never see half-updated
 counters. Latencies keep a bounded window (recent-traffic percentiles, not
-lifetime averages); Mpx/s is real request pixels served over the
+lifetime averages) and hold *compute* completions only — cache hits are
+counted in ``completed_from_cache`` but never push their ~0 ms samples
+into the window, so p50/p95 describe what a miss actually costs instead of
+averaging in the hit rate. Mpx/s is real request pixels served over the
 first-submit -> last-completion window, so idle time before traffic does
 not dilute it.
 """
@@ -26,14 +29,17 @@ class ServiceMetrics:
 
     submitted: int            # requests accepted by submit()
     completed: int            # futures fulfilled (hits + computed)
+    completed_from_cache: int  # of those, served straight from the cache
     cache_hits: int
     cache_misses: int
     coalesced: int            # duplicate-in-flight requests joined to a leader
     batches: int              # bucket stacks dispatched to the engine
     queue_depth: int          # waiting + pending-in-bucket at snapshot time
+    shed: int                 # submits rejected with ServiceOverloaded
+    blocked: int              # submits that waited at the admission gate
     compiled_shapes: Tuple[Tuple[int, int, int], ...]  # distinct dispatched
     hit_rate: float
-    p50_latency_ms: float     # submit -> result ready, recent window
+    p50_latency_ms: float     # submit -> result ready, compute misses only
     p95_latency_ms: float
     mpx_per_s: float          # real (unpadded) request pixels served
     pad_fraction: float       # dispatched pixels that were padding
@@ -49,6 +55,7 @@ class MetricsRecorder:
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
+        self.completed_from_cache = 0
         self.coalesced = 0
         self.batches = 0
         self._latencies: "deque[float]" = deque(maxlen=latency_window)
@@ -69,6 +76,25 @@ class MetricsRecorder:
         with self._lock:
             self.coalesced += 1
 
+    def record_coalesced_rejected(self, n: int) -> None:
+        """Riders that coalesced onto a leader which was then shed (or hit
+        close()) were never accepted: back their submit/coalesce counts
+        out, so submitted - completed keeps tracking real outstanding
+        work."""
+        with self._lock:
+            self.submitted -= n
+            self.coalesced -= n
+
+    def record_cache_hit(self, pixels: int) -> None:
+        """A request served from the cache: counts toward completions and
+        served pixels, but stays OUT of the latency window — a flood of
+        ~0 ms hits would otherwise deflate p50/p95 for compute traffic."""
+        with self._lock:
+            self.completed += 1
+            self.completed_from_cache += 1
+            self._served_px += pixels
+            self._t_last = time.monotonic()
+
     def record_batch(self, shape: Tuple[int, int, int], real_px: int) -> None:
         with self._lock:
             self.batches += 1
@@ -85,7 +111,8 @@ class MetricsRecorder:
             self._t_last = time.monotonic()
 
     def snapshot(self, *, queue_depth: int, cache_hits: int,
-                 cache_misses: int, backend: str) -> ServiceMetrics:
+                 cache_misses: int, backend: str, shed: int = 0,
+                 blocked: int = 0) -> ServiceMetrics:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64) * 1e3
             span = (
@@ -97,11 +124,14 @@ class MetricsRecorder:
             return ServiceMetrics(
                 submitted=self.submitted,
                 completed=self.completed,
+                completed_from_cache=self.completed_from_cache,
                 cache_hits=cache_hits,
                 cache_misses=cache_misses,
                 coalesced=self.coalesced,
                 batches=self.batches,
                 queue_depth=queue_depth,
+                shed=shed,
+                blocked=blocked,
                 compiled_shapes=tuple(sorted(self._shapes)),
                 hit_rate=cache_hits / total if total else 0.0,
                 p50_latency_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,

@@ -1,0 +1,363 @@
+"""The service's dispatch scheduler, extracted and engine-free.
+
+One :class:`Scheduler` thread owns the whole path between "a request was
+admitted" and "its job retired": per-bucket pending queues, age/size flush,
+the bounded in-flight window, and admission control. It knows nothing about
+masks, engines, caches, or futures — callers hand it request objects (any
+object with ``.bucket`` and ``.t_submit``) plus three callbacks:
+
+  dispatch(bucket, requests, batch_size) -> handle
+      start the batch computation (asynchronously if possible) and return
+      an opaque job handle; raising fails exactly those requests;
+  complete(handle, requests)
+      block until the job is ready and fan results out; called on the
+      scheduler thread, never with the scheduler's lock held;
+  fail(requests, exc)
+      route an error to every request in the slice.
+
+which is what makes the policy logic unit-testable with a fake dispatch
+function (`tests/test_scheduler.py`) — no device, no engine, no cache.
+
+Two policies live here:
+
+**Batch-size sub-buckets.** A flush is padded to the smallest power of two
+>= its occupancy, capped at ``max_batch`` (:func:`pick_sub_batch`), instead
+of always to ``max_batch``: a lone request at low traffic no longer pays
+for ``max_batch - 1`` blank images (~8x less pad compute at B=1 with the
+default ladder), while compiled shapes stay bounded — the batch dimension
+only ever takes the :func:`sub_batch_ladder` values, so the shape budget is
+``len(bucket_sides) * (log2(max_batch) + 1)`` per dtype.
+
+**Admission control.** ``max_queue_depth`` bounds admitted-but-unretired
+requests. At the bound, ``submit`` either blocks until a retirement frees a
+slot (``overload_policy="block"``: backpressure, the producer slows to the
+service's pace) or raises :class:`ServiceOverloaded` immediately
+(``"shed"``: fail fast, the producer handles the rejection). Shed and
+blocked counts are exposed for the service's metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
+
+
+class ServiceOverloaded(RuntimeError):
+    """Submit rejected: the queue is at ``max_queue_depth`` under
+    ``overload_policy="shed"``. Typed so producers can catch exactly the
+    overload case (retry later, degrade, load-shed upstream) without
+    swallowing real errors."""
+
+
+def pick_sub_batch(occupancy: int, max_batch: int) -> int:
+    """Batch size for a flush: smallest power of two >= ``occupancy``,
+    capped at ``max_batch`` (so a non-power-of-two ``max_batch`` is itself
+    the top rung)."""
+    if occupancy < 1:
+        raise ValueError(f"occupancy must be >= 1, got {occupancy}")
+    b = 1
+    while b < occupancy:
+        b *= 2
+    return min(b, max_batch)
+
+
+def sub_batch_ladder(max_batch: int) -> Tuple[int, ...]:
+    """Every batch size :func:`pick_sub_batch` can return: the powers of
+    two below ``max_batch``, then ``max_batch`` — ``log2(max_batch) + 1``
+    rungs, the per-(side, dtype) compiled-shape budget."""
+    rungs: List[int] = []
+    b = 1
+    while b < max_batch:
+        rungs.append(b)
+        b *= 2
+    rungs.append(max_batch)
+    return tuple(rungs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Scheduler policy knobs (the service derives this from ServiceConfig).
+
+    max_batch        bucket flush size and the sub-batch ladder's cap.
+    max_delay_ms     micro-batching window before a partial flush.
+    inflight_jobs    dispatched jobs kept outstanding after a flush — N
+                     means N (a >= retire bound made it behave as N-1, so
+                     double buffering never overlapped two computations).
+                     A flush dispatches before trimming, so N+1 jobs are
+                     briefly in flight while the oldest retires: a ready
+                     batch is never blocked behind an old computation.
+    max_queue_depth  bound on admitted-but-unretired requests; None = no
+                     admission control.
+    overload_policy  what submit does at the bound: "block" (wait for a
+                     slot) or "shed" (raise ServiceOverloaded).
+    sub_batches      pad flushes to the power-of-two ladder (True) or
+                     always to max_batch (False, the pre-ladder behaviour,
+                     kept for apples-to-apples benchmarking).
+    """
+
+    max_batch: int = 8
+    max_delay_ms: float = 2.0
+    inflight_jobs: int = 2
+    max_queue_depth: Optional[int] = None
+    overload_policy: str = "block"
+    sub_batches: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.inflight_jobs < 1:
+            raise ValueError(
+                f"inflight_jobs must be >= 1, got {self.inflight_jobs}")
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be >= 1 or None, "
+                f"got {self.max_queue_depth}")
+        if self.overload_policy not in ("block", "shed"):
+            raise ValueError(
+                f"overload_policy must be 'block' or 'shed', "
+                f"got {self.overload_policy!r}")
+
+
+@dataclasses.dataclass
+class _Job:
+    requests: List[Any]
+    handle: Any               # whatever dispatch() returned
+
+
+_SHUTDOWN = object()
+
+
+class Scheduler:
+    """Bucketed micro-batching dispatch loop with admission control.
+
+    ``submit(request)`` admits (or blocks/sheds) and enqueues; one daemon
+    thread drains the queue into per-bucket pending lists, flushes on size
+    or age, keeps at most ``inflight_jobs`` dispatched jobs outstanding,
+    and retires jobs through the ``complete`` callback. ``close()`` drains
+    everything already admitted, then stops the thread.
+
+    Pass ``autostart=False`` to enqueue before the loop runs — tests use
+    this to pin exact ingest orderings without sleeps.
+    """
+
+    def __init__(self, config: SchedulerConfig,
+                 dispatch: Callable[[Hashable, List[Any], int], Any],
+                 complete: Callable[[Any, List[Any]], None],
+                 fail: Callable[[List[Any], Exception], None],
+                 *, autostart: bool = True):
+        self.config = config
+        self._dispatch = dispatch
+        self._complete = complete
+        self._fail = fail
+        self._q: "queue.Queue" = queue.Queue()
+        self._pending: Dict[Hashable, List[Any]] = {}
+        self._inflight: "Deque[_Job]" = deque()   # scheduler thread only
+        self._cond = threading.Condition()
+        self._depth = 0       # admitted and not yet retired
+        self._shed = 0
+        self._blocked = 0
+        self._closed = False
+        self._started = False
+        self._thread = threading.Thread(
+            target=self._loop, name="ychg-scheduler", daemon=True)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, request: Any) -> None:
+        """Admit and enqueue one request; called from any thread.
+
+        At ``max_queue_depth``: blocks until a retirement frees a slot
+        (policy "block") or raises :class:`ServiceOverloaded` (policy
+        "shed"). Raises ``RuntimeError`` once closed — including for a
+        blocked submitter woken by ``close()``.
+        """
+        bound = self.config.max_queue_depth
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if bound is not None and self._depth >= bound:
+                if self.config.overload_policy == "shed":
+                    self._shed += 1
+                    raise ServiceOverloaded(
+                        f"queue depth {self._depth} at max_queue_depth="
+                        f"{bound} (overload_policy='shed')")
+                self._blocked += 1
+                while self._depth >= bound and not self._closed:
+                    self._cond.wait()
+                if self._closed:
+                    raise RuntimeError("scheduler is closed")
+            self._depth += 1
+            # enqueue under the lock: close() also puts its sentinel under
+            # the lock, so an admitted request can never land behind the
+            # sentinel and silently never resolve
+            self._q.put(request)
+
+    # ------------------------------------------------------------- introspection
+
+    @property
+    def shed(self) -> int:
+        """Submits rejected with ServiceOverloaded (policy "shed")."""
+        with self._cond:
+            return self._shed
+
+    @property
+    def blocked(self) -> int:
+        """Submits that had to wait for a slot (policy "block")."""
+        with self._cond:
+            return self._blocked
+
+    @property
+    def depth(self) -> int:
+        """Admitted-but-unretired requests (what max_queue_depth bounds)."""
+        with self._cond:
+            return self._depth
+
+    def backlog(self) -> int:
+        """Requests waiting to be dispatched: queued + pending-in-bucket
+        (excludes in-flight jobs, which are already on the device)."""
+        with self._cond:
+            return self._q.qsize() + sum(
+                len(v) for v in self._pending.values())
+
+    # ------------------------------------------------------------- lifecycle
+
+    def start(self) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            self._started = True
+        self._thread.start()
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Drain admitted work, stop the loop, wake blocked submitters.
+
+        If the loop thread was never started (``autostart=False``), the
+        drain runs inline on the caller — an admitted request is never
+        silently dropped."""
+        with self._cond:
+            first = not self._closed
+            if first:
+                self._closed = True
+                self._q.put(_SHUTDOWN)
+            self._cond.notify_all()
+            started = self._started
+        if started:
+            self._thread.join(timeout)
+        elif first:
+            self._drain()
+
+    # --------------------------------------------------------------- the loop
+
+    def _loop(self) -> None:
+        delay = self.config.max_delay_ms / 1e3
+        while True:
+            with self._cond:
+                oldest = (min(rs[0].t_submit for rs in self._pending.values())
+                          if self._pending else None)
+            if oldest is not None:
+                timeout = max(0.0, oldest + delay - time.monotonic())
+            elif self._inflight:
+                timeout = 0.0   # work outstanding: poll, don't sleep
+            else:
+                timeout = 0.1
+            try:
+                item = self._q.get(timeout=timeout)
+            except queue.Empty:
+                item = None
+            # drain the whole backlog before any age-based flush: under a
+            # burst, queued requests are older than max_delay_ms by the
+            # time they are seen, and flushing per item would degenerate to
+            # one batch per request exactly when batching matters most
+            shutdown = False
+            ingested = item is not None
+            while item is not None:
+                if item is _SHUTDOWN:
+                    shutdown = True
+                    break
+                with self._cond:
+                    reqs = self._pending.setdefault(item.bucket, [])
+                    reqs.append(item)
+                    full = len(reqs) >= self.config.max_batch
+                if full:
+                    self._flush(item.bucket)
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    item = None
+            if shutdown:
+                break
+            now = time.monotonic()
+            with self._cond:
+                due = [b for b, rs in self._pending.items()
+                       if now - rs[0].t_submit >= delay]
+            for bucket in due:
+                self._flush(bucket)
+            # idle: retire ONE job, then loop back to poll the queue, so a
+            # request arriving mid-drain is bucketed after at most one
+            # completion instead of waiting behind every outstanding job
+            if not ingested and oldest is None and not due and self._inflight:
+                self._retire_one()
+        self._drain()
+
+    def _drain(self) -> None:
+        """Shutdown drain: ingest everything still admitted (flushing
+        buckets that fill, so no flush ever exceeds ``max_batch``), flush
+        every partial bucket, retire every in-flight job."""
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is _SHUTDOWN:
+                continue
+            with self._cond:
+                reqs = self._pending.setdefault(item.bucket, [])
+                reqs.append(item)
+                full = len(reqs) >= self.config.max_batch
+            if full:
+                self._flush(item.bucket)
+        with self._cond:
+            buckets = list(self._pending)
+        for bucket in buckets:
+            self._flush(bucket)
+        while self._inflight:
+            self._retire_one()
+
+    def _flush(self, bucket: Hashable) -> None:
+        """Dispatch one bucket at its sub-batch size; keep at most
+        ``inflight_jobs`` outstanding."""
+        with self._cond:
+            requests = self._pending.pop(bucket)
+        batch = (pick_sub_batch(len(requests), self.config.max_batch)
+                 if self.config.sub_batches else self.config.max_batch)
+        try:
+            handle = self._dispatch(bucket, requests, batch)
+        except Exception as e:   # config/backend errors -> fail this slice
+            self._fail(requests, e)
+            self._release(len(requests))
+            return
+        self._inflight.append(_Job(requests, handle))
+        # strictly past the bound: inflight_jobs means N outstanding, not
+        # N-1 (a >= here silently halved the double-buffering window)
+        while len(self._inflight) > self.config.inflight_jobs:
+            self._retire_one()
+
+    def _retire_one(self) -> None:
+        job = self._inflight.popleft()
+        try:
+            self._complete(job.handle, job.requests)
+        except Exception as e:   # a raising complete() must not kill the loop
+            self._fail(job.requests, e)
+        finally:
+            self._release(len(job.requests))
+
+    def _release(self, n: int) -> None:
+        with self._cond:
+            self._depth -= n
+            self._cond.notify_all()

@@ -6,30 +6,38 @@ independently testable:
   1. a content-addressed LRU **result cache** (``service.cache``): a hit
      fulfils the future immediately and never touches the backend;
      duplicate masks *in flight* coalesce onto one leader request, so a
-     burst of identical masks costs one bucket slot;
-  2. a **micro-batching scheduler**: misses queue into per-``(side, dtype)``
-     shape buckets and flush when a bucket reaches ``max_batch`` or its
-     oldest request ages past ``max_delay_ms``; stacks are padded to the
-     bucket side AND to ``max_batch``, so the backend only ever compiles
-     one shape per bucket — traffic cannot trigger recompiles;
+     burst of identical masks costs one bucket slot. The cache check, the
+     coalesce, and the completion-side ``cache.put`` + leader retirement
+     all run under one lock, so a duplicate either joins the leader or
+     hits the cache — there is no window where it can re-dispatch;
+  2. a **micro-batching scheduler** (:mod:`repro.service.scheduler`):
+     misses queue into per-``(side, dtype)`` shape buckets and flush when
+     a bucket reaches ``max_batch`` or its oldest request ages past
+     ``max_delay_ms``; stacks are padded to the bucket side AND to the
+     power-of-two **sub-batch ladder** rung covering the flush occupancy,
+     so a lone request pays for one image, not ``max_batch``, while the
+     compiled-shape budget stays ``len(bucket_sides) * (log2(max_batch)
+     + 1)`` per dtype. ``max_queue_depth`` + ``overload_policy`` add
+     admission control: past the bound, ``submit`` blocks (backpressure)
+     or raises :class:`ServiceOverloaded` (shed);
   3. a **double-buffered dispatch loop**: up to ``inflight_buckets`` bucket
      computations are outstanding at once, so the host->device transfer and
      batching work for bucket n+1 overlap the device compute of bucket n
      (the same discipline ``YCHGEngine.analyze_stream`` now applies per
      item). Completion blocks on readiness, fans per-request cropped
-     results out to futures, and records true submit->ready latency.
+     results out to futures, and records true submit->ready latency —
+     cache hits are counted separately and never enter the latency window.
 
-One scheduler thread owns layers 2-3; ``submit`` only hashes, checks the
-cache, and enqueues, so the caller's thread never blocks on device work.
+The scheduler thread owns layers 2-3; ``submit`` only hashes, checks the
+cache, and enqueues, so the caller's thread never blocks on device work
+(unless backpressure deliberately blocks it at ``max_queue_depth``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -46,6 +54,11 @@ from repro.service.batching import (
 )
 from repro.service.cache import CacheKey, ResultCache, make_key
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
+from repro.service.scheduler import (
+    Scheduler,
+    SchedulerConfig,
+    ServiceOverloaded,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,17 +67,36 @@ class ServiceConfig:
 
     bucket_sides      ascending ladder of square bucket sides; a mask maps
                       to the smallest side holding it and anything past the
-                      top is rejected, so compiled shapes stay bounded at
-                      one (max_batch, side, side) per (side, dtype) seen.
-    max_batch         bucket flush size; batches are padded (blank images)
-                      to exactly this, trading pad compute for a fixed
-                      compiled shape per bucket.
+                      top is rejected, so compiled shapes stay bounded.
+    max_batch         bucket flush size; a flush is padded (blank images)
+                      to the smallest power-of-two sub-batch >= its
+                      occupancy, capped here — pad compute scales with
+                      traffic while compiled shapes stay bounded at
+                      ``len(bucket_sides) * (log2(max_batch) + 1)`` per
+                      dtype seen.
     max_delay_ms      micro-batching window: the longest a queued request
                       waits for batch-mates before a partial flush.
     cache_entries     LRU capacity (0 disables caching).
-    inflight_buckets  max outstanding bucket computations (2 = classic
-                      double buffering: ingest n+1 overlaps compute n).
+    inflight_buckets  bucket computations kept outstanding after a flush
+                      (2 = classic double buffering: ingest n+1 overlaps
+                      compute n). A flush dispatches before trimming, so
+                      one extra job is briefly in flight while the oldest
+                      retires.
     latency_window    number of recent latencies kept for p50/p95.
+    max_queue_depth   admission bound on accepted-but-unfinished requests;
+                      None disables admission control entirely.
+    overload_policy   at the bound, ``submit`` either blocks until a slot
+                      frees ("block", backpressure) or raises
+                      :class:`ServiceOverloaded` ("shed", fail fast).
+                      Cache hits and coalesces onto an admitted leader
+                      consume no queue slot and are never rejected; a
+                      duplicate that joins a leader still waiting at the
+                      admission gate shares the leader's fate — if that
+                      leader is shed, the duplicate's future fails with
+                      the same ServiceOverloaded.
+    sub_batches       pad flushes to the power-of-two ladder (True) or
+                      always to ``max_batch`` (False; kept so benchmarks
+                      can compare the two policies on one schedule).
     """
 
     bucket_sides: Tuple[int, ...] = (128, 256, 512, 1024)
@@ -73,6 +105,9 @@ class ServiceConfig:
     cache_entries: int = 1024
     inflight_buckets: int = 2
     latency_window: int = 4096
+    max_queue_depth: Optional[int] = None
+    overload_policy: str = "block"
+    sub_batches: bool = True
 
     def __post_init__(self):
         if not self.bucket_sides or list(self.bucket_sides) != sorted(
@@ -82,12 +117,23 @@ class ServiceConfig:
                 f"bucket_sides must be a non-empty ascending ladder, "
                 f"got {self.bucket_sides}"
             )
-        if self.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.inflight_buckets < 1:
             raise ValueError(
-                f"inflight_buckets must be >= 1, got {self.inflight_buckets}"
-            )
+                f"inflight_buckets must be >= 1, got {self.inflight_buckets}")
+        # the remaining knobs share their names with SchedulerConfig, so
+        # constructing it here surfaces bad values at ServiceConfig() time
+        # with messages that name the right knob
+        self.scheduler_config()
+
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(
+            max_batch=self.max_batch,
+            max_delay_ms=self.max_delay_ms,
+            inflight_jobs=self.inflight_buckets,
+            max_queue_depth=self.max_queue_depth,
+            overload_policy=self.overload_policy,
+            sub_batches=self.sub_batches,
+        )
 
 
 @dataclasses.dataclass
@@ -97,15 +143,6 @@ class _Request:
     bucket: Bucket
     t_submit: float
     futures: List[Future]     # leader's future + any coalesced duplicates
-
-
-@dataclasses.dataclass
-class _Job:
-    requests: List[_Request]
-    result: YCHGResult        # dispatched, possibly not yet ready
-
-
-_SHUTDOWN = object()
 
 
 class YCHGService:
@@ -130,20 +167,25 @@ class YCHGService:
         self.cache = cache if cache is not None else ResultCache(
             config.cache_entries)
         self._recorder = MetricsRecorder(config.latency_window)
-        self._q: "queue.Queue" = queue.Queue()
-        self._pending: Dict[Bucket, List[_Request]] = {}
-        self._inflight: "deque[_Job]" = deque()
         self._leaders: Dict[CacheKey, _Request] = {}
         self._lock = threading.Lock()
         self._closed = False
-        self._thread = threading.Thread(
-            target=self._loop, name="ychg-service", daemon=True)
-        self._thread.start()
+        self._scheduler = Scheduler(
+            config.scheduler_config(),
+            dispatch=self._dispatch,
+            complete=self._complete,
+            fail=self._fail,
+        )
 
     # ------------------------------------------------------------ requests
 
     def submit(self, mask: Any) -> "Future[YCHGResult]":
-        """Enqueue one (H, W) mask; the future resolves to a ready result."""
+        """Enqueue one (H, W) mask; the future resolves to a ready result.
+
+        Raises :class:`ServiceOverloaded` when the queue is at
+        ``max_queue_depth`` under ``overload_policy="shed"``; blocks here
+        (not on device work) under ``"block"``.
+        """
         if self._closed:
             raise RuntimeError("service is closed")
         a = np.ascontiguousarray(np.asarray(mask))
@@ -152,28 +194,52 @@ class YCHGService:
         side = pick_bucket_side(a.shape, self.config.bucket_sides)
         key = make_key(a, self.engine.resolve_backend(), self.engine.config,
                        self.engine.mesh)
-        self._recorder.record_submit()
         fut: "Future[YCHGResult]" = Future()
-        cached = self.cache.get(key)
-        if cached is not None:
-            self._recorder.record_complete(0.0, a.size)
-            fut.set_result(cached)
-            return fut
-        # registration and enqueue share the close() lock: once close() has
-        # put the shutdown sentinel (under this lock), no request can land
-        # behind it in the queue and silently never resolve
+        # cache check, coalesce, and leader registration are ONE critical
+        # section, shared with the completion side's cache.put + leader
+        # retirement: a duplicate always sees the leader or the cached
+        # result, never the gap between them
         with self._lock:
             if self._closed:
                 raise RuntimeError("service is closed")
+            cached = self.cache.get(key)
+            if cached is not None:
+                self._recorder.record_submit()
+                self._recorder.record_cache_hit(a.size)
+                fut.set_result(cached)
+                return fut
             leader = self._leaders.get(key)
             if leader is not None:
                 leader.futures.append(fut)
+                self._recorder.record_submit()
                 self._recorder.record_coalesced()
                 return fut
             req = _Request(mask=a, key=key, bucket=(side, str(a.dtype)),
                            t_submit=time.monotonic(), futures=[fut])
             self._leaders[key] = req
-            self._q.put(req)
+        # admission happens OUTSIDE the service lock: a blocked submitter
+        # must not hold the lock the completion path needs to free a slot.
+        # The leader is registered first so duplicates coalesce (for free)
+        # even while their leader waits at the admission gate.
+        try:
+            self._scheduler.submit(req)
+        except BaseException as e:
+            with self._lock:
+                self._leaders.pop(key, None)
+            # once the leader is popped no more riders can join, so
+            # req.futures is stable: fail fut + anyone who coalesced while
+            # the leader waited at the gate, and back their submits out of
+            # the counters — they were never accepted either
+            if len(req.futures) > 1:
+                self._recorder.record_coalesced_rejected(
+                    len(req.futures) - 1)
+            for f in req.futures:
+                if not f.done() and f.set_running_or_notify_cancel():
+                    f.set_exception(e)
+            raise
+        # counted only once actually admitted: a shed submit is not
+        # "accepted", so submitted - completed tracks real outstanding work
+        self._recorder.record_submit()
         return fut
 
     def analyze(self, mask: Any, timeout: Optional[float] = None) -> YCHGResult:
@@ -181,15 +247,12 @@ class YCHGService:
         return self.submit(mask).result(timeout)
 
     def metrics(self) -> ServiceMetrics:
-        # _pending insert/pop happen on the scheduler thread under the same
-        # lock, so this iteration cannot see the dict resize mid-walk
-        with self._lock:
-            pending = sum(len(v) for v in self._pending.values())
-        depth = self._q.qsize() + pending
         return self._recorder.snapshot(
-            queue_depth=depth,
+            queue_depth=self._scheduler.backlog(),
             cache_hits=self.cache.hits,
             cache_misses=self.cache.misses,
+            shed=self._scheduler.shed,
+            blocked=self._scheduler.blocked,
             backend=self.engine.resolve_backend(),
         )
 
@@ -201,8 +264,7 @@ class YCHGService:
             if self._closed:
                 return
             self._closed = True
-            self._q.put(_SHUTDOWN)
-        self._thread.join(timeout)
+        self._scheduler.close(timeout)
 
     def __enter__(self) -> "YCHGService":
         return self
@@ -210,96 +272,43 @@ class YCHGService:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    # ------------------------------------------------------ scheduler loop
+    # ------------------------------------------------- scheduler callbacks
 
-    def _loop(self) -> None:
-        delay = self.config.max_delay_ms / 1e3
-        while True:
-            # fully idle: retire outstanding computations before sleeping so
-            # trailing requests are not held hostage to the next arrival
-            if self._inflight and not self._pending and self._q.empty():
-                while self._inflight:
-                    self._complete(self._inflight.popleft())
-            timeout = 0.1
-            if self._pending:
-                oldest = min(r[0].t_submit for r in self._pending.values())
-                timeout = max(0.0, oldest + delay - time.monotonic())
-            try:
-                item = self._q.get(timeout=timeout)
-            except queue.Empty:
-                item = None
-            # drain the whole backlog before any age-based flush: under a
-            # burst, queued requests are older than max_delay_ms by the time
-            # they are seen, and flushing per item would degenerate to one
-            # batch per request exactly when batching matters most
-            shutdown = False
-            while item is not None:
-                if item is _SHUTDOWN:
-                    shutdown = True
-                    break
-                with self._lock:
-                    reqs = self._pending.setdefault(item.bucket, [])
-                reqs.append(item)
-                if len(reqs) >= self.config.max_batch:
-                    self._flush(item.bucket)
-                try:
-                    item = self._q.get_nowait()
-                except queue.Empty:
-                    item = None
-            if shutdown:
-                break
-            now = time.monotonic()
-            for bucket in [
-                b for b, rs in self._pending.items()
-                if now - rs[0].t_submit >= delay
-            ]:
-                self._flush(bucket)
-        # drain on shutdown: flush every partial bucket, retire every job
-        for bucket in list(self._pending):
-            self._flush(bucket)
-        while self._inflight:
-            self._complete(self._inflight.popleft())
-
-    def _flush(self, bucket: Bucket) -> None:
-        """Dispatch one bucket; keep at most ``inflight_buckets`` outstanding."""
-        with self._lock:
-            requests = self._pending.pop(bucket)
+    def _dispatch(self, bucket: Bucket, requests: List[_Request],
+                  batch_size: int) -> YCHGResult:
         side, dtype = bucket
-        try:
-            stack = pad_stack([r.mask for r in requests], side,
-                              self.config.max_batch, np.dtype(dtype))
-            # the host->device transfer of THIS bucket starts here, while
-            # the previous bucket's computation is still in flight
-            x = jax.device_put(stack)
-            result = self.engine.analyze_batch(x)  # async dispatch
-        except Exception as e:  # config/backend errors -> fail these futures
-            self._fail(requests, e)
-            return
+        stack = pad_stack([r.mask for r in requests], side, batch_size,
+                          np.dtype(dtype))
+        # the host->device transfer of THIS bucket starts here, while the
+        # previous bucket's computation is still in flight
+        x = jax.device_put(stack)
+        result = self.engine.analyze_batch(x)  # async dispatch
         self._recorder.record_batch(
             stack.shape, sum(r.mask.size for r in requests))
-        self._inflight.append(_Job(requests, result))
-        while len(self._inflight) >= self.config.inflight_buckets:
-            self._complete(self._inflight.popleft())
+        return result
 
-    def _complete(self, job: _Job) -> None:
-        # any escape here would kill the scheduler thread and hang every
-        # outstanding future, so the whole fan-out (not just the device
-        # wait) routes failures to _fail — which skips already-fulfilled
-        # futures, so a partial fan-out fails only the requests it missed
+    def _complete(self, result: YCHGResult, requests: List[_Request]) -> None:
+        # any escape here would fail the whole slice via the scheduler's
+        # retire guard, so the fan-out routes its own failures to _fail —
+        # which skips already-fulfilled futures, so a partial fan-out fails
+        # only the requests it missed
         try:
-            job.result.block_until_ready()
+            result.block_until_ready()
             now = time.monotonic()
-            for row, req in enumerate(job.requests):
-                out = crop_result(job.result, row, req.mask.shape[1])
+            for row, req in enumerate(requests):
+                out = crop_result(result, row, req.mask.shape[1])
+                # atomic with submit's cache-check/coalesce: insert before
+                # retiring the leader, so a duplicate in this instant hits
+                # the cache instead of re-dispatching the computation
                 with self._lock:
+                    self.cache.put(req.key, out)
                     self._leaders.pop(req.key, None)
-                self.cache.put(req.key, out)
                 self._recorder.record_complete(
                     now - req.t_submit, req.mask.size, len(req.futures))
                 for fut in req.futures:
                     _fulfil(fut, out)
         except Exception as e:
-            self._fail(job.requests, e)
+            self._fail(requests, e)
 
     def _fail(self, requests: List[_Request], exc: Exception) -> None:
         for req in requests:
@@ -320,3 +329,8 @@ def _fulfil(fut: Future, value: Any) -> None:
     """
     if fut.set_running_or_notify_cancel():
         fut.set_result(value)
+
+
+# re-exported here so service-level callers see the error next to the knob
+# that produces it
+__all__ = ["ServiceConfig", "ServiceOverloaded", "YCHGService"]

@@ -1,0 +1,340 @@
+"""`repro.service.scheduler` suite: the dispatch policy layer, engine-free.
+
+The `Scheduler` is exercised against a fake dispatch function — no engine,
+no device, no cache — so these tests pin pure policy: sub-batch ladder
+selection, the admission gate (shed and block), the in-flight window
+semantics (N means N), and the idle-drain ordering fix. Per the policy in
+tests/README.md there are **no wall-clock assertions**: interleavings are
+pinned with `autostart=False` (enqueue before the loop runs) and
+per-job gate events inside the complete callback (the scheduler thread
+parks exactly where the test needs it), and cross-thread progress is
+awaited with bounded `_wait_until` polls that fail, never hang.
+"""
+
+import dataclasses
+import threading
+import time
+
+import pytest
+
+from repro.service.scheduler import (
+    Scheduler,
+    SchedulerConfig,
+    ServiceOverloaded,
+    pick_sub_batch,
+    sub_batch_ladder,
+)
+
+TIMEOUT = 30.0
+
+
+@dataclasses.dataclass
+class Req:
+    name: str
+    bucket: tuple = ("b", "uint8")
+    t_submit: float = dataclasses.field(default_factory=time.monotonic)
+
+
+class FakeDispatch:
+    """Records the scheduler's callback traffic; optionally gates completes.
+
+    With ``gated=True`` each job's ``complete`` parks on a pair of events:
+    ``entered[h]`` is set when the scheduler thread arrives (the test can
+    wait on it), ``resume[h]`` must be set by the test to let it through —
+    a deterministic stand-in for "device work is still running".
+    """
+
+    def __init__(self, gated=False, fail_buckets=()):
+        self._lock = threading.Lock()
+        self._gated = gated
+        self._fail_buckets = set(fail_buckets)
+        self.dispatches = []      # (bucket, names, batch_size)
+        self.events = []          # ("dispatch"|"complete", names...)
+        self.completions = []
+        self.failures = []        # (names, exc)
+        self.outstanding = 0
+        self.max_outstanding_before = 0   # outstanding jobs seen at dispatch
+        self.entered = {}
+        self.resume = {}
+        self._n = 0
+
+    def dispatch(self, bucket, requests, batch_size):
+        if bucket in self._fail_buckets:
+            raise RuntimeError(f"dispatch refused for {bucket}")
+        names = tuple(r.name for r in requests)
+        with self._lock:
+            handle = self._n
+            self._n += 1
+            self.max_outstanding_before = max(
+                self.max_outstanding_before, self.outstanding)
+            self.outstanding += 1
+            self.dispatches.append((bucket, names, batch_size))
+            self.events.append(("dispatch",) + names)
+            if self._gated:
+                self.entered[handle] = threading.Event()
+                self.resume[handle] = threading.Event()
+        return handle
+
+    def complete(self, handle, requests):
+        if self._gated:
+            self.entered[handle].set()
+            assert self.resume[handle].wait(TIMEOUT), "gate never released"
+        names = tuple(r.name for r in requests)
+        with self._lock:
+            self.outstanding -= 1
+            self.completions.append(names)
+            self.events.append(("complete",) + names)
+
+    def fail(self, requests, exc):
+        with self._lock:
+            self.failures.append((tuple(r.name for r in requests), exc))
+
+    def open_gates(self):
+        """Stop gating: release every parked job and let future jobs
+        complete ungated."""
+        with self._lock:
+            self._gated = False
+            gates = list(self.resume.values())
+        for g in gates:
+            g.set()
+
+    def scheduler(self, autostart=True, **cfg):
+        return Scheduler(SchedulerConfig(**cfg), self.dispatch,
+                         self.complete, self.fail, autostart=autostart)
+
+
+def _wait_until(predicate, what):
+    deadline = time.monotonic() + TIMEOUT
+    while not predicate():
+        if time.monotonic() > deadline:
+            pytest.fail(f"timed out waiting for {what}")
+        time.sleep(0.001)
+
+
+# ------------------------------------------------------- sub-batch ladder
+
+
+def test_pick_sub_batch_is_next_pow2_capped():
+    assert [pick_sub_batch(n, 8) for n in range(1, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+    assert pick_sub_batch(5, 6) == 6          # cap is the top rung
+    assert pick_sub_batch(1, 1) == 1
+    with pytest.raises(ValueError, match="occupancy"):
+        pick_sub_batch(0, 8)
+
+
+def test_sub_batch_ladder_is_log2_plus_one_rungs():
+    assert sub_batch_ladder(8) == (1, 2, 4, 8)
+    assert sub_batch_ladder(6) == (1, 2, 4, 6)   # non-pow2 cap is a rung
+    assert sub_batch_ladder(1) == (1,)
+    # every pick lands on the ladder — the compiled-shape budget
+    for n in range(1, 9):
+        assert pick_sub_batch(n, 8) in sub_batch_ladder(8)
+
+
+def test_flush_dispatches_sub_batch_sizes():
+    """One lone request is padded to 1, three to 4, a full bucket to
+    max_batch — never unconditionally to max_batch."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=1.0)
+    sched.submit(Req("a1", bucket=("A", "u8")))
+    for i in range(3):
+        sched.submit(Req(f"b{i}", bucket=("B", "u8")))
+    for i in range(8):
+        sched.submit(Req(f"c{i}", bucket=("C", "u8")))
+    sched.start()
+    sched.close()
+    sizes = {bucket: batch for bucket, _, batch in fake.dispatches}
+    assert sizes == {("A", "u8"): 1, ("B", "u8"): 4, ("C", "u8"): 8}
+    # occupancy rides along intact: the C flush carries all 8 requests
+    (c_names,) = [names for b, names, _ in fake.dispatches if b == ("C", "u8")]
+    assert c_names == tuple(f"c{i}" for i in range(8))
+
+
+def test_sub_batches_off_pads_to_max_batch():
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=1.0,
+                           sub_batches=False)
+    sched.submit(Req("solo"))
+    sched.start()
+    sched.close()
+    assert [b for _, _, b in fake.dispatches] == [8]
+
+
+# ------------------------------------------------------- admission control
+
+
+def test_shed_policy_raises_typed_error_at_bound():
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           max_queue_depth=2, overload_policy="shed")
+    sched.submit(Req("a", bucket=("A", "u8")))
+    sched.submit(Req("b", bucket=("B", "u8")))
+    # both slots held (their jobs are gated mid-complete / in flight)
+    with pytest.raises(ServiceOverloaded, match="max_queue_depth=2"):
+        sched.submit(Req("c", bucket=("C", "u8")))
+    assert sched.shed == 1 and sched.blocked == 0
+    fake.open_gates()
+    _wait_until(lambda: sched.depth == 0, "admitted jobs to retire")
+    sched.submit(Req("d", bucket=("D", "u8")))   # slots freed: admitted
+    _wait_until(lambda: ("d",) in fake.completions, "d to complete")
+    sched.close()
+    assert ("c",) not in {n for _, n, _ in fake.dispatches}
+    dispatched = {name for _, names, _ in fake.dispatches for name in names}
+    assert dispatched == {"a", "b", "d"}
+
+
+def test_block_policy_waits_for_a_slot():
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           max_queue_depth=2, overload_policy="block")
+    sched.submit(Req("a", bucket=("A", "u8")))
+    sched.submit(Req("b", bucket=("B", "u8")))
+    done = threading.Event()
+
+    def blocked_submit():
+        sched.submit(Req("c", bucket=("C", "u8")))
+        done.set()
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    _wait_until(lambda: sched.blocked == 1, "submitter to hit the gate")
+    assert not done.is_set()                     # parked, not shed
+    _wait_until(lambda: 0 in fake.entered, "first job to reach complete")
+    fake.resume[0].set()                         # retire one -> slot frees
+    _wait_until(done.is_set, "blocked submitter to be admitted")
+    fake.open_gates()
+    t.join(TIMEOUT)
+    sched.close()
+    assert sched.shed == 0 and sched.blocked == 1
+    dispatched = {name for _, names, _ in fake.dispatches for name in names}
+    assert dispatched == {"a", "b", "c"}
+
+
+def test_blocked_submitter_woken_by_close_raises():
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           max_queue_depth=1, overload_policy="block")
+    sched.submit(Req("a"))
+    box = {}
+
+    def blocked_submit():
+        try:
+            sched.submit(Req("late"))
+        except RuntimeError as e:
+            box["exc"] = e
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    _wait_until(lambda: sched.blocked == 1, "submitter to hit the gate")
+    sched.close(timeout=0.0)     # wake the gate; don't wait for the drain
+    t.join(TIMEOUT)
+    assert isinstance(box.get("exc"), RuntimeError)
+    assert "closed" in str(box["exc"])
+    fake.open_gates()            # let the drain finish: admitted work retires
+    _wait_until(lambda: ("a",) in fake.completions, "admitted job to drain")
+    assert ("late",) not in {n for _, n, _ in fake.dispatches}
+
+
+def test_dispatch_error_fails_slice_and_releases_slots():
+    fake = FakeDispatch(fail_buckets={("BAD", "u8")})
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           max_queue_depth=1, overload_policy="shed")
+    sched.submit(Req("x", bucket=("BAD", "u8")))
+    _wait_until(lambda: fake.failures, "dispatch error to route to fail()")
+    (names, exc) = fake.failures[0]
+    assert names == ("x",) and "dispatch refused" in str(exc)
+    _wait_until(lambda: sched.depth == 0, "failed slice to release its slot")
+    sched.submit(Req("y", bucket=("OK", "u8")))   # no leaked depth
+    sched.close()
+    assert ("y",) in fake.completions
+
+
+def test_scheduler_config_validation():
+    with pytest.raises(ValueError, match="max_batch"):
+        SchedulerConfig(max_batch=0)
+    with pytest.raises(ValueError, match="inflight_jobs"):
+        SchedulerConfig(inflight_jobs=0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        SchedulerConfig(max_queue_depth=0)
+    with pytest.raises(ValueError, match="overload_policy"):
+        SchedulerConfig(overload_policy="drop")
+
+
+# ------------------------------------------- the three scheduling bugfixes
+
+
+def test_inflight_window_n_means_n():
+    """Regression (inflight off-by-one): with inflight_jobs=2 the scheduler
+    must reach TWO concurrently outstanding jobs before retiring any — the
+    pre-fix `>=` retired at one, so double buffering never overlapped."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=1.0,
+                           inflight_jobs=2)
+    for i in range(4):
+        sched.submit(Req(f"r{i}", bucket=(f"B{i}", "u8")))
+    sched.start()
+    sched.close()
+    # all four dispatched and retired, strictly in order
+    assert fake.completions == [(f"r{i}",) for i in range(4)]
+    # the third dispatch happened with two jobs already outstanding...
+    assert fake.max_outstanding_before == 2
+    # ...i.e. nothing was retired until the window actually overflowed
+    assert [e[0] for e in fake.events[:3]] == ["dispatch"] * 3
+
+
+def test_idle_drain_polls_queue_between_completions():
+    """Regression (idle-drain head-of-line blocking): a request arriving
+    while the scheduler is retiring its backlog must be dispatched after at
+    most ONE completion, not behind every outstanding job."""
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=1.0,
+                           inflight_jobs=8)
+    sched.submit(Req("a", bucket=("A", "u8")))
+    sched.submit(Req("b", bucket=("B", "u8")))
+    sched.start()
+    # the idle drain begins retiring job a; park the scheduler inside it
+    _wait_until(lambda: 0 in fake.entered and fake.entered[0].is_set(),
+                "idle drain to enter complete(a)")
+    sched.submit(Req("late", bucket=("C", "u8")))   # arrives mid-drain
+    fake.resume[1].set()   # job b's gate is open: only ordering is at stake
+    fake.resume[0].set()
+    # the fix: after finishing ONE completion the loop polls the queue, so
+    # "late" is dispatched before job b is retired
+    _wait_until(lambda: len(fake.dispatches) == 3, "late to be dispatched")
+    fake.open_gates()
+    sched.close()
+    order = fake.events
+    assert order.index(("dispatch", "late")) < order.index(("complete", "b"))
+
+
+def test_close_before_start_drains_inline():
+    """A scheduler that never started its loop must still honour admitted
+    requests at close(): the drain runs inline on the closing thread
+    instead of silently dropping the queue."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=4, max_delay_ms=1.0)
+    for i in range(10):          # > 2x max_batch: the drain must flush
+        sched.submit(Req(f"p{i}"))  # full buckets, never overfill one
+    sched.close()                # loop never ran
+    assert [n for n in fake.completions] == [
+        ("p0", "p1", "p2", "p3"), ("p4", "p5", "p6", "p7"), ("p8", "p9")]
+    # every flush obeyed max_batch and its sub-batch size
+    assert all(len(names) <= b for _, names, b in fake.dispatches)
+    assert [b for _, _, b in fake.dispatches] == [4, 4, 2]
+    assert sched.depth == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        sched.start()            # a closed scheduler cannot be started
+
+
+def test_close_drains_pending_and_inflight():
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=10_000.0)
+    for i in range(3):
+        sched.submit(Req(f"p{i}"))      # parked in the delay window forever
+    sched.start()
+    sched.close()
+    assert fake.completions == [("p0", "p1", "p2")]
+    assert [b for _, _, b in fake.dispatches] == [4]   # sub-batch on drain
+    with pytest.raises(RuntimeError, match="closed"):
+        sched.submit(Req("post"))

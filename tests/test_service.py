@@ -11,6 +11,9 @@ under-full buckets pin scheduling where a test needs it). Futures always
 never hangs, the suite.
 """
 
+import threading
+import time
+
 import numpy as np
 import pytest
 
@@ -21,9 +24,11 @@ from repro.engine import YCHGConfig, YCHGEngine, registry
 from repro.service import (
     ResultCache,
     ServiceConfig,
+    ServiceOverloaded,
     YCHGService,
     make_key,
     pick_bucket_side,
+    sub_batch_ladder,
 )
 from ychg_invariants import assert_bit_identical
 
@@ -216,9 +221,10 @@ def test_duplicate_in_flight_coalesces_to_one_slot():
         _assert_result_matches_analyze(r1, mask)
 
 
-def test_compiled_shapes_bounded_by_bucket_ladder():
+def test_compiled_shapes_bounded_by_bucket_and_sub_batch_ladders():
     """Acceptance bar: arbitrary traffic shapes never dispatch more distinct
-    compiled shapes than the configured bucket count (one dtype)."""
+    compiled shapes than bucket_sides x the power-of-two sub-batch ladder
+    (one dtype) — sub-bucket padding must not unbound the shape budget."""
     rng = np.random.default_rng(31)
     sides = (32, 64, 128)
     max_batch = 4
@@ -229,8 +235,37 @@ def test_compiled_shapes_bounded_by_bucket_ladder():
         for f in [svc.submit(m) for m in masks]:
             f.result(timeout=TIMEOUT)
         m = svc.metrics()
-    assert m.n_compiled_shapes <= len(sides)
-    assert set(m.compiled_shapes) <= {(max_batch, s, s) for s in sides}
+    ladder = sub_batch_ladder(max_batch)
+    assert len(ladder) == int(np.log2(max_batch)) + 1
+    assert m.n_compiled_shapes <= len(sides) * len(ladder)
+    assert set(m.compiled_shapes) <= {
+        (b, s, s) for s in sides for b in ladder}
+
+
+def test_low_occupancy_flush_pads_to_sub_batch_not_max_batch():
+    """A lone request must dispatch a (1, side, side) stack, not pay for
+    max_batch - 1 blank images (the pad-to-max_batch regression)."""
+    mask = _mask((40, 40), seed=90)
+    with YCHGService(config=ServiceConfig(
+            bucket_sides=(64,), max_batch=8, max_delay_ms=1.0)) as svc:
+        _assert_result_matches_analyze(svc.analyze(mask, timeout=TIMEOUT),
+                                       mask)
+        m = svc.metrics()
+    assert m.compiled_shapes == ((1, 64, 64),)
+    # pad fraction is now only the side padding, not 8x image blanks
+    assert m.pad_fraction == 1.0 - mask.size / (64 * 64)
+
+
+def test_sub_batches_off_restores_pad_to_max_batch():
+    """The sub_batches=False knob keeps the old policy available so
+    benchmarks can compare both on one schedule."""
+    mask = _mask((40, 40), seed=91)
+    with YCHGService(config=ServiceConfig(
+            bucket_sides=(64,), max_batch=8, max_delay_ms=1.0,
+            sub_batches=False)) as svc:
+        svc.analyze(mask, timeout=TIMEOUT)
+        m = svc.metrics()
+    assert m.compiled_shapes == ((8, 64, 64),)
 
 
 def test_submit_validation_and_lifecycle():
@@ -299,6 +334,10 @@ def test_service_config_validation():
         ServiceConfig(max_batch=0)
     with pytest.raises(ValueError, match="inflight_buckets"):
         ServiceConfig(inflight_buckets=0)
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        ServiceConfig(max_queue_depth=0)
+    with pytest.raises(ValueError, match="overload_policy"):
+        ServiceConfig(overload_policy="drop")
     assert pick_bucket_side((5, 100), (64, 128)) == 128
 
 
@@ -315,6 +354,220 @@ def test_metrics_snapshot_consistency():
     assert 0.0 <= m.pad_fraction < 1.0
     assert m.p95_latency_ms >= m.p50_latency_ms >= 0.0
     assert m.backend in registry.backend_names()
+
+
+# ------------------------------------- scheduler bugfix regressions (PR 4)
+
+
+class _WindowCache(ResultCache):
+    """Intercepts the first ``put`` so the test can run code inside the
+    completion window (result ready, cache insert in progress)."""
+
+    def __init__(self, capacity=64):
+        super().__init__(capacity)
+        self.entered = threading.Event()
+        self.resume = threading.Event()
+        self._intercepted = False
+
+    def put(self, key, value):
+        if not self._intercepted:
+            self._intercepted = True
+            self.entered.set()
+            assert self.resume.wait(TIMEOUT), "window gate never released"
+        super().put(key, value)
+
+
+def test_duplicate_in_completion_window_never_redispatches():
+    """Regression (coalescing/cache race): a duplicate submitted while the
+    leader's completion is mid-flight must hit the cache or the leader —
+    the pre-fix code popped the leader BEFORE the cache insert, so the
+    duplicate saw neither and re-dispatched the whole computation."""
+    mask = _mask((24, 24), seed=80)
+    engine = YCHGEngine()
+    backend = engine.resolve_backend()
+    cache = _WindowCache()
+    svc = YCHGService(engine, ServiceConfig(
+        bucket_sides=(32,), max_batch=1, max_delay_ms=1.0), cache=cache)
+    try:
+        f1 = svc.submit(mask)
+        # completion is now parked inside the cache insert: the result is
+        # computed, the leader not yet retired — the pre-fix window
+        assert cache.entered.wait(TIMEOUT)
+        n_dispatched = registry.call_count(backend)
+        box = {}
+        t = threading.Thread(
+            target=lambda: box.update(fut=svc.submit(mask.copy())),
+            daemon=True)
+        t.start()          # duplicate lands in the window
+        cache.resume.set()
+        t.join(TIMEOUT)
+        r1 = f1.result(timeout=TIMEOUT)
+        r2 = box["fut"].result(timeout=TIMEOUT)
+        # the duplicate was served without moving the backend call counter
+        assert registry.call_count(backend) == n_dispatched
+        assert r2 is r1
+        _assert_result_matches_analyze(r1, mask)
+    finally:
+        svc.close()
+
+
+def test_cache_hits_do_not_skew_latency_percentiles():
+    """Regression (metrics skew): repeat traffic served from the cache must
+    not push ~0 ms samples into the latency window — pre-fix, nine hits
+    dragged p50 to 0 and hid what a compute miss actually costs."""
+    mask = _mask((32, 32), seed=81)
+    with YCHGService(config=ServiceConfig(
+            bucket_sides=(64,), max_batch=1, max_delay_ms=1.0)) as svc:
+        svc.analyze(mask, timeout=TIMEOUT)              # one compute miss
+        for _ in range(9):
+            svc.analyze(mask.copy(), timeout=TIMEOUT)   # nine cache hits
+        m = svc.metrics()
+    assert m.completed == 10 and m.completed_from_cache == 9
+    assert m.cache_hits == 9
+    # the window holds exactly the one compute sample: both percentiles
+    # equal it, and it is the real (nonzero) submit->ready latency
+    assert m.p50_latency_ms == m.p95_latency_ms
+    assert m.p50_latency_ms > 0.0
+
+
+# --------------------------------------------- admission control (PR 4)
+
+
+def test_overload_shed_raises_typed_error_and_counts():
+    """At max_queue_depth under policy "shed", submit fails fast with
+    ServiceOverloaded; admitted requests still resolve, and freed slots
+    re-admit. The long delay window holds the admitted requests pending so
+    the bound is deterministically occupied."""
+    masks = [_mask((16, 16), seed=100 + i) for i in range(6)]
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=8, max_delay_ms=10_000.0,
+        max_queue_depth=2, overload_policy="shed"))
+    try:
+        admitted = [svc.submit(m) for m in masks[:2]]
+        for m_ in masks[2:]:
+            with pytest.raises(ServiceOverloaded, match="max_queue_depth=2"):
+                svc.submit(m_)
+        met = svc.metrics()
+        assert met.shed == 4 and met.blocked == 0
+    finally:
+        svc.close()   # drains the two admitted requests
+    for mask, fut in zip(masks, admitted):
+        _assert_result_matches_analyze(fut.result(timeout=TIMEOUT), mask)
+
+
+def test_overload_admits_cache_hits_and_coalesces_for_free():
+    """Cache hits and in-flight duplicates consume no queue slot: at a full
+    queue they are still served, while a distinct mask sheds."""
+    leader_mask = _mask((16, 16), seed=110)
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=8, max_delay_ms=10_000.0,
+        max_queue_depth=1, overload_policy="shed"))
+    try:
+        f1 = svc.submit(leader_mask)              # occupies the only slot
+        f2 = svc.submit(leader_mask.copy())       # coalesces: no slot needed
+        with pytest.raises(ServiceOverloaded):
+            svc.submit(_mask((16, 16), seed=111))  # distinct: shed
+        m = svc.metrics()
+        assert m.coalesced == 1 and m.shed == 1
+    finally:
+        svc.close()
+    assert f2.result(timeout=TIMEOUT) is f1.result(timeout=TIMEOUT)
+    _assert_result_matches_analyze(f1.result(timeout=TIMEOUT), leader_mask)
+
+
+class _GatedEngine(YCHGEngine):
+    """Holds every dispatch at the analyze_batch door until released —
+    pins "the queue is full because work is genuinely in flight"."""
+
+    def __init__(self):
+        super().__init__()
+        self.entered = threading.Event()
+        self.resume = threading.Event()
+
+    def analyze_batch(self, stack):
+        result = super().analyze_batch(stack)
+        self.entered.set()
+        assert self.resume.wait(TIMEOUT), "engine gate never released"
+        return result
+
+
+def test_overload_block_applies_backpressure_then_admits():
+    """Policy "block": at the bound, submit waits (counted in blocked) and
+    is admitted once a completion frees a slot — nothing is lost."""
+    engine = _GatedEngine()
+    m1, m2 = _mask((16, 16), seed=120), _mask((16, 16), seed=121)
+    svc = YCHGService(engine, ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0,
+        max_queue_depth=1, overload_policy="block"))
+    try:
+        f1 = svc.submit(m1)
+        assert engine.entered.wait(TIMEOUT)   # m1 holds the only slot
+        box = {}
+        t = threading.Thread(target=lambda: box.update(fut=svc.submit(m2)),
+                             daemon=True)
+        t.start()
+        # the submitter is parked at the admission gate, not shed
+        deadline = time.monotonic() + TIMEOUT
+        while svc.metrics().blocked < 1:
+            assert time.monotonic() < deadline, "submitter never blocked"
+            time.sleep(0.001)
+        assert "fut" not in box
+        engine.resume.set()                   # m1 completes -> slot frees
+        t.join(TIMEOUT)
+        _assert_result_matches_analyze(box["fut"].result(timeout=TIMEOUT), m2)
+        _assert_result_matches_analyze(f1.result(timeout=TIMEOUT), m1)
+        m = svc.metrics()
+        assert m.blocked == 1 and m.shed == 0
+    finally:
+        engine.resume.set()
+        svc.close()
+
+
+def test_rider_on_shed_leader_fails_and_is_not_counted_as_accepted():
+    """A duplicate that coalesces onto a leader still waiting at the
+    admission gate shares the leader's fate: if the leader is rejected
+    (here by close() waking the gate), the rider's future fails too and
+    its submit/coalesce counts are backed out — submitted - completed must
+    keep tracking real outstanding work."""
+    engine = _GatedEngine()
+    m1, m2 = _mask((16, 16), seed=130), _mask((16, 16), seed=131)
+    svc = YCHGService(engine, ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0,
+        max_queue_depth=1, overload_policy="block"))
+    f1 = svc.submit(m1)
+    assert engine.entered.wait(TIMEOUT)       # m1 holds the only slot
+    box = {}
+
+    def leader_submit():
+        try:
+            svc.submit(m2)
+        except RuntimeError as e:
+            box["exc"] = e
+
+    t = threading.Thread(target=leader_submit, daemon=True)
+    t.start()
+    deadline = time.monotonic() + TIMEOUT     # leader parks at the gate
+    while svc.metrics().blocked < 1:
+        assert time.monotonic() < deadline, "leader never blocked"
+        time.sleep(0.001)
+    rider = svc.submit(m2.copy())             # coalesces onto parked leader
+    assert svc.metrics().coalesced == 1
+    # close() wakes the admission gate immediately (the leader fails before
+    # any drain), but itself blocks joining the scheduler thread until the
+    # engine gate opens — so run it aside and release the engine after the
+    # leader's rejection is in hand, keeping the slot occupied throughout
+    closer = threading.Thread(target=svc.close, daemon=True)
+    closer.start()
+    t.join(TIMEOUT)
+    assert "closed" in str(box["exc"])
+    engine.resume.set()                       # let m1 finish and close drain
+    closer.join(TIMEOUT)
+    with pytest.raises(RuntimeError, match="closed"):
+        rider.result(timeout=TIMEOUT)         # rider shares the rejection
+    _assert_result_matches_analyze(f1.result(timeout=TIMEOUT), m1)
+    m = svc.metrics()
+    # only m1 was ever accepted: the rider's submit/coalesce backed out
+    assert m.submitted == 1 and m.completed == 1 and m.coalesced == 0
 
 
 # ------------------------------------------- engine stream double-buffering
