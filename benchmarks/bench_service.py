@@ -18,6 +18,13 @@ cache hit rate, Mpx/s, and the compiled-shape count, and write the table to
 ``BENCH_service.json`` for later PRs to track.
 
 Run:  PYTHONPATH=src python benchmarks/bench_service.py [--out BENCH_service.json]
+
+``--quick`` swaps in a seconds-not-minutes scenario set (same shapes of
+traffic, smaller pools/schedules) shared by the CI ``bench-gate`` job and
+local smoke runs: the committed ``BENCH_service.json`` carries the quick
+baselines under ``"quick"`` plus the gate's tolerances under ``"gate"``,
+and ``benchmarks/check_bench_regression.py`` fails CI when a fresh quick
+run regresses past them.
 """
 
 from __future__ import annotations
@@ -67,6 +74,17 @@ SCENARIOS = (
     # paced open-loop traffic: latency under a sustainable arrival rate
     Scenario("paced_repeat", (128,), pool_size=8, n_requests=100,
              repeat_alpha=1.2, rate=200.0),
+)
+
+# the --quick set: same traffic shapes, schedules small enough for CI
+# (seconds, warmup included) — these are what the bench-gate compares
+QUICK_SCENARIOS = (
+    Scenario("repeat_small", (128,), pool_size=6, n_requests=48,
+             repeat_alpha=1.2),
+    Scenario("unique_small", (128,), pool_size=48, n_requests=48,
+             repeat_alpha=None),
+    Scenario("mixed_res", (64, 128), pool_size=12, n_requests=36,
+             repeat_alpha=1.0),
 )
 
 
@@ -178,14 +196,14 @@ def run_scenario(sc: Scenario) -> dict:
     return row
 
 
-def run_low_occupancy() -> dict:
+def run_low_occupancy(pool_size: int = 24) -> dict:
     """Closed-loop B=1 traffic (submit one, await it, submit the next):
     every flush has occupancy 1, the worst case for pad-to-max_batch. The
     SAME schedule runs under sub-bucket padding and under the old
     pad-to-max policy; sub-buckets must dispatch ~max_batch x fewer pixels
     (pad_fraction) and be no slower end to end."""
     res, max_batch = 128, 8
-    pool = [modis.snowfield(res, seed=500 + i) for i in range(24)]
+    pool = [modis.snowfield(res, seed=500 + i) for i in range(pool_size)]
     out = {"scenario": "low_occupancy", "n_requests": len(pool),
            "resolutions": [res], "traffic": "closed-loop B=1",
            "max_batch": max_batch}
@@ -279,15 +297,23 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_service.json")
     ap.add_argument("--scenario", default=None,
                     help="run a single scenario by name")
+    ap.add_argument("--quick", action="store_true",
+                    help="the small scenario set the CI bench-gate runs "
+                         "(seconds, not minutes); writes mode='quick'")
     args = ap.parse_args()
+    scenarios = QUICK_SCENARIOS if args.quick else SCENARIOS
+    extras = (
+        {"low_occupancy": lambda: run_low_occupancy(pool_size=10)}
+        if args.quick else EXTRA_SCENARIOS
+    )
     rows = []
-    for sc in SCENARIOS:
+    for sc in scenarios:
         if args.scenario and sc.name != args.scenario:
             continue
         row = run_scenario(sc)
         rows.append(row)
         print(json.dumps(row), flush=True)
-    for name, runner in EXTRA_SCENARIOS.items():
+    for name, runner in extras.items():
         if args.scenario and name != args.scenario:
             continue
         row = runner()
@@ -295,6 +321,7 @@ def main() -> None:
         print(json.dumps(row), flush=True)
     report = {
         "bench": "service_load_sweep",
+        "mode": "quick" if args.quick else "full",
         "platform": jax.default_backend(),
         "backend": YCHGEngine().resolve_backend(),
         "note": (
@@ -307,6 +334,28 @@ def main() -> None:
         ),
         "scenarios": rows,
     }
+    # re-recording over an existing baseline must not destroy the CI
+    # bench-gate's contract: a full re-run carries the committed "quick"
+    # baselines and "gate" tolerances forward, and a quick re-run aimed at
+    # the baseline file refreshes ONLY its "quick" section (never clobbers
+    # the full table). Point --out at a fresh path for a standalone report.
+    try:
+        with open(args.out) as f:
+            existing = json.load(f)
+    except (OSError, ValueError):
+        existing = None
+    if existing is not None:
+        if args.quick and existing.get("mode") != "quick":
+            existing["quick"] = {
+                "note": existing.get("quick", {}).get(
+                    "note", "baselines for the CI bench-gate"),
+                "scenarios": rows,
+            }
+            report = existing
+        elif not args.quick:
+            for section in ("quick", "gate"):
+                if section in existing:
+                    report[section] = existing[section]
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

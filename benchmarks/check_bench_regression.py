@@ -1,0 +1,143 @@
+"""CI perf-regression gate for the yCHG service benchmarks.
+
+Compares a fresh ``bench_service.py --quick`` run against the quick
+baselines committed in ``BENCH_service.json`` (its ``"quick"`` section)
+under the tolerances committed next to them (its ``"gate"`` section), and
+exits nonzero on any regression — turning the JSON from an archive into
+an enforced contract. Two families of checks:
+
+  * **speedup** — each quick scenario's service/naive speedup must stay
+    at least ``min_speedup_ratio`` x its baseline (wide tolerance: CI
+    boxes are noisy, interpret-mode numbers doubly so; the gate exists to
+    catch "the service stopped batching/caching", not 10% jitter);
+  * **pad fraction** — each scenario's pad_fraction may grow by at most
+    ``max_pad_fraction_increase`` over baseline, and ``low_occupancy``
+    must keep sub-bucket padding at least ``min_low_occupancy_pad_gap``
+    below the pad-to-max arm (the sub-batch ladder's whole point).
+
+``--simulate-regression`` degrades the fresh numbers before comparison
+(speedups halved-and-halved-again, pad fractions inflated) so CI can
+prove the gate actually trips — the bench-gate job runs that first and
+requires a nonzero exit, then runs the real comparison.
+
+Run:  PYTHONPATH=src python benchmarks/check_bench_regression.py \\
+          --baseline BENCH_service.json --fresh /tmp/fresh_quick.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+# used when BENCH_service.json predates the gate section (first rollout)
+DEFAULT_GATE = {
+    "min_speedup_ratio": 0.3,
+    "max_pad_fraction_increase": 0.4,
+    "min_low_occupancy_pad_gap": 0.5,
+}
+
+
+def load_quick_rows(report: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Scenario rows keyed by name, from either a quick-mode report
+    (top-level scenarios) or a full report carrying a 'quick' section."""
+    if report.get("mode") == "quick":
+        rows = report["scenarios"]
+    else:
+        quick = report.get("quick")
+        if quick is None:
+            raise SystemExit(
+                "baseline has no quick-mode scenarios ('quick' section "
+                "missing and mode != 'quick'); re-record with "
+                "bench_service.py --quick")
+        rows = quick["scenarios"]
+    return {row["scenario"]: row for row in rows}
+
+
+def simulate_regression(rows: Dict[str, Dict[str, Any]]) -> None:
+    """Degrade fresh numbers enough to trip every family of check."""
+    for row in rows.values():
+        if "speedup" in row:
+            row["speedup"] = round(row["speedup"] * 0.25, 2)
+        if "pad_fraction" in row:
+            row["pad_fraction"] = min(
+                1.0, round(row["pad_fraction"] + 0.5, 3))
+        if "sub_buckets_pad_fraction" in row:
+            # sub-batching "broken": pads like the pad-to-max arm again
+            row["sub_buckets_pad_fraction"] = row.get(
+                "pad_to_max_pad_fraction", 0.875)
+
+
+def check(baseline: Dict[str, Dict[str, Any]],
+          fresh: Dict[str, Dict[str, Any]],
+          gate: Dict[str, Any]) -> List[str]:
+    failures: List[str] = []
+    ratio = gate["min_speedup_ratio"]
+    pad_tol = gate["max_pad_fraction_increase"]
+    pad_gap = gate["min_low_occupancy_pad_gap"]
+    for name, base in baseline.items():
+        row = fresh.get(name)
+        if row is None:
+            failures.append(f"{name}: scenario missing from the fresh run")
+            continue
+        if "speedup" in base:
+            floor = round(base["speedup"] * ratio, 2)
+            if row["speedup"] < floor:
+                failures.append(
+                    f"{name}: speedup {row['speedup']} < {floor} "
+                    f"(= baseline {base['speedup']} x {ratio})")
+        if "pad_fraction" in base:
+            ceil = round(base["pad_fraction"] + pad_tol, 3)
+            if row["pad_fraction"] > ceil:
+                failures.append(
+                    f"{name}: pad_fraction {row['pad_fraction']} > {ceil} "
+                    f"(= baseline {base['pad_fraction']} + {pad_tol})")
+        if "sub_buckets_pad_fraction" in base:
+            gap = (row["pad_to_max_pad_fraction"]
+                   - row["sub_buckets_pad_fraction"])
+            if gap < pad_gap:
+                failures.append(
+                    f"{name}: sub-bucket pad advantage {gap:.3f} < "
+                    f"{pad_gap} (sub_buckets {row['sub_buckets_pad_fraction']}"
+                    f" vs pad_to_max {row['pad_to_max_pad_fraction']})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_service.json")
+    ap.add_argument("--fresh", required=True,
+                    help="report written by bench_service.py --quick")
+    ap.add_argument("--simulate-regression", action="store_true",
+                    help="degrade the fresh numbers first; the gate MUST "
+                         "exit nonzero (CI self-test)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline_report = json.load(f)
+    with open(args.fresh) as f:
+        fresh_report = json.load(f)
+    gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
+    baseline = load_quick_rows(baseline_report)
+    fresh = load_quick_rows(fresh_report)
+    if args.simulate_regression:
+        simulate_regression(fresh)
+        print("simulate-regression: fresh numbers degraded before check")
+    failures = check(baseline, fresh, gate)
+    print(f"gate: {len(baseline)} scenarios, thresholds {gate}")
+    for name in baseline:
+        row = fresh.get(name, {})
+        print(f"  {name}: speedup {row.get('speedup', '-')} "
+              f"(baseline {baseline[name].get('speedup', '-')}), "
+              f"pad {row.get('pad_fraction', '-')} "
+              f"(baseline {baseline[name].get('pad_fraction', '-')})")
+    if failures:
+        print("\nPERF REGRESSION:")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        sys.exit(1)
+    print("bench gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""`repro.frontend` — the network edge of the yCHG ROI service.
+
+`repro.service` answers "how do I serve the algorithm to in-process
+callers"; this package answers "how does traffic reach it over a wire":
+an asyncio HTTP/JSON transport (plus an optional length-prefixed TCP RPC)
+that bridges requests onto the threaded :class:`~repro.service.YCHGService`
+with ``run_in_executor`` + futures, streams batched results as NDJSON in
+completion order, maps admission-control sheds to HTTP 429 with a
+drain-rate-derived ``Retry-After``, and exposes ``/healthz`` +
+``/metrics`` (Prometheus text, per-bucket shed counters included).
+
+    from repro.frontend import ServerThread, YCHGClient
+    from repro.service import ServiceConfig, YCHGService
+
+    service = YCHGService(config=ServiceConfig(bucket_sides=(128, 256)))
+    with service, ServerThread(service) as srv, \\
+            YCHGClient("127.0.0.1", srv.port) as client:
+        out = client.analyze(mask)              # to_host()-shaped dict
+        for item in client.analyze_batch(masks):  # completion order
+            ...
+
+Results over the wire are **bit-identical** to in-process
+``service.submit`` (base64 of the raw array bytes, dtypes preserved) —
+the tier-1 suite and the CI frontend-smoke job both hold it to that bar.
+"""
+
+from repro.frontend.client import (
+    AsyncRPCClient,
+    BatchItem,
+    FrontendError,
+    FrontendOverloaded,
+    YCHGClient,
+)
+from repro.frontend.server import FrontendServer, ServerThread
+
+__all__ = [
+    "AsyncRPCClient",
+    "BatchItem",
+    "FrontendError",
+    "FrontendOverloaded",
+    "FrontendServer",
+    "ServerThread",
+    "YCHGClient",
+]

@@ -1,0 +1,272 @@
+"""Clients for the yCHG front end: blocking HTTP + async RPC.
+
+`YCHGClient` is the stdlib-only blocking client: one persistent HTTP/1.1
+connection (keep-alive, reconnect on failure), ``analyze`` for one mask,
+and **streaming** ``analyze_batch`` — results are yielded as the server
+completes them (NDJSON lines decoded incrementally off the chunked
+response), not after the whole batch lands, so a consumer can overlap its
+own work with the service's compute. A 429 on ``analyze`` raises
+:class:`FrontendOverloaded` carrying the server's drain-rate-derived
+``retry_after_s``; inside a batch stream, shed masks arrive as per-item
+error lines while admitted masks keep streaming.
+
+`AsyncRPCClient` speaks the length-prefixed TCP transport: many analyzes
+in flight on one connection, responses demuxed by id in completion order.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import http.client
+import json
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.frontend import protocol
+
+
+class FrontendError(RuntimeError):
+    """A non-2xx response from the front end (with its HTTP status)."""
+
+    def __init__(self, message: str, status: int = 500):
+        super().__init__(message)
+        self.status = status
+
+
+class FrontendOverloaded(FrontendError):
+    """HTTP 429: the service shed this request at an admission bound.
+
+    ``retry_after_s`` is the server's estimate of how long the current
+    backlog needs to drain (the ``Retry-After`` header, float precision
+    from the JSON body when present).
+    """
+
+    def __init__(self, message: str, retry_after_s: float = 1.0):
+        super().__init__(message, status=429)
+        self.retry_after_s = retry_after_s
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchItem:
+    """One completed line of a streamed batch: a result or an error."""
+
+    id: Any
+    result: Optional[Dict[str, np.ndarray]] = None
+    error: Optional[str] = None
+    status: int = 200
+    retry_after_s: Optional[float] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.result is not None
+
+
+def _decode_line(obj: Dict[str, Any]) -> BatchItem:
+    if "result" in obj:
+        return BatchItem(id=obj.get("id"),
+                         result=protocol.decode_result(obj["result"]))
+    return BatchItem(id=obj.get("id"), error=obj.get("error", "unknown"),
+                     status=int(obj.get("status", 500)),
+                     retry_after_s=obj.get("retry_after_s"))
+
+
+class YCHGClient:
+    """Blocking HTTP client over one keep-alive loopback connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8788, *,
+                 timeout: float = 300.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self._conn: Optional[http.client.HTTPConnection] = None
+
+    # ------------------------------------------------------------- plumbing
+
+    def _connection(self) -> http.client.HTTPConnection:
+        if self._conn is None:
+            self._conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.timeout)
+        return self._conn
+
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+
+    def __enter__(self) -> "YCHGClient":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def _request(self, method: str, path: str,
+                 body: Optional[bytes] = None) -> http.client.HTTPResponse:
+        """One request with a single transparent retry on a dropped
+        keep-alive connection (the server or an idle timeout closed it)."""
+        for attempt in (0, 1):
+            conn = self._connection()
+            try:
+                conn.request(method, path, body=body, headers={
+                    "Content-Type": "application/json"} if body else {})
+                return conn.getresponse()
+            except (http.client.HTTPException, ConnectionError, OSError):
+                self.close()
+                if attempt:
+                    raise
+        raise AssertionError("unreachable")
+
+    def wait_ready(self, timeout: float = 30.0) -> Dict[str, Any]:
+        """Poll /healthz until the server answers (connect retries), for
+        callers racing a freshly launched server process."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self.health()
+            except (FrontendError, ConnectionError, OSError):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.05)
+
+    # ------------------------------------------------------------- requests
+
+    def health(self) -> Dict[str, Any]:
+        resp = self._request("GET", "/healthz")
+        body = resp.read()
+        if resp.status != 200:
+            raise FrontendError(body.decode(errors="replace"), resp.status)
+        return json.loads(body)
+
+    def metrics_text(self) -> str:
+        resp = self._request("GET", "/metrics")
+        body = resp.read()
+        if resp.status != 200:
+            raise FrontendError(body.decode(errors="replace"), resp.status)
+        return body.decode()
+
+    def analyze(self, mask: np.ndarray,
+                id: Any = None) -> Dict[str, np.ndarray]:
+        """One mask -> the ``to_host()``-shaped result dict (bit-identical
+        to in-process ``service.submit(mask).result().to_host()``)."""
+        req = dict(protocol.encode_array(np.asarray(mask)))
+        body = json.dumps({"mask": req, "id": id}).encode()
+        resp = self._request("POST", "/v1/analyze", body)
+        payload = resp.read()
+        if resp.status == 429:
+            obj = json.loads(payload)
+            retry = obj.get("retry_after_s")
+            if retry is None:
+                retry = float(resp.headers.get("Retry-After", 1.0))
+            raise FrontendOverloaded(obj.get("error", "overloaded"),
+                                     retry_after_s=float(retry))
+        if resp.status != 200:
+            raise FrontendError(payload.decode(errors="replace"), resp.status)
+        return protocol.decode_result(json.loads(payload)["result"])
+
+    def analyze_batch(self, masks: Sequence[np.ndarray],
+                      ids: Optional[Iterable[Any]] = None,
+                      ) -> Iterator[BatchItem]:
+        """Submit a batch; yield :class:`BatchItem` per mask **in the
+        server's completion order**, as the lines arrive off the wire."""
+        id_list: List[Any] = (list(ids) if ids is not None
+                              else list(range(len(masks))))
+        if len(id_list) != len(masks):
+            raise ValueError(
+                f"{len(masks)} masks but {len(id_list)} ids")
+        items = []
+        for rid, m in zip(id_list, masks):
+            d = dict(protocol.encode_array(np.asarray(m)))
+            d["id"] = rid
+            items.append(d)
+        body = json.dumps({"masks": items}).encode()
+        resp = self._request("POST", "/v1/analyze_batch", body)
+        if resp.status != 200:
+            payload = resp.read()
+            raise FrontendError(payload.decode(errors="replace"), resp.status)
+        # http.client decodes the chunked framing; readline() returns one
+        # NDJSON line as soon as its chunk lands — that is the streaming
+        while True:
+            line = resp.readline()
+            if not line:
+                break
+            yield _decode_line(json.loads(line))
+
+
+class AsyncRPCClient:
+    """Length-prefixed TCP RPC client: pipelined analyzes on one socket."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8789):
+        self.host = host
+        self.port = port
+        self._reader: Optional[asyncio.StreamReader] = None
+        self._writer: Optional[asyncio.StreamWriter] = None
+        self._pending: Dict[int, "asyncio.Future[Dict[str, Any]]"] = {}
+        self._next_id = 0
+        self._demux: Optional[asyncio.Task] = None
+
+    async def connect(self) -> "AsyncRPCClient":
+        self._reader, self._writer = await asyncio.open_connection(
+            self.host, self.port)
+        self._demux = asyncio.ensure_future(self._demux_loop())
+        return self
+
+    async def _demux_loop(self) -> None:
+        assert self._reader is not None
+        try:
+            while True:
+                frame = await protocol.read_frame(self._reader)
+                if frame is None:
+                    break
+                fut = self._pending.pop(frame.get("id"), None)
+                if fut is not None and not fut.done():
+                    fut.set_result(frame)
+        except (protocol.ProtocolError, ConnectionError, OSError) as e:
+            for fut in self._pending.values():
+                if not fut.done():
+                    fut.set_exception(FrontendError(str(e)))
+            self._pending.clear()
+        finally:
+            for fut in self._pending.values():
+                if not fut.done():
+                    fut.set_exception(FrontendError("connection closed"))
+            self._pending.clear()
+
+    async def _call(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        assert self._writer is not None, "connect() first"
+        rid = self._next_id
+        self._next_id += 1
+        frame["id"] = rid
+        fut: "asyncio.Future[Dict[str, Any]]" = (
+            asyncio.get_running_loop().create_future())
+        self._pending[rid] = fut
+        self._writer.write(protocol.pack_frame(frame))
+        await self._writer.drain()
+        return await fut
+
+    async def analyze(self, mask: np.ndarray) -> Dict[str, np.ndarray]:
+        resp = await self._call(
+            {"op": "analyze", "mask": protocol.encode_array(np.asarray(mask))})
+        if "result" in resp:
+            return protocol.decode_result(resp["result"])
+        status = int(resp.get("status", 500))
+        if status == 429:
+            raise FrontendOverloaded(resp.get("error", "overloaded"),
+                                     retry_after_s=resp.get(
+                                         "retry_after_s", 1.0))
+        raise FrontendError(resp.get("error", "rpc error"), status)
+
+    async def health(self) -> Dict[str, Any]:
+        return await self._call({"op": "health"})
+
+    async def aclose(self) -> None:
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+        if self._demux is not None:
+            await asyncio.wait([self._demux], timeout=5)
+            self._demux.cancel()

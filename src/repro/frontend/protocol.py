@@ -1,0 +1,146 @@
+"""Wire format shared by the HTTP and RPC transports.
+
+Everything on the wire is JSON; arrays travel as raw little-endian bytes
+base64-encoded next to their shape and dtype, so a round trip is
+**bit-identical** — the CI frontend-smoke job holds a client result to
+byte equality with the in-process ``YCHGService.submit`` result, and this
+encoding is what makes that a meaningful check (float-free, no repr
+round-off, dtypes preserved).
+
+Three layers live here, all transport-agnostic and numpy-only (no jax):
+
+  * array codec — :func:`encode_array` / :func:`decode_array`;
+  * result codec — :func:`encode_result` / :func:`decode_result`: the
+    seven ``YCHGResult`` fields as encoded arrays (the host view a
+    ``result.to_host()`` call produces);
+  * framing — :func:`dumps_line` for NDJSON streaming over HTTP, and
+    :func:`pack_frame` / :func:`read_frame` for the length-prefixed TCP
+    RPC transport (4-byte big-endian payload length, then JSON).
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+# yCHG result fields, in the engine's canonical order
+RESULT_FIELDS = ("runs", "cut_vertices", "transitions", "births", "deaths",
+                 "n_hyperedges", "n_transitions")
+
+# one RPC frame's maximum payload: far above any bucket-ladder mask or
+# result, far below anything that could balloon a peer's memory
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+
+class ProtocolError(ValueError):
+    """A malformed wire payload (bad JSON shape, dtype, length, frame)."""
+
+
+# ------------------------------------------------------------ array codec
+
+
+def encode_array(a: np.ndarray) -> Dict[str, Any]:
+    """A numpy array as a JSON-safe dict: shape + dtype + base64 bytes."""
+    a = np.asarray(a)
+    if not a.flags.c_contiguous:
+        # NOT ascontiguousarray unconditionally: it silently promotes 0-d
+        # arrays (the B=1 result scalars) to 1-d, breaking bit-identity
+        a = np.ascontiguousarray(a)
+    return {
+        "shape": list(a.shape),
+        "dtype": str(a.dtype),
+        "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+    }
+
+
+def decode_array(d: Dict[str, Any]) -> np.ndarray:
+    """Inverse of :func:`encode_array`; extra keys (``id``) are ignored.
+
+    Validates that the payload length matches shape x dtype, so a
+    truncated or padded body fails loudly instead of reshaping garbage.
+    """
+    try:
+        shape = tuple(int(s) for s in d["shape"])
+        dtype = np.dtype(str(d["dtype"]))
+        raw = base64.b64decode(d["b64"], validate=True)
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"malformed array payload: {e}") from e
+    expect = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    if len(raw) != expect:
+        raise ProtocolError(
+            f"array payload is {len(raw)} bytes, shape {shape} dtype "
+            f"{dtype} needs {expect}")
+    return np.frombuffer(raw, dtype).reshape(shape).copy()
+
+
+# ----------------------------------------------------------- result codec
+
+
+def encode_result(result: Any) -> Dict[str, Any]:
+    """A ``YCHGResult`` (or host dict of its fields) as encoded arrays."""
+    host = result if isinstance(result, dict) else result.to_host()
+    return {f: encode_array(np.asarray(host[f])) for f in RESULT_FIELDS}
+
+
+def decode_result(d: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`encode_result`: the ``to_host()``-shaped dict."""
+    try:
+        return {f: decode_array(d[f]) for f in RESULT_FIELDS}
+    except KeyError as e:
+        raise ProtocolError(f"result payload missing field {e}") from e
+
+
+# ---------------------------------------------------------------- framing
+
+
+def dumps_line(obj: Any) -> bytes:
+    """One NDJSON line: compact JSON + newline (the HTTP stream unit)."""
+    return json.dumps(obj, separators=(",", ":")).encode() + b"\n"
+
+
+def pack_frame(obj: Any) -> bytes:
+    """One RPC frame: 4-byte big-endian payload length, then JSON."""
+    payload = json.dumps(obj, separators=(",", ":")).encode()
+    if len(payload) > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"frame payload {len(payload)} bytes exceeds "
+            f"MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    return len(payload).to_bytes(4, "big") + payload
+
+
+def unpack_frame_header(head: bytes) -> int:
+    """Payload length from the 4-byte frame header, bounds-checked."""
+    n = int.from_bytes(head, "big")
+    if n > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"frame of {n} bytes exceeds MAX_FRAME_BYTES={MAX_FRAME_BYTES}")
+    return n
+
+
+async def read_frame(reader: Any) -> Optional[Any]:
+    """Read one frame from an asyncio ``StreamReader``; None on clean EOF.
+
+    EOF mid-frame (header or payload truncated) raises
+    :class:`ProtocolError` — a peer vanishing between frames is normal,
+    vanishing inside one is a broken transport.
+    """
+    import asyncio
+
+    try:
+        head = await reader.readexactly(4)
+    except asyncio.IncompleteReadError as e:
+        if not e.partial:
+            return None
+        raise ProtocolError("EOF inside a frame header") from e
+    n = unpack_frame_header(head)
+    try:
+        payload = await reader.readexactly(n)
+    except asyncio.IncompleteReadError as e:
+        raise ProtocolError("EOF inside a frame payload") from e
+    try:
+        return json.loads(payload)
+    except ValueError as e:
+        raise ProtocolError(f"frame payload is not JSON: {e}") from e

@@ -1,0 +1,509 @@
+"""Asyncio HTTP/JSON (+ optional length-prefixed RPC) front end.
+
+`FrontendServer` puts a network edge on :class:`repro.service.YCHGService`
+without adding a second scheduler: every request is bridged onto the
+threaded service with ``loop.run_in_executor`` + ``asyncio.wrap_future``,
+so the service's own admission control is the only admission control —
+
+  * ``overload_policy="block"`` parks the executor worker (never the event
+    loop) until a slot frees: backpressure propagates to exactly the slow
+    client, and once all workers are parked further requests queue in the
+    executor — the whole edge slows to the service's pace;
+  * ``overload_policy="shed"`` maps :class:`ServiceOverloaded` to HTTP 429
+    with a ``Retry-After`` derived from the observed queue drain rate
+    (completions/second over a rolling sample), so clients back off for
+    roughly as long as the backlog needs to clear rather than a constant.
+
+Endpoints (HTTP/1.1, keep-alive, loopback-friendly):
+
+  ``GET  /healthz``           liveness + resolved backend + queue depth
+  ``GET  /metrics``           ``ServiceMetrics`` in Prometheus text format
+                              (per-bucket shed counters included)
+  ``POST /v1/analyze``        one mask -> one JSON result
+  ``POST /v1/analyze_batch``  masks -> chunked NDJSON, one line per result
+                              **in completion order** (a slow mask never
+                              blocks the lines behind it; shed masks get
+                              per-line 429 errors while admitted ones
+                              stream normally)
+
+The RPC transport speaks :func:`protocol.pack_frame` frames over TCP with
+the same completion-order discipline: many analyzes may be in flight per
+connection and responses demux by ``id``.
+
+``ServerThread`` runs the whole thing on a dedicated event-loop thread for
+synchronous callers (tests, the CLI smoke, benchmarks).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import math
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+from repro.frontend import protocol
+from repro.service import ServiceOverloaded, YCHGService
+
+# executor width: how many clients may sit inside service.submit at once
+# (under "block" each parked worker IS one unit of propagated backpressure)
+DEFAULT_SUBMIT_WORKERS = 32
+
+
+class _DrainRate:
+    """Rolling completions/second estimate for Retry-After.
+
+    Samples (monotonic time, completed count) at most once per interval;
+    the rate is measured across the window between the oldest kept sample
+    and now, so one quiet poll cannot zero it out.
+    """
+
+    def __init__(self, interval_s: float = 0.25, keep: int = 8):
+        self._interval = interval_s
+        self._keep = keep
+        self._samples: list[Tuple[float, int]] = []
+
+    def observe(self, completed: int) -> None:
+        now = time.monotonic()
+        if self._samples and now - self._samples[-1][0] < self._interval:
+            return
+        self._samples.append((now, completed))
+        del self._samples[: -self._keep]
+
+    def rate(self) -> float:
+        if len(self._samples) < 2:
+            return 0.0
+        (t0, c0), (t1, c1) = self._samples[0], self._samples[-1]
+        if t1 <= t0:
+            return 0.0
+        return max(0.0, (c1 - c0) / (t1 - t0))
+
+    def retry_after_s(self, queue_depth: int) -> float:
+        """Seconds until the current backlog plausibly drains; 1.0 when no
+        drain has been observed yet (cold server), clamped to [0.05, 30]."""
+        r = self.rate()
+        if r <= 0.0:
+            return 1.0
+        return min(30.0, max(0.05, (queue_depth + 1) / r))
+
+
+class FrontendServer:
+    """One HTTP (and optionally one RPC) listener over one service."""
+
+    def __init__(self, service: YCHGService, *, host: str = "127.0.0.1",
+                 port: int = 0, rpc_port: Optional[int] = None,
+                 submit_workers: int = DEFAULT_SUBMIT_WORKERS):
+        self.service = service
+        self.host = host
+        self._want_port = port
+        self._want_rpc_port = rpc_port
+        self._pool = ThreadPoolExecutor(
+            max_workers=submit_workers, thread_name_prefix="ychg-frontend")
+        self._drain = _DrainRate()
+        self._http_server: Optional[asyncio.AbstractServer] = None
+        self._rpc_server: Optional[asyncio.AbstractServer] = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    async def start(self) -> None:
+        self._http_server = await asyncio.start_server(
+            self._handle_http, self.host, self._want_port)
+        if self._want_rpc_port is not None:
+            self._rpc_server = await asyncio.start_server(
+                self._handle_rpc, self.host, self._want_rpc_port)
+
+    @property
+    def port(self) -> int:
+        assert self._http_server is not None, "server not started"
+        return self._http_server.sockets[0].getsockname()[1]
+
+    @property
+    def rpc_port(self) -> Optional[int]:
+        if self._rpc_server is None:
+            return None
+        return self._rpc_server.sockets[0].getsockname()[1]
+
+    async def aclose(self) -> None:
+        for srv in (self._http_server, self._rpc_server):
+            if srv is not None:
+                srv.close()
+                await srv.wait_closed()
+        self._pool.shutdown(wait=False)
+
+    # ----------------------------------------------------- service bridging
+
+    async def _submit(self, mask) -> Any:
+        """submit on the executor (a "block" park never blocks the loop),
+        then await the service future on the loop."""
+        loop = asyncio.get_running_loop()
+        cf = await loop.run_in_executor(self._pool, self.service.submit, mask)
+        return await asyncio.wrap_future(cf)
+
+    def _overload_body(self, exc: Exception) -> Tuple[Dict[str, Any], float]:
+        m = self.service.metrics()
+        self._drain.observe(m.completed)
+        retry = self._drain.retry_after_s(m.queue_depth)
+        return ({"error": str(exc), "status": 429,
+                 "retry_after_s": round(retry, 3)}, retry)
+
+    # ------------------------------------------------------------- HTTP side
+
+    async def _handle_http(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    head = await reader.readuntil(b"\r\n\r\n")
+                except asyncio.IncompleteReadError:
+                    break   # clean close between requests
+                method, target, headers = _parse_head(head)
+                body = b""
+                try:
+                    n = int(headers.get("content-length", "0") or "0")
+                except ValueError:
+                    await _respond_json(writer, 400, {
+                        "error": "malformed Content-Length"}, False)
+                    break
+                if n > protocol.MAX_FRAME_BYTES or n < 0:
+                    # same bound as the RPC transport: reject before
+                    # buffering, a Content-Length is just a claim
+                    await _respond_json(writer, 413, {
+                        "error": f"body of {n} bytes exceeds "
+                                 f"{protocol.MAX_FRAME_BYTES}"}, False)
+                    break
+                if n:
+                    body = await reader.readexactly(n)
+                keep = headers.get("connection", "").lower() != "close"
+                keep = await self._route(method, target, body, writer, keep)
+                if not keep:
+                    break
+        except (ConnectionError, asyncio.LimitOverrunError,
+                asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _route(self, method: str, target: str, body: bytes,
+                     writer: asyncio.StreamWriter, keep: bool) -> bool:
+        """Dispatch one request; returns whether to keep the connection."""
+        try:
+            if method == "GET" and target == "/healthz":
+                m = self.service.metrics()
+                await _respond_json(writer, 200, {
+                    "status": "ok", "backend": m.backend,
+                    "queue_depth": m.queue_depth}, keep)
+            elif method == "GET" and target == "/metrics":
+                await _respond(writer, 200, self._render_metrics().encode(),
+                               "text/plain; version=0.0.4", keep)
+            elif method == "POST" and target == "/v1/analyze":
+                await self._http_analyze(body, writer, keep)
+            elif method == "POST" and target == "/v1/analyze_batch":
+                await self._http_analyze_batch(body, writer)
+                keep = False   # chunked stream ends the exchange
+            else:
+                await _respond_json(writer, 404, {
+                    "error": f"no route for {method} {target}"}, keep)
+        except protocol.ProtocolError as e:
+            await _respond_json(writer, 400, {"error": str(e)}, keep)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            await _respond_json(writer, 400, {"error": f"bad request: {e}"},
+                                keep)
+        except ConnectionError:
+            raise   # the client is gone; nothing left to answer
+        except Exception as e:
+            # a failing submit (service closing, backend error) must come
+            # back as a 500, not a dropped connection the client retries
+            await _respond_json(writer, 500, {"error": str(e)}, keep)
+        return keep
+
+    async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
+                            keep: bool) -> None:
+        payload = json.loads(body)
+        mask = protocol.decode_array(payload["mask"])
+        try:
+            result = await self._submit(mask)
+        except ServiceOverloaded as e:
+            out, retry = self._overload_body(e)
+            await _respond_json(
+                writer, 429, out, keep,
+                extra=[("Retry-After", str(max(1, math.ceil(retry))))])
+            return
+        await _respond_json(
+            writer, 200,
+            {"id": payload.get("id"), "result": protocol.encode_result(result)},
+            keep)
+
+    async def _http_analyze_batch(self, body: bytes,
+                                  writer: asyncio.StreamWriter) -> None:
+        """Chunked NDJSON, one line per mask in COMPLETION order."""
+        payload = json.loads(body)
+        items = payload["masks"]
+        if not isinstance(items, list):
+            raise protocol.ProtocolError("'masks' must be a list")
+
+        async def run_one(i: int, item: Dict[str, Any]) -> Dict[str, Any]:
+            rid = item.get("id", i)
+            try:
+                mask = protocol.decode_array(item)
+                result = await self._submit(mask)
+            except ServiceOverloaded as e:
+                out, _ = self._overload_body(e)
+                out["id"] = rid
+                return out
+            except protocol.ProtocolError as e:
+                return {"id": rid, "error": str(e), "status": 400}
+            except Exception as e:   # a failed request must not kill the stream
+                return {"id": rid, "error": str(e), "status": 500}
+            return {"id": rid, "result": protocol.encode_result(result)}
+
+        writer.write(_head(200, "application/x-ndjson", keep=False,
+                           chunked=True))
+        tasks = [asyncio.ensure_future(run_one(i, it))
+                 for i, it in enumerate(items)]
+        try:
+            for fut in asyncio.as_completed(tasks):
+                line = protocol.dumps_line(await fut)
+                writer.write(_chunk(line))
+                await writer.drain()   # slow client -> backpressure here
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        finally:
+            for t in tasks:
+                t.cancel()
+
+    def _render_metrics(self) -> str:
+        """ServiceMetrics in Prometheus text exposition format."""
+        m = self.service.metrics()
+        self._drain.observe(m.completed)
+        lines = [
+            "# HELP ychg_* yCHG ROI service metrics "
+            "(see repro.service.metrics.ServiceMetrics)",
+        ]
+
+        def counter(name, value):
+            lines.append(f"# TYPE {name} counter")
+            lines.append(f"{name} {value}")
+
+        def gauge(name, value, labels=""):
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name}{labels} {value}")
+
+        counter("ychg_submitted_total", m.submitted)
+        counter("ychg_completed_total", m.completed)
+        counter("ychg_completed_from_cache_total", m.completed_from_cache)
+        counter("ychg_cache_hits_total", m.cache_hits)
+        counter("ychg_cache_misses_total", m.cache_misses)
+        counter("ychg_coalesced_total", m.coalesced)
+        counter("ychg_batches_total", m.batches)
+        counter("ychg_shed_total", m.shed)
+        counter("ychg_blocked_total", m.blocked)
+        lines.append("# TYPE ychg_shed_bucket_total counter")
+        for bucket, count in m.shed_by_bucket:
+            side, dtype = bucket
+            lines.append(
+                f'ychg_shed_bucket_total{{side="{side}",dtype="{dtype}"}} '
+                f"{count}")
+        gauge("ychg_queue_depth", m.queue_depth)
+        gauge("ychg_hit_rate", m.hit_rate)
+        gauge("ychg_p50_latency_ms", m.p50_latency_ms)
+        gauge("ychg_p95_latency_ms", m.p95_latency_ms)
+        gauge("ychg_mpx_per_s", m.mpx_per_s)
+        gauge("ychg_pad_fraction", m.pad_fraction)
+        gauge("ychg_compiled_shapes", m.n_compiled_shapes)
+        gauge("ychg_drain_rate_rps", round(self._drain.rate(), 3))
+        gauge("ychg_backend_info", 1, f'{{backend="{m.backend}"}}')
+        return "\n".join(lines) + "\n"
+
+    # -------------------------------------------------------------- RPC side
+
+    async def _handle_rpc(self, reader: asyncio.StreamReader,
+                          writer: asyncio.StreamWriter) -> None:
+        """Frame loop: many analyzes in flight, responses in completion
+        order, demuxed by id on the client side."""
+        wlock = asyncio.Lock()
+        tasks: set = set()
+
+        async def send(obj: Dict[str, Any]) -> None:
+            async with wlock:
+                writer.write(protocol.pack_frame(obj))
+                await writer.drain()
+
+        async def run_analyze(frame: Dict[str, Any]) -> None:
+            rid = frame.get("id")
+            try:
+                mask = protocol.decode_array(frame["mask"])
+                result = await self._submit(mask)
+            except ServiceOverloaded as e:
+                out, _ = self._overload_body(e)
+                out["id"] = rid
+                await send(out)
+                return
+            except (protocol.ProtocolError, KeyError, ValueError) as e:
+                await send({"id": rid, "error": str(e), "status": 400})
+                return
+            except Exception as e:
+                await send({"id": rid, "error": str(e), "status": 500})
+                return
+            await send({"id": rid,
+                        "result": protocol.encode_result(result)})
+
+        try:
+            while True:
+                try:
+                    frame = await protocol.read_frame(reader)
+                except protocol.ProtocolError as e:
+                    await send({"error": str(e), "status": 400})
+                    break
+                if frame is None:
+                    break
+                op = frame.get("op")
+                if op == "analyze":
+                    t = asyncio.ensure_future(run_analyze(frame))
+                    tasks.add(t)
+                    t.add_done_callback(tasks.discard)
+                elif op == "health":
+                    m = self.service.metrics()
+                    await send({"id": frame.get("id"), "status": "ok",
+                                "backend": m.backend,
+                                "queue_depth": m.queue_depth})
+                else:
+                    await send({"id": frame.get("id"),
+                                "error": f"unknown op {op!r}", "status": 400})
+            if tasks:
+                await asyncio.gather(*tasks, return_exceptions=True)
+        except (ConnectionError, OSError):
+            pass
+        finally:
+            for t in tasks:
+                t.cancel()
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+
+# ------------------------------------------------------------ HTTP plumbing
+
+
+def _parse_head(head: bytes) -> Tuple[str, str, Dict[str, str]]:
+    lines = head.decode("latin-1").split("\r\n")
+    try:
+        method, target, _version = lines[0].split(" ", 2)
+    except ValueError:
+        raise protocol.ProtocolError(f"bad request line {lines[0]!r}")
+    headers: Dict[str, str] = {}
+    for line in lines[1:]:
+        if not line:
+            continue
+        name, _, value = line.partition(":")
+        headers[name.strip().lower()] = value.strip()
+    return method, target, headers
+
+
+_STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           413: "Payload Too Large", 429: "Too Many Requests",
+           500: "Internal Server Error"}
+
+
+def _head(status: int, content_type: str, *, keep: bool,
+          chunked: bool = False, length: Optional[int] = None,
+          extra: Optional[list] = None) -> bytes:
+    lines = [f"HTTP/1.1 {status} {_STATUS.get(status, 'Status')}",
+             f"Content-Type: {content_type}",
+             f"Connection: {'keep-alive' if keep else 'close'}"]
+    if chunked:
+        lines.append("Transfer-Encoding: chunked")
+    else:
+        lines.append(f"Content-Length: {length or 0}")
+    for name, value in (extra or []):
+        lines.append(f"{name}: {value}")
+    return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+
+def _chunk(data: bytes) -> bytes:
+    return f"{len(data):x}\r\n".encode() + data + b"\r\n"
+
+
+async def _respond(writer: asyncio.StreamWriter, status: int, body: bytes,
+                   content_type: str, keep: bool,
+                   extra: Optional[list] = None) -> None:
+    writer.write(_head(status, content_type, keep=keep, length=len(body),
+                       extra=extra) + body)
+    await writer.drain()
+
+
+async def _respond_json(writer: asyncio.StreamWriter, status: int,
+                        obj: Any, keep: bool,
+                        extra: Optional[list] = None) -> None:
+    await _respond(writer, status, json.dumps(obj).encode(),
+                   "application/json", keep, extra)
+
+
+# -------------------------------------------------------- sync entry point
+
+
+class ServerThread:
+    """A `FrontendServer` on its own event-loop thread, for sync callers.
+
+    ::
+
+        with ServerThread(service) as srv:
+            client = YCHGClient("127.0.0.1", srv.port)
+            ...
+
+    Startup errors (port in use, bad host) re-raise in the constructor;
+    ``close()`` stops the loop and joins the thread.
+    """
+
+    def __init__(self, service: YCHGService, *, host: str = "127.0.0.1",
+                 port: int = 0, rpc_port: Optional[int] = None,
+                 start_timeout: float = 30.0, **kw: Any):
+        self._server = FrontendServer(service, host=host, port=port,
+                                      rpc_port=rpc_port, **kw)
+        self._ready = threading.Event()
+        self._stop: Optional[asyncio.Event] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._exc: Optional[BaseException] = None
+        self.port: Optional[int] = None
+        self.rpc_port: Optional[int] = None
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._main()),
+            name="ychg-frontend-server", daemon=True)
+        self._thread.start()
+        if not self._ready.wait(start_timeout):
+            raise RuntimeError("frontend server failed to start in time")
+        if self._exc is not None:
+            raise self._exc
+
+    async def _main(self) -> None:
+        try:
+            await self._server.start()
+            self.port = self._server.port
+            self.rpc_port = self._server.rpc_port
+            self._loop = asyncio.get_running_loop()
+            self._stop = asyncio.Event()
+        except BaseException as e:
+            self._exc = e
+            self._ready.set()
+            return
+        self._ready.set()
+        await self._stop.wait()
+        await self._server.aclose()
+
+    def close(self, timeout: float = 30.0) -> None:
+        if self._loop is not None and self._stop is not None:
+            self._loop.call_soon_threadsafe(self._stop.set)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "ServerThread":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

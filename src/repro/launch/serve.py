@@ -1,14 +1,23 @@
 """CLI serve driver: --arch <id> --smoke serves batched requests; or
---workload ychg runs the paper's image-analysis service on mask batches.
+--workload ychg runs the paper's image-analysis service on mask batches,
+in-process or over the network front end.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
   PYTHONPATH=src python -m repro.launch.serve --workload ychg --res 2048
+  # network modes (repro.frontend):
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --listen 127.0.0.1:8788                  # serve over loopback HTTP
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --connect http://127.0.0.1:8788          # drive a remote server
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --res 64 --batch 4 --frontend-smoke      # CI end-to-end assert
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -107,6 +116,143 @@ def serve_ychg(args):
                 "overload pass failed: admission control shed nothing")
 
 
+def _parse_hostport(s: str, default_host: str = "127.0.0.1"):
+    """"HOST:PORT", ":PORT", or "PORT" -> (host, port)."""
+    if "//" in s:
+        s = s.split("//", 1)[1]
+    s = s.rstrip("/")
+    host, _, port = s.rpartition(":")
+    return (host or default_host), int(port)
+
+
+def _service_config(args, **overrides):
+    from repro.service import ServiceConfig
+
+    sides = (tuple(int(b) for b in args.buckets.split(","))
+             if args.buckets else (args.res,))
+    knobs = dict(bucket_sides=sides, max_batch=args.batch,
+                 max_queue_depth=args.max_queue_depth,
+                 bucket_queue_depth=args.bucket_queue_depth,
+                 overload_policy=args.policy)
+    knobs.update(overrides)
+    return ServiceConfig(**knobs)
+
+
+def serve_listen(args):
+    """Serve the ROI service over loopback/network HTTP (+ optional RPC)
+    until interrupted — the production front end behind a CLI flag."""
+    from repro.engine import YCHGEngine
+    from repro.frontend import ServerThread
+    from repro.service import YCHGService
+
+    host, port = _parse_hostport(args.listen)
+    rpc_port = (_parse_hostport(args.rpc_listen)[1]
+                if args.rpc_listen else None)
+    with YCHGService(YCHGEngine(), _service_config(args)) as svc:
+        with ServerThread(svc, host=host, port=port,
+                          rpc_port=rpc_port) as srv:
+            extra = (f" (rpc on {host}:{srv.rpc_port})"
+                     if rpc_port is not None else "")
+            print(f"yCHG frontend listening on http://{host}:{srv.port}"
+                  f"{extra}; buckets {svc.config.bucket_sides}, "
+                  f"max_batch {svc.config.max_batch}", flush=True)
+            try:
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("shutting down", flush=True)
+
+
+def serve_connect(args):
+    """Client mode: drive a running front end with the mask workload and
+    report wire-level timing (the network twin of the in-process pass)."""
+    from repro.data import modis
+    from repro.frontend import YCHGClient
+
+    host, port = _parse_hostport(args.connect)
+    masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
+    px = args.batch * args.res * args.res
+    with YCHGClient(host, port) as client:
+        health = client.wait_ready(timeout=60.0)
+        print(f"connected to {host}:{port}: backend {health['backend']}")
+        t0 = time.perf_counter()
+        items = list(client.analyze_batch(masks))
+        dt = time.perf_counter() - t0
+        failed = [it for it in items if not it.ok]
+        if failed:
+            raise SystemExit(
+                f"{len(failed)} of {len(items)} requests failed; first: "
+                f"{failed[0].status} {failed[0].error}")
+        edges = [int(it.result["n_hyperedges"]) for it in
+                 sorted(items, key=lambda it: it.id)]
+        print(f"  wire  {dt * 1e3:8.1f}ms for {args.batch} x {args.res}^2 "
+              f"masks ({px / dt / 1e6:.0f} Mpx/s); hyperedges: {edges}")
+
+
+def frontend_smoke(args):
+    """CI end-to-end assert over a real loopback socket (ephemeral port):
+
+      1. a streamed client batch is BIT-IDENTICAL (values, dtypes, shapes)
+         to in-process ``YCHGService.submit`` on the same masks;
+      2. at a full admission queue the wire answer is HTTP 429 with a
+         Retry-After, and the service's shed counter moves (visible in
+         /metrics down to the per-bucket counter).
+
+    Exits nonzero on any failure — the frontend-smoke CI job runs this.
+    """
+    from repro.data import modis
+    from repro.engine import YCHGEngine
+    from repro.frontend import FrontendOverloaded, ServerThread, YCHGClient
+    from repro.service import YCHGService
+
+    masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
+    engine = YCHGEngine()
+    with YCHGService(engine, _service_config(args)) as svc, \
+            ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        items = {it.id: it for it in client.analyze_batch(masks)}
+        want = [svc.submit(m).result(timeout=600).to_host() for m in masks]
+        for i, host_res in enumerate(want):
+            item = items.get(i)
+            if item is None or not item.ok:
+                raise SystemExit(f"frontend smoke: mask {i} failed over the "
+                                 f"wire: {item and item.error}")
+            for field, arr in host_res.items():
+                a, b = np.asarray(arr), item.result[field]
+                if not (np.array_equal(a, b) and a.dtype == b.dtype
+                        and a.shape == b.shape):
+                    raise SystemExit(
+                        f"frontend smoke: field {field!r} of mask {i} is "
+                        f"not bit-identical over the wire")
+        print(f"frontend smoke: {len(masks)} masks round-tripped over "
+              f"loopback HTTP bit-identical to in-process submit")
+
+    # overload leg: ONE admission slot, held by an in-process submit parked
+    # in a long delay window, so the wire request deterministically sheds
+    ocfg = _service_config(args, max_delay_ms=10_000.0, max_queue_depth=1,
+                           bucket_queue_depth=1, overload_policy="shed")
+    with YCHGService(engine, ocfg) as osvc:
+        holder = osvc.submit(masks[0])
+        with ServerThread(osvc) as srv, \
+                YCHGClient("127.0.0.1", srv.port) as client:
+            try:
+                client.analyze(masks[1])
+                raise SystemExit("frontend smoke: expected HTTP 429, "
+                                 "got a result")
+            except FrontendOverloaded as e:
+                if not e.retry_after_s > 0:
+                    raise SystemExit("frontend smoke: 429 carried no "
+                                     "positive retry_after_s")
+            metrics = client.metrics_text()
+        for needle in ("ychg_shed_total 1", "ychg_shed_bucket_total{"):
+            if needle not in metrics:
+                raise SystemExit(
+                    f"frontend smoke: {needle!r} missing from /metrics "
+                    f"after an overload shed")
+    holder.result(timeout=600)   # the admitted request still resolves
+    print("frontend smoke: overload answered 429 with Retry-After and the "
+          "per-bucket shed counter moved")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm", choices=["lm", "ychg"])
@@ -119,8 +265,30 @@ def main():
     ap.add_argument("--overload", action="store_true",
                     help="ychg only: add a bounded-queue overload pass and "
                          "fail unless admission control sheds")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="ychg only: serve over HTTP until interrupted")
+    ap.add_argument("--rpc-listen", default=None, metavar="HOST:PORT",
+                    help="with --listen: also serve the framed TCP RPC")
+    ap.add_argument("--connect", default=None, metavar="URL",
+                    help="ychg only: run the workload against a running "
+                         "front end (http://HOST:PORT)")
+    ap.add_argument("--frontend-smoke", action="store_true",
+                    help="ychg only: loopback HTTP end-to-end assert "
+                         "(bit-identical round trip + 429 on overload)")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated bucket sides (default: --res)")
+    ap.add_argument("--max-queue-depth", type=int, default=None)
+    ap.add_argument("--bucket-queue-depth", type=int, default=None)
+    ap.add_argument("--policy", default="block", choices=["block", "shed"],
+                    help="overload policy for --listen/--frontend-smoke")
     args = ap.parse_args()
-    if args.workload == "ychg":
+    if args.frontend_smoke:
+        frontend_smoke(args)
+    elif args.listen:
+        serve_listen(args)
+    elif args.connect:
+        serve_connect(args)
+    elif args.workload == "ychg":
         serve_ychg(args)
     else:
         serve_lm(args)

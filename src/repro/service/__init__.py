@@ -11,7 +11,12 @@ double-buffered dispatch loop (ingest of bucket n+1 overlaps device compute
 of bucket n). ``max_queue_depth`` + ``overload_policy`` add admission
 control: past the bound, ``submit`` blocks (backpressure) or raises
 :class:`ServiceOverloaded` (shed), with shed/blocked counters in
-:class:`ServiceMetrics`.
+:class:`ServiceMetrics`. Admission and dispatch are bucket-FAIR:
+``bucket_queue_depth`` bounds each ``(side, dtype)`` bucket separately
+(per-bucket shed counters in ``ServiceMetrics.shed_by_bucket``) and ready
+buckets flush deficit-round-robin, so one hot resolution can neither
+starve nor shed everyone else's traffic. The network edge over this
+package lives in :mod:`repro.frontend`.
 
     from repro.service import ServiceConfig, YCHGService
 

@@ -18,7 +18,7 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import numpy as np
 
@@ -44,6 +44,10 @@ class ServiceMetrics:
     mpx_per_s: float          # real (unpadded) request pixels served
     pad_fraction: float       # dispatched pixels that were padding
     backend: str              # engine's resolved backend at snapshot time
+    # sheds attributed to the rejected request's (side, dtype) bucket —
+    # sorted ((bucket, count), ...) pairs, so fairness regressions (one hot
+    # bucket shedding everyone) are visible per bucket, not just in total
+    shed_by_bucket: Tuple[Tuple[Any, int], ...] = ()
 
     @property
     def n_compiled_shapes(self) -> int:
@@ -112,7 +116,9 @@ class MetricsRecorder:
 
     def snapshot(self, *, queue_depth: int, cache_hits: int,
                  cache_misses: int, backend: str, shed: int = 0,
-                 blocked: int = 0) -> ServiceMetrics:
+                 blocked: int = 0,
+                 shed_by_bucket: Tuple[Tuple[Any, int], ...] = (),
+                 ) -> ServiceMetrics:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64) * 1e3
             span = (
@@ -142,4 +148,5 @@ class MetricsRecorder:
                     if self._dispatched_px else 0.0
                 ),
                 backend=backend,
+                shed_by_bucket=shed_by_bucket,
             )

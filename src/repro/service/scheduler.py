@@ -34,6 +34,24 @@ slot (``overload_policy="block"``: backpressure, the producer slows to the
 service's pace) or raises :class:`ServiceOverloaded` immediately
 (``"shed"``: fail fast, the producer handles the rejection). Shed and
 blocked counts are exposed for the service's metrics.
+
+**Per-bucket fairness.** A single global bound is bucket-blind: a flood of
+one hot bucket fills the queue and the bound sheds *everyone*, including
+the trickle of another bucket that the service could easily serve. Two
+mechanisms fix that:
+
+  * ``bucket_queue_depth`` bounds admitted-but-unretired requests *per
+    bucket*, with per-bucket shed counters — a flooded bucket sheds
+    against its own bound while every other bucket admits freely;
+  * ``fair=True`` (the default) serves ready buckets **deficit round
+    robin**: the ingest drain banks arrivals first, then each active
+    bucket is visited in turn with a quantum of ``max_batch`` request
+    credits per round, flushing while its deficit covers the next flush's
+    occupancy. A hot bucket with a deep backlog dispatches one batch per
+    round, interleaved with everyone else, instead of flushing its whole
+    backlog in arrival order ahead of an aged minority request.
+    ``fair=False`` keeps the legacy arrival-order flushes so benchmarks
+    can measure exactly what fairness buys (``benchmarks/bench_frontend``).
 """
 
 from __future__ import annotations
@@ -91,20 +109,32 @@ class SchedulerConfig:
                      briefly in flight while the oldest retires: a ready
                      batch is never blocked behind an old computation.
     max_queue_depth  bound on admitted-but-unretired requests; None = no
-                     admission control.
-    overload_policy  what submit does at the bound: "block" (wait for a
+                     global admission control.
+    bucket_queue_depth  the same bound applied PER BUCKET (None = off):
+                     a hot bucket sheds/blocks against its own allowance
+                     while other buckets keep admitting — the fairness
+                     complement to the bucket-blind global bound. Both
+                     bounds may be active at once; the bucket bound is
+                     checked first and attributed per bucket.
+    overload_policy  what submit does at a bound: "block" (wait for a
                      slot) or "shed" (raise ServiceOverloaded).
     sub_batches      pad flushes to the power-of-two ladder (True) or
                      always to max_batch (False, the pre-ladder behaviour,
                      kept for apples-to-apples benchmarking).
+    fair             serve ready buckets deficit-round-robin (True, the
+                     default: one max_batch-worth of requests per bucket
+                     per round) or in arrival order (False, the legacy
+                     policy, kept for apples-to-apples benchmarking).
     """
 
     max_batch: int = 8
     max_delay_ms: float = 2.0
     inflight_jobs: int = 2
     max_queue_depth: Optional[int] = None
+    bucket_queue_depth: Optional[int] = None
     overload_policy: str = "block"
     sub_batches: bool = True
+    fair: bool = True
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -116,6 +146,10 @@ class SchedulerConfig:
             raise ValueError(
                 f"max_queue_depth must be >= 1 or None, "
                 f"got {self.max_queue_depth}")
+        if self.bucket_queue_depth is not None and self.bucket_queue_depth < 1:
+            raise ValueError(
+                f"bucket_queue_depth must be >= 1 or None, "
+                f"got {self.bucket_queue_depth}")
         if self.overload_policy not in ("block", "shed"):
             raise ValueError(
                 f"overload_policy must be 'block' or 'shed', "
@@ -156,9 +190,16 @@ class Scheduler:
         self._q: "queue.Queue" = queue.Queue()
         self._pending: Dict[Hashable, List[Any]] = {}
         self._inflight: "Deque[_Job]" = deque()   # scheduler thread only
+        # DRR state, scheduler thread only: _rr is the ring of buckets with
+        # pending requests (activation order), _deficit the per-bucket
+        # request credits banked across rounds
+        self._rr: "Deque[Hashable]" = deque()
+        self._deficit: Dict[Hashable, int] = {}
         self._cond = threading.Condition()
         self._depth = 0       # admitted and not yet retired
+        self._depth_by_bucket: Dict[Hashable, int] = {}
         self._shed = 0
+        self._shed_by_bucket: Dict[Hashable, int] = {}
         self._blocked = 0
         self._closed = False
         self._started = False
@@ -172,31 +213,59 @@ class Scheduler:
     def submit(self, request: Any) -> None:
         """Admit and enqueue one request; called from any thread.
 
-        At ``max_queue_depth``: blocks until a retirement frees a slot
-        (policy "block") or raises :class:`ServiceOverloaded` (policy
-        "shed"). Raises ``RuntimeError`` once closed — including for a
-        blocked submitter woken by ``close()``.
+        At ``max_queue_depth`` (global) or ``bucket_queue_depth`` (this
+        request's bucket): blocks until a retirement frees a slot (policy
+        "block") or raises :class:`ServiceOverloaded` (policy "shed").
+        Raises ``RuntimeError`` once closed — including for a blocked
+        submitter woken by ``close()``. The blocking park happens inside
+        ``Condition.wait``, which RELEASES the lock, so a parked producer
+        never deadlocks a concurrent ``close()`` or the completion path
+        that must take the lock to free its slot
+        (``tests/test_scheduler.py::test_blocked_producers_never_deadlock_close``).
         """
-        bound = self.config.max_queue_depth
+        bucket = getattr(request, "bucket", None)
         with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
-            if bound is not None and self._depth >= bound:
+            over = self._over_bound(bucket)
+            if over is not None:
                 if self.config.overload_policy == "shed":
                     self._shed += 1
-                    raise ServiceOverloaded(
-                        f"queue depth {self._depth} at max_queue_depth="
-                        f"{bound} (overload_policy='shed')")
+                    self._shed_by_bucket[bucket] = (
+                        self._shed_by_bucket.get(bucket, 0) + 1)
+                    raise ServiceOverloaded(over)
                 self._blocked += 1
-                while self._depth >= bound and not self._closed:
+                while (self._over_bound(bucket) is not None
+                       and not self._closed):
                     self._cond.wait()
                 if self._closed:
                     raise RuntimeError("scheduler is closed")
             self._depth += 1
+            self._depth_by_bucket[bucket] = (
+                self._depth_by_bucket.get(bucket, 0) + 1)
             # enqueue under the lock: close() also puts its sentinel under
             # the lock, so an admitted request can never land behind the
             # sentinel and silently never resolve
             self._q.put(request)
+
+    def _over_bound(self, bucket: Hashable) -> Optional[str]:
+        """The admission-rejection message, or None when a slot is free.
+        Caller holds the lock. The per-bucket bound is checked first so a
+        flooded bucket's rejection is attributed to ITS allowance even
+        when the global bound is also at capacity."""
+        bbound = self.config.bucket_queue_depth
+        if bbound is not None:
+            depth = self._depth_by_bucket.get(bucket, 0)
+            if depth >= bbound:
+                return (f"bucket {bucket!r} depth {depth} at "
+                        f"bucket_queue_depth={bbound} "
+                        f"(overload_policy='{self.config.overload_policy}')")
+        bound = self.config.max_queue_depth
+        if bound is not None and self._depth >= bound:
+            return (f"queue depth {self._depth} at max_queue_depth="
+                    f"{bound} (overload_policy="
+                    f"'{self.config.overload_policy}')")
+        return None
 
     # ------------------------------------------------------------- introspection
 
@@ -205,6 +274,20 @@ class Scheduler:
         """Submits rejected with ServiceOverloaded (policy "shed")."""
         with self._cond:
             return self._shed
+
+    @property
+    def shed_by_bucket(self) -> Dict[Hashable, int]:
+        """Sheds attributed to the rejected request's bucket (all sheds
+        carry a bucket, whichever bound tripped)."""
+        with self._cond:
+            return dict(self._shed_by_bucket)
+
+    @property
+    def depth_by_bucket(self) -> Dict[Hashable, int]:
+        """Admitted-but-unretired requests per bucket (what
+        bucket_queue_depth bounds)."""
+        with self._cond:
+            return dict(self._depth_by_bucket)
 
     @property
     def blocked(self) -> int:
@@ -255,13 +338,12 @@ class Scheduler:
     # --------------------------------------------------------------- the loop
 
     def _loop(self) -> None:
-        delay = self.config.max_delay_ms / 1e3
         while True:
             with self._cond:
                 oldest = (min(rs[0].t_submit for rs in self._pending.values())
                           if self._pending else None)
             if oldest is not None:
-                timeout = max(0.0, oldest + delay - time.monotonic())
+                timeout = max(0.0, oldest + self._delay() - time.monotonic())
             elif self._inflight:
                 timeout = 0.0   # work outstanding: poll, don't sleep
             else:
@@ -280,11 +362,11 @@ class Scheduler:
                 if item is _SHUTDOWN:
                     shutdown = True
                     break
-                with self._cond:
-                    reqs = self._pending.setdefault(item.bucket, [])
-                    reqs.append(item)
-                    full = len(reqs) >= self.config.max_batch
-                if full:
+                full = self._enqueue_pending(item)
+                # legacy (fair=False) flushes a bucket the moment it fills,
+                # i.e. strictly in arrival order; fair mode banks the whole
+                # drain first so _serve_ready can interleave buckets
+                if full and not self.config.fair:
                     self._flush(item.bucket)
                 try:
                     item = self._q.get_nowait()
@@ -292,23 +374,88 @@ class Scheduler:
                     item = None
             if shutdown:
                 break
-            now = time.monotonic()
-            with self._cond:
-                due = [b for b, rs in self._pending.items()
-                       if now - rs[0].t_submit >= delay]
-            for bucket in due:
-                self._flush(bucket)
+            served = self._serve_ready()
             # idle: retire ONE job, then loop back to poll the queue, so a
             # request arriving mid-drain is bucketed after at most one
             # completion instead of waiting behind every outstanding job
-            if not ingested and oldest is None and not due and self._inflight:
+            if (not ingested and oldest is None and not served
+                    and self._inflight):
                 self._retire_one()
         self._drain()
 
+    def _delay(self) -> float:
+        return self.config.max_delay_ms / 1e3
+
+    def _enqueue_pending(self, item: Any) -> bool:
+        """Bank one ingested request in its bucket (activating the bucket
+        in the DRR ring if new); True when the bucket is now full."""
+        with self._cond:
+            reqs = self._pending.get(item.bucket)
+            if reqs is None:
+                self._pending[item.bucket] = reqs = []
+                if item.bucket not in self._rr:
+                    self._rr.append(item.bucket)
+            reqs.append(item)
+            return len(reqs) >= self.config.max_batch
+
+    def _ready_buckets(self, now: float) -> List[Hashable]:
+        """Buckets due for a flush — full, or oldest request aged past the
+        delay window — in ring (activation) order."""
+        delay = self._delay()
+        with self._cond:
+            ready = {b for b, rs in self._pending.items()
+                     if len(rs) >= self.config.max_batch
+                     or now - rs[0].t_submit >= delay}
+        for b in ready:
+            if b not in self._rr:   # ring self-repair: a bookkeeping bug
+                self._rr.append(b)  # may cost fairness, never liveness
+        return [b for b in self._rr if b in ready]
+
+    def _serve_ready(self) -> int:
+        """Flush every ready bucket; returns the number of flushes.
+
+        Fair mode is textbook deficit round robin in request units: each
+        outer round visits every ready bucket once in ring order, banks a
+        quantum of ``max_batch`` credits, and flushes while the deficit
+        covers the next flush's occupancy — so a bucket with a deep
+        backlog dispatches ~one full batch per round, interleaved with
+        every other bucket, and an emptied bucket forfeits its credit
+        (no hoarding). Legacy mode flushes ready buckets in ring order
+        with no quantum, which together with the ingest-time
+        flush-on-full reproduces the old arrival-order policy.
+        """
+        served = 0
+        quantum = self.config.max_batch
+        while True:
+            now = time.monotonic()
+            ready = self._ready_buckets(now)
+            if not ready:
+                return served
+            if not self.config.fair:
+                for b in ready:
+                    self._flush(b)
+                    served += 1
+                continue
+            for b in ready:
+                self._deficit[b] = self._deficit.get(b, 0) + quantum
+                while True:
+                    with self._cond:
+                        rs = self._pending.get(b)
+                        occ = (min(len(rs), self.config.max_batch)
+                               if rs else 0)
+                        is_ready = rs is not None and (
+                            len(rs) >= self.config.max_batch
+                            or now - rs[0].t_submit >= self._delay())
+                    if not is_ready or self._deficit.get(b, 0) < occ:
+                        break
+                    self._deficit[b] -= occ
+                    self._flush(b)
+                    served += 1
+
     def _drain(self) -> None:
-        """Shutdown drain: ingest everything still admitted (flushing
-        buckets that fill, so no flush ever exceeds ``max_batch``), flush
-        every partial bucket, retire every in-flight job."""
+        """Shutdown drain: ingest everything still admitted, then flush
+        bucket by bucket in ring order (each flush capped at ``max_batch``)
+        until nothing is pending, and retire every in-flight job."""
         while True:
             try:
                 item = self._q.get_nowait()
@@ -316,31 +463,46 @@ class Scheduler:
                 break
             if item is _SHUTDOWN:
                 continue
+            self._enqueue_pending(item)
+        while True:
             with self._cond:
-                reqs = self._pending.setdefault(item.bucket, [])
-                reqs.append(item)
-                full = len(reqs) >= self.config.max_batch
-            if full:
-                self._flush(item.bucket)
-        with self._cond:
-            buckets = list(self._pending)
-        for bucket in buckets:
-            self._flush(bucket)
+                # ring order, with a direct-listing fallback so a ring
+                # bookkeeping bug could only ever cost fairness, not the
+                # drain's termination
+                buckets = ([b for b in self._rr if b in self._pending]
+                           or list(self._pending))
+            if not buckets:
+                break
+            for bucket in buckets:
+                self._flush(bucket)
         while self._inflight:
             self._retire_one()
 
     def _flush(self, bucket: Hashable) -> None:
-        """Dispatch one bucket at its sub-batch size; keep at most
-        ``inflight_jobs`` outstanding."""
+        """Dispatch one batch from a bucket at its sub-batch size; keep at
+        most ``inflight_jobs`` outstanding. A flush takes at most
+        ``max_batch`` requests — anything beyond stays pending (and keeps
+        its age), so no flush ever exceeds the compiled-shape ladder."""
         with self._cond:
-            requests = self._pending.pop(bucket)
+            reqs = self._pending[bucket]
+            requests = reqs[: self.config.max_batch]
+            rest = reqs[self.config.max_batch:]
+            if rest:
+                self._pending[bucket] = rest
+            else:
+                del self._pending[bucket]
+                self._deficit.pop(bucket, None)
+                try:
+                    self._rr.remove(bucket)
+                except ValueError:
+                    pass
         batch = (pick_sub_batch(len(requests), self.config.max_batch)
                  if self.config.sub_batches else self.config.max_batch)
         try:
             handle = self._dispatch(bucket, requests, batch)
         except Exception as e:   # config/backend errors -> fail this slice
             self._fail(requests, e)
-            self._release(len(requests))
+            self._release(requests)
             return
         self._inflight.append(_Job(requests, handle))
         # strictly past the bound: inflight_jobs means N outstanding, not
@@ -355,9 +517,18 @@ class Scheduler:
         except Exception as e:   # a raising complete() must not kill the loop
             self._fail(job.requests, e)
         finally:
-            self._release(len(job.requests))
+            self._release(job.requests)
 
-    def _release(self, n: int) -> None:
+    def _release(self, requests: List[Any]) -> None:
+        """Free the admission slots of a retired/failed slice (one bucket
+        per slice) and wake any producers parked at a bound."""
         with self._cond:
-            self._depth -= n
+            self._depth -= len(requests)
+            if requests:
+                b = getattr(requests[0], "bucket", None)
+                left = self._depth_by_bucket.get(b, 0) - len(requests)
+                if left > 0:
+                    self._depth_by_bucket[b] = left
+                else:
+                    self._depth_by_bucket.pop(b, None)
             self._cond.notify_all()

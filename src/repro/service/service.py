@@ -84,7 +84,18 @@ class ServiceConfig:
                       retires.
     latency_window    number of recent latencies kept for p50/p95.
     max_queue_depth   admission bound on accepted-but-unfinished requests;
-                      None disables admission control entirely.
+                      None disables the global bound.
+    bucket_queue_depth  the same admission bound applied PER BUCKET (None
+                      = off): a flood of one resolution sheds/blocks
+                      against its own allowance while every other bucket
+                      keeps admitting — the global bound alone is
+                      bucket-blind and sheds minority traffic with the
+                      flood. Per-bucket shed counts are in
+                      ``ServiceMetrics.shed_by_bucket``.
+    fair              serve ready buckets deficit-round-robin (True, the
+                      default) instead of strictly in arrival order
+                      (False) — a hot bucket's backlog dispatches one
+                      batch per round, interleaved with other buckets.
     overload_policy   at the bound, ``submit`` either blocks until a slot
                       frees ("block", backpressure) or raises
                       :class:`ServiceOverloaded` ("shed", fail fast).
@@ -106,8 +117,10 @@ class ServiceConfig:
     inflight_buckets: int = 2
     latency_window: int = 4096
     max_queue_depth: Optional[int] = None
+    bucket_queue_depth: Optional[int] = None
     overload_policy: str = "block"
     sub_batches: bool = True
+    fair: bool = True
 
     def __post_init__(self):
         if not self.bucket_sides or list(self.bucket_sides) != sorted(
@@ -131,8 +144,10 @@ class ServiceConfig:
             max_delay_ms=self.max_delay_ms,
             inflight_jobs=self.inflight_buckets,
             max_queue_depth=self.max_queue_depth,
+            bucket_queue_depth=self.bucket_queue_depth,
             overload_policy=self.overload_policy,
             sub_batches=self.sub_batches,
+            fair=self.fair,
         )
 
 
@@ -253,6 +268,8 @@ class YCHGService:
             cache_misses=self.cache.misses,
             shed=self._scheduler.shed,
             blocked=self._scheduler.blocked,
+            shed_by_bucket=tuple(
+                sorted(self._scheduler.shed_by_bucket.items())),
             backend=self.engine.resolve_backend(),
         )
 

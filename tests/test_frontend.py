@@ -1,0 +1,317 @@
+"""`repro.frontend` suite: wire codecs + the HTTP/RPC edge, over loopback.
+
+Tier-1 socket policy (tests/README.md §Frontend tests): **loopback only,
+ephemeral ports** — every server binds 127.0.0.1 port 0 (the OS picks a
+free port), nothing listens on external interfaces, no fixed port can
+collide across parallel CI jobs. No wall-clock assertions: overload cases
+are pinned by holding admission slots with requests parked in a long
+delay window (or behind a gated engine), never by racing a timer.
+
+The bar mirrors the service suite's: every result decoded off the wire is
+**bit-identical** (values, dtypes, shapes) to what in-process
+``YCHGService.submit`` returns for the same mask.
+"""
+
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.engine import YCHGEngine
+from repro.frontend import (
+    AsyncRPCClient,
+    FrontendError,
+    FrontendOverloaded,
+    ServerThread,
+    YCHGClient,
+    protocol,
+)
+from repro.service import ServiceConfig, YCHGService
+
+TIMEOUT = 300.0
+
+
+def _mask(shape, seed=0, density=0.5):
+    rng = np.random.default_rng(seed)
+    return (rng.random(shape) < density).astype(np.uint8)
+
+
+def _assert_host_equal(got, want):
+    """Bit-identical host dicts: values, dtypes, AND shapes per field."""
+    assert set(got) == set(want)
+    for field in want:
+        a, b = np.asarray(want[field]), got[field]
+        assert a.shape == b.shape, field
+        assert a.dtype == b.dtype, field
+        assert np.array_equal(a, b), field
+
+
+# ------------------------------------------------------------ wire codecs
+
+
+@pytest.mark.parametrize("arr", [
+    np.zeros((), np.int32),                       # 0-d result scalar
+    np.arange(7, dtype=np.int32),
+    (np.arange(12).reshape(3, 4) % 2).astype(bool),
+    np.arange(6, dtype=np.uint8).reshape(2, 3),
+    np.asarray(np.arange(8, dtype=np.int64).reshape(2, 4).T),  # non-contig
+])
+def test_array_codec_roundtrip_is_bit_identical(arr):
+    through_json = json.loads(json.dumps(protocol.encode_array(arr)))
+    out = protocol.decode_array(through_json)
+    assert out.shape == arr.shape and out.dtype == arr.dtype
+    assert np.array_equal(out, arr)
+
+
+def test_array_codec_rejects_malformed_payloads():
+    good = protocol.encode_array(np.arange(4, dtype=np.int32))
+    bad_len = dict(good, shape=[5])               # bytes don't cover shape
+    with pytest.raises(protocol.ProtocolError, match="bytes"):
+        protocol.decode_array(bad_len)
+    with pytest.raises(protocol.ProtocolError, match="malformed"):
+        protocol.decode_array(dict(good, dtype="not-a-dtype"))
+    with pytest.raises(protocol.ProtocolError, match="malformed"):
+        protocol.decode_array({"shape": [4], "dtype": "int32"})  # no b64
+    with pytest.raises(protocol.ProtocolError, match="malformed"):
+        protocol.decode_array(dict(good, b64="!!not base64!!"))
+
+
+def test_result_codec_roundtrip_matches_to_host():
+    result = YCHGEngine().analyze(_mask((9, 13), seed=3))
+    want = result.to_host()
+    got = protocol.decode_result(
+        json.loads(json.dumps(protocol.encode_result(result))))
+    _assert_host_equal(got, want)
+
+
+def test_frame_roundtrip_eof_and_bounds():
+    obj = {"op": "analyze", "id": 3,
+           "mask": protocol.encode_array(np.zeros((2, 2), np.uint8))}
+
+    async def read_from(data, eof=True):
+        reader = asyncio.StreamReader()
+        reader.feed_data(data)
+        if eof:
+            reader.feed_eof()
+        return await protocol.read_frame(reader)
+
+    frame = protocol.pack_frame(obj)
+    assert asyncio.run(read_from(frame)) == json.loads(json.dumps(obj))
+    # clean EOF between frames -> None, EOF inside a frame -> ProtocolError
+    assert asyncio.run(read_from(b"")) is None
+    with pytest.raises(protocol.ProtocolError, match="EOF inside"):
+        asyncio.run(read_from(frame[: len(frame) - 2]))
+    # an absurd frame header is rejected before any allocation
+    huge = (protocol.MAX_FRAME_BYTES + 1).to_bytes(4, "big")
+    with pytest.raises(protocol.ProtocolError, match="MAX_FRAME_BYTES"):
+        asyncio.run(read_from(huge + b"x"))
+
+
+# --------------------------------------------------------- HTTP transport
+
+
+def test_http_analyze_bit_identical_to_in_process_submit():
+    mask = _mask((24, 30), seed=10)
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        got = client.analyze(mask)
+        want = svc.submit(mask).result(timeout=TIMEOUT).to_host()
+        _assert_host_equal(got, want)
+        health = client.health()
+        assert health["status"] == "ok"
+        assert health["backend"] == svc.engine.resolve_backend()
+
+
+def test_http_batch_streams_every_result_with_ids():
+    masks = [_mask((10 + i, 20), seed=20 + i) for i in range(6)]
+    ids = [f"req-{i}" for i in range(6)]
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=4, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        items = list(client.analyze_batch(masks, ids=ids))
+        assert sorted(it.id for it in items) == sorted(ids)
+        assert all(it.ok for it in items)
+        by_id = {it.id: it for it in items}
+        for rid, mask in zip(ids, masks):
+            want = svc.submit(mask).result(timeout=TIMEOUT).to_host()
+            _assert_host_equal(by_id[rid].result, want)
+
+
+def test_http_overload_maps_shed_to_429_with_retry_after():
+    """One admission slot, held by an in-process submit parked in a long
+    delay window: the wire request must shed as HTTP 429 carrying a
+    positive Retry-After, and /metrics must show the (per-bucket) shed."""
+    masks = [_mask((16, 16), seed=s) for s in (40, 41)]
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=8, max_delay_ms=10_000.0,
+        max_queue_depth=1, overload_policy="shed"))
+    try:
+        with ServerThread(svc) as srv, \
+                YCHGClient("127.0.0.1", srv.port) as client:
+            holder = svc.submit(masks[0])       # occupies the only slot
+            with pytest.raises(FrontendOverloaded) as exc_info:
+                client.analyze(masks[1])
+            assert exc_info.value.retry_after_s > 0
+            assert exc_info.value.status == 429
+            text = client.metrics_text()
+            assert "ychg_shed_total 1" in text
+            assert 'ychg_shed_bucket_total{side="16",dtype="uint8"} 1' in text
+            assert "ychg_backend_info" in text
+    finally:
+        svc.close()                             # drains the admitted holder
+    assert holder.result(timeout=TIMEOUT).batch_size == 1
+
+
+# the canonical gated-engine test double (parks every dispatch until
+# released) lives next to the service suite; same-directory imports are
+# the established pattern here (see ychg_invariants)
+from test_service import _GatedEngine  # noqa: E402
+
+
+def test_http_batch_streams_shed_errors_alongside_cache_hits():
+    """Partial overload inside one streamed batch: the shed mask arrives
+    as a per-line 429 error while a cache-served mask still streams its
+    result — one bad request never poisons the stream. Deterministic: the
+    only admission slot is held behind a gated engine, the served mask is
+    a prior cache entry (hits consume no slot), the excess mask sheds."""
+    engine = _GatedEngine()
+    cached_mask = _mask((16, 16), seed=50)
+    holder_mask = _mask((16, 16), seed=51)
+    shed_mask = _mask((16, 16), seed=52)
+    svc = YCHGService(engine, ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0,
+        max_queue_depth=1, overload_policy="shed"))
+    try:
+        engine.resume.set()                     # prime the cache ungated
+        svc.analyze(cached_mask, timeout=TIMEOUT)
+        engine.resume.clear()
+        engine.entered.clear()
+        holder = svc.submit(holder_mask)        # parks in the gated engine
+        assert engine.entered.wait(TIMEOUT)
+        with ServerThread(svc) as srv, \
+                YCHGClient("127.0.0.1", srv.port) as client:
+            items = {it.id: it for it in client.analyze_batch(
+                [cached_mask, shed_mask], ids=["hit", "excess"])}
+        assert items["hit"].ok
+        _assert_host_equal(
+            items["hit"].result,
+            svc.submit(cached_mask).result(timeout=TIMEOUT).to_host())
+        assert not items["excess"].ok
+        assert items["excess"].status == 429
+        assert items["excess"].retry_after_s is not None
+    finally:
+        engine.resume.set()
+        svc.close()
+    assert holder.result(timeout=TIMEOUT).batch_size == 1
+
+
+def test_http_bad_requests_are_400_not_disconnects():
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        resp = client._request("POST", "/v1/analyze", b"this is not json")
+        assert resp.status == 400
+        resp.read()
+        resp = client._request("GET", "/no/such/route")
+        assert resp.status == 404
+        resp.read()
+        # a mask whose payload doesn't cover its shape fails loudly
+        bad = protocol.encode_array(_mask((8, 8)))
+        bad["shape"] = [8, 9]
+        resp = client._request("POST", "/v1/analyze",
+                               json.dumps({"mask": bad}).encode())
+        assert resp.status == 400
+        resp.read()
+        # and the connection is still serviceable afterwards
+        assert client.health()["status"] == "ok"
+
+
+def test_http_malformed_or_oversized_content_length_is_rejected():
+    """A bogus Content-Length answers 400, an absurd one 413 (the RPC
+    frame bound applied to HTTP bodies) — never a dropped connection or
+    an attempted multi-GB buffer."""
+    import socket
+
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv:
+        def raw(head: bytes) -> bytes:
+            with socket.create_connection(("127.0.0.1", srv.port),
+                                          timeout=30) as s:
+                s.sendall(head)
+                return s.recv(65536)
+
+        resp = raw(b"POST /v1/analyze HTTP/1.1\r\n"
+                   b"Content-Length: abc\r\n\r\n")
+        assert resp.split(b"\r\n", 1)[0] == b"HTTP/1.1 400 Bad Request"
+        resp = raw(b"POST /v1/analyze HTTP/1.1\r\n"
+                   b"Content-Length: 99999999999\r\n\r\n")
+        assert resp.split(b"\r\n", 1)[0] == b"HTTP/1.1 413 Payload Too Large"
+
+
+def test_http_failed_submit_is_500_not_a_dropped_connection():
+    """A submit that raises anything besides ServiceOverloaded (here: the
+    service was closed under the server) must surface as an HTTP 500 —
+    pre-fix the exception escaped the handler and the socket just died,
+    which the client's transparent retry then turned into a SECOND
+    doomed submit."""
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        svc.close()
+        body = json.dumps(
+            {"mask": protocol.encode_array(_mask((8, 8)))}).encode()
+        resp = client._request("POST", "/v1/analyze", body)
+        assert resp.status == 500
+        assert "closed" in resp.read().decode()
+
+
+# ---------------------------------------------------------- RPC transport
+
+
+def test_rpc_pipelined_analyzes_bit_identical():
+    masks = [_mask((12 + i, 18), seed=60 + i) for i in range(5)]
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=4, max_delay_ms=1.0))
+    with svc, ServerThread(svc, rpc_port=0) as srv:
+        async def go():
+            client = await AsyncRPCClient(
+                "127.0.0.1", srv.rpc_port).connect()
+            try:
+                outs = await asyncio.gather(
+                    *[client.analyze(m) for m in masks])
+                health = await client.health()
+            finally:
+                await client.aclose()
+            return outs, health
+
+        outs, health = asyncio.run(go())
+        assert health["status"] == "ok"
+        for mask, got in zip(masks, outs):
+            want = svc.submit(mask).result(timeout=TIMEOUT).to_host()
+            _assert_host_equal(got, want)
+
+
+def test_rpc_unknown_op_is_an_error_response():
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc, rpc_port=0) as srv:
+        async def go():
+            reader, writer = await asyncio.open_connection(
+                "127.0.0.1", srv.rpc_port)
+            writer.write(protocol.pack_frame({"op": "explode", "id": 9}))
+            await writer.drain()
+            resp = await protocol.read_frame(reader)
+            writer.close()
+            await writer.wait_closed()
+            return resp
+
+        resp = asyncio.run(go())
+        assert resp["id"] == 9 and resp["status"] == 400
+        assert "unknown op" in resp["error"]

@@ -257,8 +257,176 @@ def test_scheduler_config_validation():
         SchedulerConfig(inflight_jobs=0)
     with pytest.raises(ValueError, match="max_queue_depth"):
         SchedulerConfig(max_queue_depth=0)
+    with pytest.raises(ValueError, match="bucket_queue_depth"):
+        SchedulerConfig(bucket_queue_depth=0)
     with pytest.raises(ValueError, match="overload_policy"):
         SchedulerConfig(overload_policy="drop")
+
+
+# --------------------------------------------- per-bucket fairness (PR 5)
+
+
+def test_bucket_bound_sheds_only_the_hot_bucket():
+    """bucket_queue_depth is per bucket: a flooded bucket sheds against
+    its own allowance (typed error naming the bucket, counted in
+    shed_by_bucket) while another bucket keeps admitting freely."""
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           bucket_queue_depth=2, overload_policy="shed")
+    hot, cold = ("HOT", "u8"), ("COLD", "u8")
+    sched.submit(Req("h0", bucket=hot))
+    sched.submit(Req("h1", bucket=hot))
+    # both HOT slots held (their jobs are gated mid-complete / in flight)
+    for i in range(3):
+        with pytest.raises(ServiceOverloaded, match="bucket_queue_depth=2"):
+            sched.submit(Req(f"hx{i}", bucket=hot))
+    # the cold bucket is untouched by the hot bucket's flood
+    sched.submit(Req("c0", bucket=cold))
+    sched.submit(Req("c1", bucket=cold))
+    assert sched.shed == 3
+    assert sched.shed_by_bucket == {hot: 3}
+    assert sched.depth_by_bucket == {hot: 2, cold: 2}
+    fake.open_gates()
+    _wait_until(lambda: sched.depth == 0, "admitted jobs to retire")
+    sched.submit(Req("h2", bucket=hot))   # freed slots re-admit
+    sched.close()
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert dispatched == {"h0", "h1", "h2", "c0", "c1"}
+    assert sched.shed_by_bucket == {hot: 3}   # cold never shed
+
+
+def test_bucket_bound_block_wakes_on_own_buckets_release():
+    """Policy "block" at a bucket bound parks the submitter; a retirement
+    in THAT bucket frees the slot and admits it."""
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           bucket_queue_depth=1, overload_policy="block")
+    hot = ("HOT", "u8")
+    sched.submit(Req("h0", bucket=hot))
+    done = threading.Event()
+
+    def blocked_submit():
+        sched.submit(Req("h1", bucket=hot))
+        done.set()
+
+    t = threading.Thread(target=blocked_submit, daemon=True)
+    t.start()
+    _wait_until(lambda: sched.blocked == 1, "submitter to hit the gate")
+    assert not done.is_set()
+    # a DIFFERENT bucket admits straight through while hot is parked
+    sched.submit(Req("c0", bucket=("COLD", "u8")))
+    _wait_until(lambda: 0 in fake.entered, "h0 to reach complete")
+    fake.resume[0].set()                     # retire h0 -> hot slot frees
+    _wait_until(done.is_set, "blocked hot submitter to be admitted")
+    fake.open_gates()
+    t.join(TIMEOUT)
+    sched.close()
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert dispatched == {"h0", "h1", "c0"}
+
+
+def test_fair_drr_interleaves_hot_backlog_with_minority():
+    """The tentpole's fairness bar, engine-free: a 16-deep hot-bucket
+    backlog must NOT dispatch back to back ahead of a lone minority
+    request. Deficit round robin serves one max_batch flush per bucket
+    per round, so the order is HOT(8), COLD(1), HOT(8); the legacy
+    fair=False policy flushes in arrival order, HOT(8), HOT(8), COLD(1)
+    (pinned below as the contrast)."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=True)
+    for i in range(16):
+        sched.submit(Req(f"h{i}", bucket=("HOT", "u8")))
+    sched.submit(Req("c0", bucket=("COLD", "u8")))
+    sched.start()
+    sched.close()
+    order = [(b, len(names)) for b, names, _ in fake.dispatches]
+    assert order == [(("HOT", "u8"), 8), (("COLD", "u8"), 1),
+                     (("HOT", "u8"), 8)]
+    # occupancy rides along intact and in FIFO order within the bucket
+    hot_names = [n for b, names, _ in fake.dispatches
+                 if b == ("HOT", "u8") for n in names]
+    assert hot_names == [f"h{i}" for i in range(16)]
+
+
+def test_unfair_legacy_policy_serves_hot_backlog_first():
+    """fair=False keeps the arrival-order policy (the benchmark's unfair
+    arm): the minority request waits behind the whole hot backlog."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=False)
+    for i in range(16):
+        sched.submit(Req(f"h{i}", bucket=("HOT", "u8")))
+    sched.submit(Req("c0", bucket=("COLD", "u8")))
+    sched.start()
+    sched.close()
+    order = [(b, len(names)) for b, names, _ in fake.dispatches]
+    assert order == [(("HOT", "u8"), 8), (("HOT", "u8"), 8),
+                     (("COLD", "u8"), 1)]
+
+
+def test_flush_never_exceeds_max_batch_under_accumulation():
+    """Fair mode banks the whole ingest drain before serving, so a bucket
+    can hold more than max_batch pending — every flush must still cap at
+    max_batch (the compiled-shape ladder bound)."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=4, max_delay_ms=0.0,
+                           fair=True)
+    for i in range(11):
+        sched.submit(Req(f"r{i}"))
+    sched.start()
+    sched.close()
+    assert all(len(names) <= 4 for _, names, _ in fake.dispatches)
+    assert [len(names) for _, names, _ in fake.dispatches] == [4, 4, 3]
+    assert [n for names in fake.completions for n in names] == [
+        f"r{i}" for i in range(11)]
+
+
+# ------------------------------------- blocked submit vs close (PR 5 fix)
+
+
+def test_blocked_producers_never_deadlock_close():
+    """Regression guard for the admission gate's locking discipline: a
+    producer parked at the bound waits inside ``Condition.wait``, which
+    RELEASES the lock — so a concurrent ``close()`` can always take the
+    lock, wake every parked producer (they raise RuntimeError), and
+    drain the admitted work. If submit ever parked while HOLDING the
+    lock (busy-wait, sleep-under-lock), this test would deadlock and
+    time out rather than pass."""
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(max_batch=1, max_delay_ms=1.0,
+                           max_queue_depth=1, overload_policy="block")
+    sched.submit(Req("a"))
+    _wait_until(lambda: 0 in fake.entered, "a to park mid-complete")
+    errors = []
+
+    def blocked_submit(i):
+        try:
+            sched.submit(Req(f"late{i}"))
+        except RuntimeError as e:
+            errors.append(e)
+
+    producers = [threading.Thread(target=blocked_submit, args=(i,),
+                                  daemon=True) for i in range(3)]
+    for t in producers:
+        t.start()
+    _wait_until(lambda: sched.blocked == 3, "producers to park at the gate")
+    # close() from yet another thread: it must wake all three parked
+    # producers immediately even though its own drain is still pinned
+    # behind the gated complete
+    closer = threading.Thread(target=sched.close, daemon=True)
+    closer.start()
+    for t in producers:
+        t.join(TIMEOUT)
+        assert not t.is_alive(), "a parked producer deadlocked close()"
+    assert len(errors) == 3
+    assert all("closed" in str(e) for e in errors)
+    fake.open_gates()            # let the drain retire the admitted job
+    closer.join(TIMEOUT)
+    assert not closer.is_alive()
+    assert ("a",) in fake.completions
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert dispatched == {"a"}   # nothing parked was ever admitted
 
 
 # ------------------------------------------- the three scheduling bugfixes

@@ -475,6 +475,35 @@ def test_overload_admits_cache_hits_and_coalesces_for_free():
     _assert_result_matches_analyze(f1.result(timeout=TIMEOUT), leader_mask)
 
 
+def test_per_bucket_bound_sheds_flood_not_minority():
+    """Satellite (per-bucket fairness): under a skewed two-bucket load
+    with ``bucket_queue_depth`` set, the flooded bucket sheds against its
+    own allowance while the minority bucket's shed count stays ZERO and
+    all its requests resolve. Determinism per the no-wall-clock policy:
+    a long delay window holds admitted requests pending, so the flooded
+    bucket's bound is occupied exactly when the excess submits arrive."""
+    flood = [_mask((16, 16), seed=200 + i) for i in range(6)]
+    minority = [_mask((32, 32), seed=300 + i) for i in range(2)]
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16, 32), max_batch=8, max_delay_ms=10_000.0,
+        bucket_queue_depth=2, overload_policy="shed"))
+    try:
+        admitted = [svc.submit(m) for m in flood[:2]]   # fill the 16-bucket
+        for m_ in flood[2:]:
+            with pytest.raises(ServiceOverloaded,
+                               match="bucket_queue_depth=2"):
+                svc.submit(m_)
+        # the minority bucket admits freely while the flood is shedding
+        minority_futs = [svc.submit(m) for m in minority]
+        met = svc.metrics()
+        assert met.shed == 4 and met.blocked == 0
+        assert met.shed_by_bucket == (((16, "uint8"), 4),)
+    finally:
+        svc.close()   # drains everything admitted
+    for mask, fut in zip(flood[:2] + minority, admitted + minority_futs):
+        _assert_result_matches_analyze(fut.result(timeout=TIMEOUT), mask)
+
+
 class _GatedEngine(YCHGEngine):
     """Holds every dispatch at the analyze_batch door until released —
     pins "the queue is full because work is genuinely in flight"."""
