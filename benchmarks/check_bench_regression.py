@@ -15,6 +15,15 @@ an enforced contract. Two families of checks:
     must keep sub-bucket padding at least ``min_low_occupancy_pad_gap``
     below the pad-to-max arm (the sub-batch ladder's whole point).
 
+A third family gates the fleet archive: ``--fleet BENCH_fleet.json``
+checks the committed ``fleet_vs_single`` row's hard invariants — the
+router path stayed **bit-identical**, repeat traffic after a restart hit
+a **sibling cache** (``peer_hits > 0``), and when the recording box had
+``cores >= 4`` the throughput ratio met the ``min_fleet_ratio`` bar
+(core-starved recordings must carry their ``cpu_limited`` note instead).
+``--fleet`` may run standalone (no ``--fresh``) so the fleet-smoke CI
+job can gate the archive without re-running the service bench.
+
 ``--simulate-regression`` degrades the fresh numbers before comparison
 (speedups halved-and-halved-again, pad fractions inflated) so CI can
 prove the gate actually trips — the bench-gate job runs that first and
@@ -36,6 +45,7 @@ DEFAULT_GATE = {
     "min_speedup_ratio": 0.3,
     "max_pad_fraction_increase": 0.4,
     "min_low_occupancy_pad_gap": 0.5,
+    "min_fleet_ratio": 2.0,
 }
 
 
@@ -104,33 +114,74 @@ def check(baseline: Dict[str, Dict[str, Any]],
     return failures
 
 
+def check_fleet(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
+    """Hard invariants of the committed fleet archive (no fresh run
+    needed: these are properties a recording must have to be committed)."""
+    failures: List[str] = []
+    rows = {row["scenario"]: row for row in report.get("scenarios", [])}
+    row = rows.get("fleet_vs_single")
+    if row is None:
+        return ["fleet archive has no fleet_vs_single scenario"]
+    if row.get("bit_identical") is not True:
+        failures.append("fleet_vs_single: router path not bit-identical")
+    if not row.get("peer_hits", 0) > 0:
+        failures.append(
+            "fleet_vs_single: peer_hits == 0 — repeat traffic after a "
+            "restart was recomputed instead of served from a sibling cache")
+    cores, ratio = row.get("cores", 0), row.get("fleet_throughput_ratio")
+    if cores >= 4:
+        if ratio is None or ratio < gate["min_fleet_ratio"]:
+            failures.append(
+                f"fleet_vs_single: ratio {ratio} < {gate['min_fleet_ratio']} "
+                f"on {cores} cores")
+    elif "cpu_limited" not in row.get("note", ""):
+        failures.append(
+            f"fleet_vs_single: recorded on {cores} core(s) without the "
+            "cpu_limited note — re-record with bench_fleet.py")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_service.json")
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh", default=None,
                     help="report written by bench_service.py --quick")
+    ap.add_argument("--fleet", default=None,
+                    help="BENCH_fleet.json to check invariants of (may "
+                         "run standalone, without --fresh)")
     ap.add_argument("--simulate-regression", action="store_true",
                     help="degrade the fresh numbers first; the gate MUST "
                          "exit nonzero (CI self-test)")
     args = ap.parse_args()
+    if args.fresh is None and args.fleet is None:
+        ap.error("nothing to do: pass --fresh and/or --fleet")
     with open(args.baseline) as f:
         baseline_report = json.load(f)
-    with open(args.fresh) as f:
-        fresh_report = json.load(f)
     gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
-    baseline = load_quick_rows(baseline_report)
-    fresh = load_quick_rows(fresh_report)
-    if args.simulate_regression:
-        simulate_regression(fresh)
-        print("simulate-regression: fresh numbers degraded before check")
-    failures = check(baseline, fresh, gate)
-    print(f"gate: {len(baseline)} scenarios, thresholds {gate}")
-    for name in baseline:
-        row = fresh.get(name, {})
-        print(f"  {name}: speedup {row.get('speedup', '-')} "
-              f"(baseline {baseline[name].get('speedup', '-')}), "
-              f"pad {row.get('pad_fraction', '-')} "
-              f"(baseline {baseline[name].get('pad_fraction', '-')})")
+    failures: List[str] = []
+    if args.fresh is not None:
+        with open(args.fresh) as f:
+            fresh_report = json.load(f)
+        baseline = load_quick_rows(baseline_report)
+        fresh = load_quick_rows(fresh_report)
+        if args.simulate_regression:
+            simulate_regression(fresh)
+            print("simulate-regression: fresh numbers degraded before check")
+        failures += check(baseline, fresh, gate)
+        print(f"gate: {len(baseline)} scenarios, thresholds {gate}")
+        for name in baseline:
+            row = fresh.get(name, {})
+            print(f"  {name}: speedup {row.get('speedup', '-')} "
+                  f"(baseline {baseline[name].get('speedup', '-')}), "
+                  f"pad {row.get('pad_fraction', '-')} "
+                  f"(baseline {baseline[name].get('pad_fraction', '-')})")
+    if args.fleet is not None:
+        with open(args.fleet) as f:
+            fleet_report = json.load(f)
+        fleet_failures = check_fleet(fleet_report, gate)
+        failures += fleet_failures
+        print(f"fleet gate: {args.fleet} "
+              f"{'FAILED' if fleet_failures else 'ok'}")
     if failures:
         print("\nPERF REGRESSION:")
         for f_ in failures:

@@ -1,0 +1,727 @@
+"""`FleetRouter` — one HTTP front end over N worker processes.
+
+The router owns no engine: it consistent-hashes each request's
+process-stable serialized cache key onto a worker slot
+(:mod:`repro.fleet.hashring`) and forwards the client's *original encoded
+mask payload* through the worker's framed RPC untouched — no re-encode on
+either hop, which is what keeps the router path trivially bit-identical
+to in-process ``YCHGService.submit`` (the fleet-smoke CI leg holds it to
+byte equality). Same mask -> same worker, so the fleet coalesces and
+caches exactly like one big process.
+
+Admission reuses the service's own DRR :class:`~repro.service.scheduler.
+Scheduler` verbatim — per-``(side, dtype)`` bucket bounds, block/shed
+policy, deficit-round-robin fairness — with "dispatch" meaning "schedule
+the forward coroutines on the router loop" instead of "run a kernel", so
+one hot resolution floods its own allowance while minority traffic keeps
+flowing, one layer above where the same policy already protects each
+worker.
+
+Failure handling is deterministic: a dead worker's keys fail over to the
+next node on the ring walk (always the same survivor), the health loop
+notices and — when a :class:`FleetSupervisor` is attached — restarts the
+worker under its old slot name, so it resumes its old keyspace with an
+empty cache and the peered-cache probe refills it from the survivor.
+
+``GET /metrics`` rolls every worker's Prometheus page plus the router's
+own counters into one page: worker ``*_total`` series are summed
+(labelled series summed per label set) and each worker contributes a
+``ychg_fleet_worker_up`` gauge.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import http.client
+import json
+import math
+import subprocess
+import sys
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fleet.hashring import HashRing
+from repro.fleet.worker import parse_ready_line
+from repro.frontend import protocol
+from repro.frontend.client import AsyncRPCClient, FrontendError
+from repro.frontend.server import (
+    _chunk,
+    _head,
+    _parse_head,
+    _respond,
+    _respond_json,
+)
+from repro.service.batching import pick_bucket_side
+from repro.service.cache import make_key, serialize_key
+from repro.service.scheduler import (
+    Scheduler,
+    SchedulerConfig,
+    ServiceOverloaded,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Router policy knobs.
+
+    bucket_sides/max_batch/max_delay_ms/queue depths/overload_policy feed
+    the router-side DRR admission scheduler (same semantics as
+    ``ServiceConfig``); ``max_delay_ms`` defaults to 0 because batching-
+    for-the-device is the workers' job — the router's scheduler exists for
+    admission and fairness, not latency trading. ``inflight_slices``
+    bounds outstanding forwarded slices; ``forward_timeout_s`` is one
+    forward's whole budget (generous: a worker's first flush compiles);
+    ``health_interval_s`` paces the liveness loop; ``replicas`` is the
+    ring's virtual-node count.
+    """
+
+    bucket_sides: Tuple[int, ...] = (64, 128, 256, 512, 1024)
+    max_batch: int = 8
+    max_delay_ms: float = 0.0
+    inflight_slices: int = 16
+    max_queue_depth: Optional[int] = None
+    bucket_queue_depth: Optional[int] = None
+    overload_policy: str = "block"
+    forward_timeout_s: float = 300.0
+    health_interval_s: float = 1.0
+    replicas: int = 64
+
+    def scheduler_config(self) -> SchedulerConfig:
+        return SchedulerConfig(
+            max_batch=self.max_batch,
+            max_delay_ms=self.max_delay_ms,
+            inflight_jobs=self.inflight_slices,
+            max_queue_depth=self.max_queue_depth,
+            bucket_queue_depth=self.bucket_queue_depth,
+            overload_policy=self.overload_policy,
+            sub_batches=True,
+            fair=True,
+        )
+
+
+@dataclasses.dataclass
+class WorkerLink:
+    """One worker slot: a STABLE name plus wherever it currently listens.
+
+    The name ("w0", "w1", ...) is the ring identity; host/ports may change
+    across restarts without moving any keys."""
+
+    name: str
+    host: str
+    rpc_port: int
+    http_port: int
+    process: Optional[subprocess.Popen] = None
+    up: bool = True
+
+
+@dataclasses.dataclass
+class _RouterRequest:
+    """One admitted request riding the scheduler: the original encoded
+    mask payload (forwarded untouched), its routing key, and the future
+    the HTTP handler awaits for the worker's response frame."""
+
+    payload: Dict[str, Any]
+    skey: bytes
+    bucket: Tuple[int, str]
+    t_submit: float
+    future: Future
+    served_by: Optional[str] = None
+
+
+def routing_key(mask: np.ndarray) -> bytes:
+    """The placement key for a mask: the serialized cache key with the
+    policy components pinned to fleet constants. All workers run one
+    policy, so backend/config would be the same bytes in every key —
+    placement only ever depends on (content, shape, dtype), exactly the
+    components :func:`serialize_key` renders process-stably."""
+    return serialize_key(make_key(np.ascontiguousarray(mask), "fleet", None))
+
+
+class FleetRouter:
+    """Route requests over worker links; serve one HTTP front end."""
+
+    def __init__(self, links: Sequence[WorkerLink],
+                 config: RouterConfig = RouterConfig(), *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 supervisor: Optional["FleetSupervisor"] = None):
+        if not links:
+            raise ValueError("FleetRouter needs at least one worker link")
+        self.config = config
+        self.host = host
+        self._want_port = port
+        self._links: Dict[str, WorkerLink] = {l.name: l for l in links}
+        self._ring = HashRing([l.name for l in links], config.replicas)
+        self._supervisor = supervisor
+        self._clients: Dict[str, AsyncRPCClient] = {}
+        self._restarting: set = set()
+        self._pool = ThreadPoolExecutor(
+            max_workers=32, thread_name_prefix="ychg-router")
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._http_server: Optional[asyncio.AbstractServer] = None
+        self._health_task: Optional[asyncio.Task] = None
+        # loop-thread-only counters (every mutation runs on the loop)
+        self.routed_total = 0
+        self.rerouted_total = 0
+        self.unroutable_total = 0
+        self.completed_total = 0
+        self._scheduler = Scheduler(
+            config.scheduler_config(),
+            dispatch=self._dispatch,
+            complete=self._complete,
+            fail=self._fail,
+        )
+
+    # ----------------------------------------------------------- lifecycle
+
+    async def start(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._http_server = await asyncio.start_server(
+            self._handle_http, self.host, self._want_port)
+        await self.broadcast_peers()
+        self._health_task = asyncio.ensure_future(self._health_loop())
+
+    @property
+    def port(self) -> int:
+        assert self._http_server is not None, "router not started"
+        return self._http_server.sockets[0].getsockname()[1]
+
+    async def aclose(self) -> None:
+        """Drain-on-shutdown: stop accepting, let admitted forwards
+        finish, then drop worker connections."""
+        if self._health_task is not None:
+            self._health_task.cancel()
+        if self._http_server is not None:
+            self._http_server.close()
+            await self._http_server.wait_closed()
+        # scheduler.close drains: every admitted forward completes or fails
+        await asyncio.get_running_loop().run_in_executor(
+            self._pool, self._scheduler.close)
+        for client in list(self._clients.values()):
+            try:
+                await client.aclose()
+            except (ConnectionError, OSError):
+                pass
+        self._clients.clear()
+        self._pool.shutdown(wait=False)
+
+    # -------------------------------------------------- scheduler callbacks
+
+    def _dispatch(self, bucket, requests: List[_RouterRequest],
+                  batch_size: int) -> List[Future]:
+        """"Dispatch" a slice = start its forwards on the router loop;
+        the list of concurrent futures is the job handle."""
+        assert self._loop is not None, "router not started"
+        return [asyncio.run_coroutine_threadsafe(self._forward(r), self._loop)
+                for r in requests]
+
+    def _complete(self, handle: List[Future],
+                  requests: List[_RouterRequest]) -> None:
+        """Retire a slice: block (scheduler thread) until each forward
+        lands, then fan frames/errors out to the handlers' futures."""
+        deadline = time.monotonic() + self.config.forward_timeout_s
+        for fut, req in zip(handle, requests):
+            try:
+                frame = fut.result(
+                    timeout=max(0.1, deadline - time.monotonic()))
+            except Exception as e:
+                if req.future.set_running_or_notify_cancel():
+                    req.future.set_exception(e)
+                continue
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_result(frame)
+
+    def _fail(self, requests: List[_RouterRequest], exc: Exception) -> None:
+        for req in requests:
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(exc)
+
+    # ------------------------------------------------------------ forwarding
+
+    def _alive(self) -> List[str]:
+        return [name for name, l in self._links.items() if l.up]
+
+    async def _client(self, name: str) -> AsyncRPCClient:
+        client = self._clients.get(name)
+        if client is None:
+            link = self._links[name]
+            client = AsyncRPCClient(link.host, link.rpc_port)
+            await client.connect()
+            self._clients[name] = client
+        return client
+
+    def _drop_client(self, name: str) -> None:
+        client = self._clients.pop(name, None)
+        if client is not None and client._writer is not None:
+            client._writer.close()
+
+    async def _forward(self, req: _RouterRequest) -> Dict[str, Any]:
+        """Forward one request to its ring owner, walking the preference
+        order past downed/failing workers. A worker that ANSWERS (even
+        with an error status) ends the walk — only transport failures
+        reroute, so a deterministic 4xx/5xx never retries elsewhere."""
+        last_exc: Optional[Exception] = None
+        first = True
+        for name in self._ring.preference(req.skey):
+            link = self._links[name]
+            if not link.up:
+                first = False
+                continue
+            try:
+                client = await self._client(name)
+                frame = await asyncio.wait_for(
+                    client.call({"op": "analyze", "mask": req.payload}),
+                    timeout=self.config.forward_timeout_s)
+            except Exception as e:
+                last_exc = e
+                self._mark_down(name)
+                first = False
+                continue
+            self.routed_total += 1
+            if not first:
+                self.rerouted_total += 1
+            req.served_by = name
+            return frame
+        self.unroutable_total += 1
+        raise FrontendError(
+            f"no live worker could serve this request "
+            f"(last error: {last_exc})", status=503)
+
+    def _mark_down(self, name: str) -> None:
+        link = self._links[name]
+        if link.up:
+            link.up = False
+        self._drop_client(name)
+
+    # ---------------------------------------------------- health + restarts
+
+    async def _health_loop(self) -> None:
+        while True:
+            await asyncio.sleep(self.config.health_interval_s)
+            try:
+                await self.check_workers()
+            except asyncio.CancelledError:
+                raise
+            except Exception:
+                pass   # the health loop must outlive any one bad cycle
+
+    async def check_workers(self) -> Dict[str, bool]:
+        """One liveness pass: ping every link's RPC health; mark, and
+        (with a supervisor) restart, the dead ones."""
+        status: Dict[str, bool] = {}
+        for name, link in list(self._links.items()):
+            alive = False
+            if not (link.process is not None
+                    and link.process.poll() is not None):
+                try:
+                    client = await self._client(name)
+                    await asyncio.wait_for(client.health(), timeout=5.0)
+                    alive = True
+                except Exception:
+                    alive = False
+            if alive:
+                link.up = True
+            else:
+                self._mark_down(name)
+                if self._supervisor is not None:
+                    await self._restart(name)
+                    alive = self._links[name].up
+            status[name] = alive
+        return status
+
+    async def _restart(self, name: str) -> None:
+        """Respawn one worker slot (same name -> same keyspace) off-loop,
+        then reconnect and re-broadcast the peer set."""
+        if name in self._restarting:
+            return
+        self._restarting.add(name)
+        try:
+            loop = asyncio.get_running_loop()
+            await loop.run_in_executor(
+                self._pool, self._supervisor.restart, name)
+            self._drop_client(name)
+            self._links[name].up = True
+            await self.broadcast_peers()
+        except Exception:
+            self._links[name].up = False
+        finally:
+            self._restarting.discard(name)
+
+    async def broadcast_peers(self) -> None:
+        """Tell every worker where its siblings' RPC ports are (each
+        worker's peer set excludes itself)."""
+        for name, link in self._links.items():
+            if not link.up:
+                continue
+            peers = [[l.host, l.rpc_port]
+                     for n, l in self._links.items() if n != name]
+            try:
+                client = await self._client(name)
+                await asyncio.wait_for(
+                    client.call({"op": "set_peers", "peers": peers}),
+                    timeout=5.0)
+            except Exception:
+                self._mark_down(name)
+
+    # ------------------------------------------------------------- HTTP side
+
+    async def _handle_http(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    head = await reader.readuntil(b"\r\n\r\n")
+                except asyncio.IncompleteReadError:
+                    break
+                method, target, headers = _parse_head(head)
+                try:
+                    n = int(headers.get("content-length", "0") or "0")
+                except ValueError:
+                    await _respond_json(writer, 400, {
+                        "error": "malformed Content-Length"}, False)
+                    break
+                if n > protocol.MAX_FRAME_BYTES or n < 0:
+                    await _respond_json(writer, 413, {
+                        "error": f"body of {n} bytes exceeds "
+                                 f"{protocol.MAX_FRAME_BYTES}"}, False)
+                    break
+                body = await reader.readexactly(n) if n else b""
+                keep = headers.get("connection", "").lower() != "close"
+                keep = await self._route(method, target, body, writer, keep)
+                if not keep:
+                    break
+        except (ConnectionError, asyncio.LimitOverrunError,
+                asyncio.IncompleteReadError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _route(self, method: str, target: str, body: bytes,
+                     writer: asyncio.StreamWriter, keep: bool) -> bool:
+        try:
+            if method == "GET" and target == "/healthz":
+                await _respond_json(writer, 200, {
+                    "status": "ok",
+                    "workers": {n: l.up for n, l in self._links.items()},
+                    "queue_depth": self._scheduler.backlog()}, keep)
+            elif method == "GET" and target == "/metrics":
+                page = await self._rollup_metrics()
+                await _respond(writer, 200, page.encode(),
+                               "text/plain; version=0.0.4", keep)
+            elif method == "POST" and target == "/v1/analyze":
+                await self._http_analyze(body, writer, keep)
+            elif method == "POST" and target == "/v1/analyze_batch":
+                await self._http_analyze_batch(body, writer)
+                keep = False
+            else:
+                await _respond_json(writer, 404, {
+                    "error": f"no route for {method} {target}"}, keep)
+        except protocol.ProtocolError as e:
+            await _respond_json(writer, 400, {"error": str(e)}, keep)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            await _respond_json(writer, 400, {"error": f"bad request: {e}"},
+                                keep)
+        except ConnectionError:
+            raise
+        except Exception as e:
+            await _respond_json(writer, 500, {"error": str(e)}, keep)
+        return keep
+
+    async def _submit(self, item: Dict[str, Any]) -> Dict[str, Any]:
+        """Admit one encoded mask through the DRR scheduler and await the
+        worker's response frame. decode_array validates the payload and
+        yields shape/dtype for the bucket + routing key; the DECODED mask
+        goes no further — the worker gets the client's original bytes."""
+        mask = protocol.decode_array(item["mask"])
+        side = pick_bucket_side(mask.shape, self.config.bucket_sides)
+        req = _RouterRequest(
+            payload=item["mask"], skey=routing_key(mask),
+            bucket=(side, str(mask.dtype)), t_submit=time.monotonic(),
+            future=Future())
+        loop = asyncio.get_running_loop()
+        # submit on the executor: a "block" park must not stall the loop
+        await loop.run_in_executor(
+            self._pool, self._scheduler.submit, req)
+        frame = await asyncio.wrap_future(req.future)
+        self.completed_total += 1
+        return frame
+
+    def _frame_to_response(self, frame: Dict[str, Any],
+                           rid: Any) -> Tuple[int, Dict[str, Any]]:
+        """A worker response frame -> (status, body), ids rewritten to the
+        client's (the frame's id is the worker-connection-local RPC id)."""
+        if "result" in frame:
+            return 200, {"id": rid, "result": frame["result"]}
+        out = {k: v for k, v in frame.items() if k != "id"}
+        out["id"] = rid
+        out.setdefault("error", "worker error")
+        return int(frame.get("status", 500)), out
+
+    async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
+                            keep: bool) -> None:
+        payload = json.loads(body)
+        rid = payload.get("id")
+        try:
+            frame = await self._submit(payload)
+        except ServiceOverloaded as e:
+            retry = 1.0
+            await _respond_json(
+                writer, 429,
+                {"error": str(e), "status": 429, "retry_after_s": retry},
+                keep, extra=[("Retry-After", str(max(1, math.ceil(retry))))])
+            return
+        except FrontendError as e:
+            await _respond_json(writer, e.status, {
+                "error": str(e), "status": e.status}, keep)
+            return
+        status, out = self._frame_to_response(frame, rid)
+        extra = None
+        if status == 429 and out.get("retry_after_s") is not None:
+            extra = [("Retry-After",
+                      str(max(1, math.ceil(float(out["retry_after_s"])))))]
+        await _respond_json(writer, status, out, keep, extra=extra)
+
+    async def _http_analyze_batch(self, body: bytes,
+                                  writer: asyncio.StreamWriter) -> None:
+        """Chunked NDJSON in COMPLETION order, same contract as the
+        single-process front end."""
+        payload = json.loads(body)
+        items = payload["masks"]
+        if not isinstance(items, list):
+            raise protocol.ProtocolError("'masks' must be a list")
+
+        async def run_one(i: int, item: Dict[str, Any]) -> Dict[str, Any]:
+            rid = item.get("id", i)
+            try:
+                frame = await self._submit({"mask": item})
+            except ServiceOverloaded as e:
+                return {"id": rid, "error": str(e), "status": 429,
+                        "retry_after_s": 1.0}
+            except protocol.ProtocolError as e:
+                return {"id": rid, "error": str(e), "status": 400}
+            except FrontendError as e:
+                return {"id": rid, "error": str(e), "status": e.status}
+            except Exception as e:
+                return {"id": rid, "error": str(e), "status": 500}
+            status, out = self._frame_to_response(frame, rid)
+            return out
+
+        writer.write(_head(200, "application/x-ndjson", keep=False,
+                           chunked=True))
+        tasks = [asyncio.ensure_future(run_one(i, it))
+                 for i, it in enumerate(items)]
+        try:
+            for fut in asyncio.as_completed(tasks):
+                writer.write(_chunk(protocol.dumps_line(await fut)))
+                await writer.drain()
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        finally:
+            for t in tasks:
+                t.cancel()
+
+    # -------------------------------------------------------- metrics rollup
+
+    def _fetch_worker_metrics(self, link: WorkerLink) -> Optional[str]:
+        try:
+            conn = http.client.HTTPConnection(
+                link.host, link.http_port, timeout=5.0)
+            try:
+                conn.request("GET", "/metrics")
+                resp = conn.getresponse()
+                if resp.status != 200:
+                    return None
+                return resp.read().decode()
+            finally:
+                conn.close()
+        except (ConnectionError, OSError, http.client.HTTPException):
+            return None
+
+    async def _rollup_metrics(self) -> str:
+        """One Prometheus page for the whole fleet: worker ``*_total``
+        series summed per label set, per-worker up gauges, router
+        counters."""
+        loop = asyncio.get_running_loop()
+        pages: Dict[str, Optional[str]] = {}
+        for name, link in self._links.items():
+            pages[name] = (await loop.run_in_executor(
+                self._pool, self._fetch_worker_metrics, link)
+                if link.up else None)
+        totals: Dict[str, float] = {}
+        order: List[str] = []
+        for page in pages.values():
+            if page is None:
+                continue
+            for line in page.splitlines():
+                if not line or line.startswith("#"):
+                    continue
+                series, _, value = line.rpartition(" ")
+                if not series.split("{", 1)[0].endswith("_total"):
+                    continue
+                try:
+                    v = float(value)
+                except ValueError:
+                    continue
+                if series not in totals:
+                    order.append(series)
+                totals[series] = totals.get(series, 0.0) + v
+        lines = ["# HELP ychg_* fleet rollup: worker *_total series summed "
+                 "across workers + router-side ychg_fleet_* series"]
+        for series in order:
+            v = totals[series]
+            lines.append(f"# TYPE {series.split('{', 1)[0]} counter")
+            lines.append(
+                f"{series} {int(v) if float(v).is_integer() else v}")
+        lines.append("# TYPE ychg_fleet_worker_up gauge")
+        for name, link in self._links.items():
+            lines.append(
+                f'ychg_fleet_worker_up{{worker="{name}"}} '
+                f"{1 if link.up and pages.get(name) is not None else 0}")
+        for cname, v in (("ychg_fleet_routed_total", self.routed_total),
+                         ("ychg_fleet_rerouted_total", self.rerouted_total),
+                         ("ychg_fleet_unroutable_total",
+                          self.unroutable_total),
+                         ("ychg_fleet_completed_total",
+                          self.completed_total)):
+            lines.append(f"# TYPE {cname} counter")
+            lines.append(f"{cname} {v}")
+        lines.append("# TYPE ychg_fleet_queue_depth gauge")
+        lines.append(f"ychg_fleet_queue_depth {self._scheduler.backlog()}")
+        return "\n".join(lines) + "\n"
+
+
+# ------------------------------------------------------------- supervision
+
+
+class FleetSupervisor:
+    """Spawn and respawn worker processes under stable slot names.
+
+    Workers bind ephemeral ports and hand them back through the one-line
+    ``WORKER READY`` handshake on stdout; a restart keeps the slot name
+    (ring placement) and updates the link's ports in place, so the
+    router's tables never go stale."""
+
+    def __init__(self, n: int, *, host: str = "127.0.0.1",
+                 worker_args: Sequence[str] = (),
+                 start_timeout_s: float = 180.0):
+        if n < 1:
+            raise ValueError(f"fleet size must be >= 1, got {n}")
+        self.host = host
+        self.worker_args = list(worker_args)
+        self.start_timeout_s = start_timeout_s
+        self.links: List[WorkerLink] = [
+            WorkerLink(name=f"w{i}", host=host, rpc_port=0, http_port=0,
+                       up=False)
+            for i in range(n)]
+        self._by_name = {l.name: l for l in self.links}
+
+    def start(self) -> List[WorkerLink]:
+        for link in self.links:
+            self._spawn(link)
+        return self.links
+
+    def _spawn(self, link: WorkerLink) -> None:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.fleet.worker",
+             "--host", self.host, "--port", "0", "--rpc-port", "0",
+             *self.worker_args],
+            stdout=subprocess.PIPE, stderr=subprocess.DEVNULL, text=True)
+        deadline = time.monotonic() + self.start_timeout_s
+        ports = None
+        assert proc.stdout is not None
+        while time.monotonic() < deadline:
+            line = proc.stdout.readline()
+            if not line:
+                break   # worker died before handshaking
+            ports = parse_ready_line(line)
+            if ports is not None:
+                break
+        if ports is None:
+            proc.kill()
+            proc.wait(timeout=10)
+            raise RuntimeError(
+                f"worker {link.name} never printed its READY handshake")
+        link.rpc_port, link.http_port = ports
+        link.process = proc
+        link.up = True
+
+    def restart(self, name: str) -> WorkerLink:
+        """Kill (if needed) and respawn one slot; blocks through the new
+        worker's handshake. Safe to call from an executor thread."""
+        link = self._by_name[name]
+        self._stop_one(link)
+        self._spawn(link)
+        return link
+
+    def _stop_one(self, link: WorkerLink, timeout: float = 10.0) -> None:
+        proc = link.process
+        link.up = False
+        if proc is None or proc.poll() is not None:
+            return
+        proc.terminate()
+        try:
+            proc.wait(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait(timeout=timeout)
+
+    def stop(self) -> None:
+        for link in self.links:
+            self._stop_one(link)
+
+
+# -------------------------------------------------------- sync entry point
+
+
+class RouterThread:
+    """A `FleetRouter` on its own event-loop thread, for sync callers
+    (mirrors ``repro.frontend.server.ServerThread``)."""
+
+    def __init__(self, router: FleetRouter, *, start_timeout: float = 60.0):
+        self._router = router
+        self._ready = threading.Event()
+        self._stop: Optional[asyncio.Event] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._exc: Optional[BaseException] = None
+        self.port: Optional[int] = None
+        self._thread = threading.Thread(
+            target=lambda: asyncio.run(self._main()),
+            name="ychg-fleet-router", daemon=True)
+        self._thread.start()
+        if not self._ready.wait(start_timeout):
+            raise RuntimeError("fleet router failed to start in time")
+        if self._exc is not None:
+            raise self._exc
+
+    async def _main(self) -> None:
+        try:
+            await self._router.start()
+            self.port = self._router.port
+            self._loop = asyncio.get_running_loop()
+            self._stop = asyncio.Event()
+        except BaseException as e:
+            self._exc = e
+            self._ready.set()
+            return
+        self._ready.set()
+        await self._stop.wait()
+        await self._router.aclose()
+
+    def close(self, timeout: float = 60.0) -> None:
+        if self._loop is not None and self._stop is not None:
+            self._loop.call_soon_threadsafe(self._stop.set)
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "RouterThread":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

@@ -1,0 +1,95 @@
+"""One fleet worker process: ``python -m repro.fleet.worker``.
+
+A worker is exactly today's stack — ``YCHGEngine`` (unmeshed; serialized
+cache keys need process-stable components) behind ``YCHGService`` behind
+``FrontendServer`` — plus a :class:`~repro.fleet.peering.PeeredResultCache`
+so local misses consult siblings before computing. The supervisor spawns
+workers with ephemeral ports (0) and parses the one-line handshake this
+process prints once both listeners are bound::
+
+    WORKER READY rpc=<port> http=<port>
+
+SIGTERM (and SIGINT) drain the service before exit, so an orderly fleet
+shutdown never abandons admitted requests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import threading
+
+
+READY_PREFIX = "WORKER READY"
+
+
+def ready_line(rpc_port: int, http_port: int) -> str:
+    return f"{READY_PREFIX} rpc={rpc_port} http={http_port}"
+
+
+def parse_ready_line(line: str):
+    """(rpc_port, http_port) out of a handshake line, or None."""
+    line = line.strip()
+    if not line.startswith(READY_PREFIX):
+        return None
+    try:
+        kv = dict(part.split("=", 1)
+                  for part in line[len(READY_PREFIX):].split())
+        return int(kv["rpc"]), int(kv["http"])
+    except (KeyError, ValueError):
+        return None
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.fleet.worker",
+        description="one yCHG fleet worker (service + HTTP + RPC)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="HTTP port (0 = ephemeral)")
+    ap.add_argument("--rpc-port", type=int, default=0,
+                    help="framed TCP RPC port (0 = ephemeral)")
+    ap.add_argument("--buckets", default="64,128",
+                    help="comma-separated bucket sides")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--cache-entries", type=int, default=1024)
+    ap.add_argument("--max-queue-depth", type=int, default=None)
+    ap.add_argument("--bucket-queue-depth", type=int, default=None)
+    ap.add_argument("--policy", default="block", choices=["block", "shed"])
+    return ap
+
+
+def main(argv=None) -> None:
+    args = build_parser().parse_args(argv)
+
+    from repro.engine import YCHGEngine
+    from repro.fleet.peering import PeeredResultCache
+    from repro.frontend import ServerThread
+    from repro.service import ServiceConfig, YCHGService
+
+    config = ServiceConfig(
+        bucket_sides=tuple(int(b) for b in args.buckets.split(",")),
+        max_batch=args.max_batch,
+        max_delay_ms=args.max_delay_ms,
+        cache_entries=args.cache_entries,
+        max_queue_depth=args.max_queue_depth,
+        bucket_queue_depth=args.bucket_queue_depth,
+        overload_policy=args.policy,
+    )
+    cache = PeeredResultCache(args.cache_entries)
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+
+    with YCHGService(YCHGEngine(), config, cache=cache) as svc:
+        with ServerThread(svc, host=args.host, port=args.port,
+                          rpc_port=args.rpc_port) as srv:
+            print(ready_line(srv.rpc_port, srv.port), flush=True)
+            stop.wait()
+            # context exits drain: ServerThread stops accepting, then
+            # service.close() finishes every admitted request
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import asyncio
 import dataclasses
 import http.client
 import json
+import math
 import time
 from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
 
@@ -62,6 +63,23 @@ class BatchItem:
     @property
     def ok(self) -> bool:
         return self.result is not None
+
+
+def _retry_after_s(obj: Dict[str, Any], headers: Any,
+                   default: float = 1.0) -> float:
+    """Backoff seconds out of a 429: the body's float-precision
+    ``retry_after_s`` when usable, else the ``Retry-After`` header, else
+    ``default``. A malformed, empty, or absent value must degrade to the
+    default — never raise out of the client (pre-fix, a bogus header made
+    ``float()`` throw ``ValueError`` instead of ``FrontendOverloaded``)."""
+    for value in (obj.get("retry_after_s"), headers.get("Retry-After")):
+        try:
+            retry = float(value)
+        except (TypeError, ValueError):
+            continue
+        if math.isfinite(retry) and retry >= 0:
+            return retry
+    return default
 
 
 def _decode_line(obj: Dict[str, Any]) -> BatchItem:
@@ -155,12 +173,13 @@ class YCHGClient:
         resp = self._request("POST", "/v1/analyze", body)
         payload = resp.read()
         if resp.status == 429:
-            obj = json.loads(payload)
-            retry = obj.get("retry_after_s")
-            if retry is None:
-                retry = float(resp.headers.get("Retry-After", 1.0))
-            raise FrontendOverloaded(obj.get("error", "overloaded"),
-                                     retry_after_s=float(retry))
+            try:
+                obj = json.loads(payload)
+            except ValueError:
+                obj = {}
+            raise FrontendOverloaded(
+                obj.get("error", "overloaded"),
+                retry_after_s=_retry_after_s(obj, resp.headers))
         if resp.status != 200:
             raise FrontendError(payload.decode(errors="replace"), resp.status)
         return protocol.decode_result(json.loads(payload)["result"])
@@ -205,6 +224,7 @@ class AsyncRPCClient:
         self._pending: Dict[int, "asyncio.Future[Dict[str, Any]]"] = {}
         self._next_id = 0
         self._demux: Optional[asyncio.Task] = None
+        self._conn_exc: Optional[Exception] = None
 
     async def connect(self) -> "AsyncRPCClient":
         self._reader, self._writer = await asyncio.open_connection(
@@ -223,20 +243,32 @@ class AsyncRPCClient:
                 if fut is not None and not fut.done():
                     fut.set_result(frame)
         except (protocol.ProtocolError, ConnectionError, OSError) as e:
+            self._conn_exc = FrontendError(str(e) or type(e).__name__)
             for fut in self._pending.values():
                 if not fut.done():
                     fut.set_exception(FrontendError(str(e)))
             self._pending.clear()
         finally:
+            # once the demux is gone nothing can ever resolve a pending
+            # future, so later call()s must fail fast instead of hanging
+            if self._conn_exc is None:
+                self._conn_exc = FrontendError("connection closed")
             for fut in self._pending.values():
                 if not fut.done():
                     fut.set_exception(FrontendError("connection closed"))
             self._pending.clear()
 
-    async def _call(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+    async def call(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        """One raw frame -> its response frame (id assigned here). The
+        fleet router forwards pre-encoded analyze frames through this
+        without re-encoding the mask, which is what keeps the router path
+        trivially bit-identical."""
         assert self._writer is not None, "connect() first"
+        if self._conn_exc is not None:
+            raise self._conn_exc
         rid = self._next_id
         self._next_id += 1
+        frame = dict(frame)
         frame["id"] = rid
         fut: "asyncio.Future[Dict[str, Any]]" = (
             asyncio.get_running_loop().create_future())
@@ -244,6 +276,8 @@ class AsyncRPCClient:
         self._writer.write(protocol.pack_frame(frame))
         await self._writer.drain()
         return await fut
+
+    _call = call   # pre-fleet internal name, kept for callers/tests
 
     async def analyze(self, mask: np.ndarray) -> Dict[str, np.ndarray]:
         resp = await self._call(
@@ -253,8 +287,7 @@ class AsyncRPCClient:
         status = int(resp.get("status", 500))
         if status == 429:
             raise FrontendOverloaded(resp.get("error", "overloaded"),
-                                     retry_after_s=resp.get(
-                                         "retry_after_s", 1.0))
+                                     retry_after_s=_retry_after_s(resp, {}))
         raise FrontendError(resp.get("error", "rpc error"), status)
 
     async def health(self) -> Dict[str, Any]:

@@ -61,6 +61,11 @@ def decode_array(d: Dict[str, Any]) -> np.ndarray:
 
     Validates that the payload length matches shape x dtype, so a
     truncated or padded body fails loudly instead of reshaping garbage.
+    Dims must be strictly positive: nothing on this wire carries empty
+    arrays, and a shape like ``[-1, -8]`` has a positive *product* (its
+    byte length can match), which would otherwise sail past the length
+    check into a bare ``reshape`` ValueError outside the ProtocolError
+    contract — the server would answer 500 for what is a bad request.
     """
     try:
         shape = tuple(int(s) for s in d["shape"])
@@ -68,7 +73,11 @@ def decode_array(d: Dict[str, Any]) -> np.ndarray:
         raw = base64.b64decode(d["b64"], validate=True)
     except (KeyError, TypeError, ValueError) as e:
         raise ProtocolError(f"malformed array payload: {e}") from e
-    expect = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    if any(s <= 0 for s in shape):
+        raise ProtocolError(f"array shape {list(shape)} has non-positive dims")
+    expect = dtype.itemsize
+    for s in shape:   # python ints: absurd dims can't overflow into a
+        expect *= s   # wrong (or negative) int64 expectation
     if len(raw) != expect:
         raise ProtocolError(
             f"array payload is {len(raw)} bytes, shape {shape} dtype "

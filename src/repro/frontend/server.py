@@ -28,7 +28,9 @@ Endpoints (HTTP/1.1, keep-alive, loopback-friendly):
 
 The RPC transport speaks :func:`protocol.pack_frame` frames over TCP with
 the same completion-order discipline: many analyzes may be in flight per
-connection and responses demux by ``id``.
+connection and responses demux by ``id``. Fleet verbs ride the same
+transport: ``cache_probe`` (sibling cache lookup by serialized key, local
+only) and ``set_peers`` (point a worker's peered cache at its siblings).
 
 ``ServerThread`` runs the whole thing on a dedicated event-loop thread for
 synchronous callers (tests, the CLI smoke, benchmarks).
@@ -43,6 +45,8 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 from repro.frontend import protocol
 from repro.service import ServiceOverloaded, YCHGService
@@ -104,6 +108,7 @@ class FrontendServer:
         self._drain = _DrainRate()
         self._http_server: Optional[asyncio.AbstractServer] = None
         self._rpc_server: Optional[asyncio.AbstractServer] = None
+        self._conns: set = set()
 
     # ------------------------------------------------------------ lifecycle
 
@@ -130,6 +135,14 @@ class FrontendServer:
             if srv is not None:
                 srv.close()
                 await srv.wait_closed()
+        # close established connections too, so peers see EOF instead of a
+        # half-open socket (the fleet router relies on that to reroute
+        # promptly when a worker goes away)
+        for writer in list(self._conns):
+            try:
+                writer.close()
+            except Exception:
+                pass
         self._pool.shutdown(wait=False)
 
     # ----------------------------------------------------- service bridging
@@ -152,6 +165,7 @@ class FrontendServer:
 
     async def _handle_http(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
+        self._conns.add(writer)
         try:
             while True:
                 try:
@@ -183,6 +197,7 @@ class FrontendServer:
                 asyncio.IncompleteReadError):
             pass
         finally:
+            self._conns.discard(writer)
             writer.close()
             try:
                 await writer.wait_closed()
@@ -303,6 +318,8 @@ class FrontendServer:
         counter("ychg_batches_total", m.batches)
         counter("ychg_shed_total", m.shed)
         counter("ychg_blocked_total", m.blocked)
+        counter("ychg_cache_peer_hits_total", m.peer_hits)
+        counter("ychg_cache_peer_misses_total", m.peer_misses)
         lines.append("# TYPE ychg_shed_bucket_total counter")
         for bucket, count in m.shed_by_bucket:
             side, dtype = bucket
@@ -322,10 +339,48 @@ class FrontendServer:
 
     # -------------------------------------------------------------- RPC side
 
+    def _cache_probe(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        """Sibling cache lookup by serialized key (hex). Purely local:
+        answers out of this worker's cache index or says miss — it never
+        computes and never probes onward, so fleet probes cannot cascade.
+        The hit carries the STORED entry layout ((1, W)/(1,) arrays, not
+        ``to_host()``'s squeezed view) so the prober can reconstruct a
+        device-resident result indistinguishable from its own cache's."""
+        rid = frame.get("id")
+        try:
+            skey = bytes.fromhex(frame["key"])
+        except (KeyError, TypeError, ValueError) as e:
+            return {"id": rid, "error": f"bad cache_probe key: {e}",
+                    "status": 400}
+        entry = self.service.cache.probe_serialized(skey)
+        if entry is None:
+            return {"id": rid, "hit": False}
+        return {"id": rid, "hit": True, "result": {
+            f: protocol.encode_array(np.asarray(getattr(entry, f)))
+            for f in protocol.RESULT_FIELDS}}
+
+    def _set_peers(self, frame: Dict[str, Any]) -> Dict[str, Any]:
+        """Point this worker's cache at its siblings ([host, rpc_port]
+        pairs). ``ok: false`` when the cache cannot peer (plain
+        ResultCache) — the router treats that as a worker without the
+        feature, not an error."""
+        rid = frame.get("id")
+        set_peers = getattr(self.service.cache, "set_peers", None)
+        if set_peers is None:
+            return {"id": rid, "ok": False}
+        try:
+            peers = [(str(h), int(p)) for h, p in frame.get("peers", [])]
+        except (TypeError, ValueError) as e:
+            return {"id": rid, "error": f"bad set_peers payload: {e}",
+                    "status": 400, "ok": False}
+        set_peers(peers)
+        return {"id": rid, "ok": True}
+
     async def _handle_rpc(self, reader: asyncio.StreamReader,
                           writer: asyncio.StreamWriter) -> None:
         """Frame loop: many analyzes in flight, responses in completion
         order, demuxed by id on the client side."""
+        self._conns.add(writer)
         wlock = asyncio.Lock()
         tasks: set = set()
 
@@ -372,6 +427,10 @@ class FrontendServer:
                     await send({"id": frame.get("id"), "status": "ok",
                                 "backend": m.backend,
                                 "queue_depth": m.queue_depth})
+                elif op == "cache_probe":
+                    await send(self._cache_probe(frame))
+                elif op == "set_peers":
+                    await send(self._set_peers(frame))
                 else:
                     await send({"id": frame.get("id"),
                                 "error": f"unknown op {op!r}", "status": 400})
@@ -380,6 +439,7 @@ class FrontendServer:
         except (ConnectionError, OSError):
             pass
         finally:
+            self._conns.discard(writer)
             for t in tasks:
                 t.cancel()
             writer.close()
@@ -498,8 +558,13 @@ class ServerThread:
         await self._server.aclose()
 
     def close(self, timeout: float = 30.0) -> None:
+        """Stop the loop and join; idempotent — fleet tests kill a worker
+        mid-test and the teardown sweep closes everything again."""
         if self._loop is not None and self._stop is not None:
-            self._loop.call_soon_threadsafe(self._stop.set)
+            try:
+                self._loop.call_soon_threadsafe(self._stop.set)
+            except RuntimeError:   # loop already closed
+                pass
         self._thread.join(timeout)
 
     def __enter__(self) -> "ServerThread":

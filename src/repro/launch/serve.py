@@ -12,6 +12,10 @@ Usage:
       --connect http://127.0.0.1:8788          # drive a remote server
   PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
       --res 64 --batch 4 --frontend-smoke      # CI end-to-end assert
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --fleet 4 --listen 127.0.0.1:8788        # router over 4 workers
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --res 64 --batch 4 --fleet-smoke         # CI fleet assert
 """
 
 from __future__ import annotations
@@ -253,6 +257,165 @@ def frontend_smoke(args):
           "per-bucket shed counter moved")
 
 
+def _worker_args(args):
+    """Worker-CLI knobs mirroring this invocation's service knobs."""
+    wa = ["--buckets", args.buckets if args.buckets else str(args.res),
+          "--max-batch", str(args.batch), "--policy", args.policy]
+    if args.max_queue_depth is not None:
+        wa += ["--max-queue-depth", str(args.max_queue_depth)]
+    if args.bucket_queue_depth is not None:
+        wa += ["--bucket-queue-depth", str(args.bucket_queue_depth)]
+    return wa
+
+
+def _router_config(args, **overrides):
+    from repro.fleet import RouterConfig
+
+    sides = (tuple(int(b) for b in args.buckets.split(","))
+             if args.buckets else (args.res,))
+    knobs = dict(bucket_sides=sides, max_batch=args.batch,
+                 max_queue_depth=args.max_queue_depth,
+                 bucket_queue_depth=args.bucket_queue_depth,
+                 overload_policy=args.policy)
+    knobs.update(overrides)
+    return RouterConfig(**knobs)
+
+
+def serve_fleet(args):
+    """Serve a worker-process fleet behind the consistent-hash router
+    until interrupted: ``--fleet N`` is ``--listen`` at fleet scale."""
+    from repro.fleet import FleetRouter, FleetSupervisor, RouterThread
+
+    host, port = (_parse_hostport(args.listen) if args.listen
+                  else ("127.0.0.1", 8788))
+    sup = FleetSupervisor(args.fleet, worker_args=_worker_args(args))
+    print(f"spawning {args.fleet} workers...", flush=True)
+    try:
+        links = sup.start()
+        router = FleetRouter(links, _router_config(args), host=host,
+                             port=port, supervisor=sup)
+        with RouterThread(router) as rt:
+            workers = ", ".join(
+                f"{l.name}=rpc:{l.rpc_port}" for l in links)
+            print(f"yCHG fleet router on http://{host}:{rt.port} over "
+                  f"{len(links)} workers ({workers})", flush=True)
+            try:
+                threading.Event().wait()
+            except KeyboardInterrupt:
+                print("shutting down fleet", flush=True)
+    finally:
+        sup.stop()
+
+
+def fleet_smoke(args):
+    """CI end-to-end assert for the fleet: router over 2 subprocess
+    workers on loopback (ephemeral ports everywhere).
+
+      1. **bit-identity** — a streamed batch through router -> worker RPC
+         is byte-identical (values, dtypes, shapes) to in-process
+         ``YCHGService.submit`` on the same masks;
+      2. **rerouting** — hard-kill the worker owning one mask's keyspace;
+         the repeat analyze fails over to the survivor, still matches,
+         and ``ychg_fleet_rerouted_total`` moves;
+      3. **peering** — restart the dead slot (same ring name, empty
+         cache) and repeat the mask once more: the restarted owner
+         adopts the survivor's cached entry instead of recomputing, and
+         the rolled-up /metrics page shows
+         ``ychg_cache_peer_hits_total`` > 0.
+
+    Exits nonzero on any failure — the fleet-smoke CI job runs this.
+    """
+    import asyncio
+
+    from repro.data import modis
+    from repro.engine import YCHGEngine
+    from repro.fleet import (
+        FleetRouter,
+        FleetSupervisor,
+        HashRing,
+        RouterThread,
+    )
+    from repro.fleet.router import routing_key
+    from repro.frontend import YCHGClient
+    from repro.service import YCHGService
+
+    def counter(text, name):
+        for line in text.splitlines():
+            if line.startswith(name + " "):
+                return float(line.rsplit(" ", 1)[1])
+        return 0.0
+
+    def check_identical(leg, got, want_res):
+        for field, arr in want_res.items():
+            a, b = np.asarray(arr), got[field]
+            if not (np.array_equal(a, b) and a.dtype == b.dtype
+                    and a.shape == b.shape):
+                raise SystemExit(f"fleet smoke [{leg}]: field {field!r} "
+                                 f"not bit-identical through the router")
+
+    masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
+    with YCHGService(YCHGEngine(), _service_config(args)) as svc:
+        want = [svc.submit(m).result(timeout=600).to_host() for m in masks]
+
+    sup = FleetSupervisor(2, worker_args=_worker_args(args))
+    try:
+        links = sup.start()
+        # health loop effectively dormant: the smoke drives the death ->
+        # reroute -> restart -> peer-hit sequence deterministically
+        router = FleetRouter(links, _router_config(
+            args, health_interval_s=3600.0), supervisor=sup)
+        with RouterThread(router) as rt, \
+                YCHGClient("127.0.0.1", rt.port) as client:
+            client.wait_ready(timeout=120.0)
+            items = {it.id: it for it in client.analyze_batch(masks)}
+            for i, want_res in enumerate(want):
+                item = items.get(i)
+                if item is None or not item.ok:
+                    raise SystemExit(
+                        f"fleet smoke [identity]: mask {i} failed through "
+                        f"the router: {item and item.error}")
+                check_identical("identity", item.result, want_res)
+            print(f"fleet smoke: {len(masks)} masks through router over 2 "
+                  f"workers bit-identical to in-process submit", flush=True)
+
+            ring = HashRing([l.name for l in links],
+                            router.config.replicas)
+            owner = ring.node_for(routing_key(masks[0]))
+            owner_link = next(l for l in links if l.name == owner)
+            owner_link.process.kill()
+            owner_link.process.wait(timeout=30)
+            check_identical("reroute", client.analyze(masks[0]), want[0])
+            rerouted = counter(client.metrics_text(),
+                               "ychg_fleet_rerouted_total")
+            if rerouted < 1:
+                raise SystemExit("fleet smoke [reroute]: killed the owner "
+                                 "but ychg_fleet_rerouted_total never moved")
+            print(f"fleet smoke: killed {owner}, request rerouted to the "
+                  f"survivor and stayed bit-identical", flush=True)
+
+            # one manual health pass: notices the corpse, restarts the
+            # slot under its old name, re-broadcasts the peer set
+            asyncio.run_coroutine_threadsafe(
+                router.check_workers(), rt._loop).result(timeout=300)
+            health = client.health()
+            if not all(health["workers"].values()):
+                raise SystemExit(f"fleet smoke [peering]: restart left "
+                                 f"workers down: {health['workers']}")
+            check_identical("peering", client.analyze(masks[0]), want[0])
+            peer_hits = counter(client.metrics_text(),
+                                "ychg_cache_peer_hits_total")
+            if peer_hits < 1:
+                raise SystemExit(
+                    "fleet smoke [peering]: restarted owner served the "
+                    "repeat mask without a sibling-cache hit "
+                    f"(ychg_cache_peer_hits_total={peer_hits})")
+            print(f"fleet smoke: restarted {owner} served repeat traffic "
+                  f"from the survivor's cache (peer hits {peer_hits:.0f})",
+                  flush=True)
+    finally:
+        sup.stop()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="lm", choices=["lm", "ychg"])
@@ -275,6 +438,14 @@ def main():
     ap.add_argument("--frontend-smoke", action="store_true",
                     help="ychg only: loopback HTTP end-to-end assert "
                          "(bit-identical round trip + 429 on overload)")
+    ap.add_argument("--fleet", type=int, default=None, metavar="N",
+                    help="ychg only: serve N worker processes behind the "
+                         "consistent-hash router (with --listen for the "
+                         "router's HOST:PORT)")
+    ap.add_argument("--fleet-smoke", action="store_true",
+                    help="ychg only: loopback fleet end-to-end assert "
+                         "(bit-identity, kill-one-worker rerouting, "
+                         "peered-cache hit)")
     ap.add_argument("--buckets", default=None,
                     help="comma-separated bucket sides (default: --res)")
     ap.add_argument("--max-queue-depth", type=int, default=None)
@@ -282,7 +453,11 @@ def main():
     ap.add_argument("--policy", default="block", choices=["block", "shed"],
                     help="overload policy for --listen/--frontend-smoke")
     args = ap.parse_args()
-    if args.frontend_smoke:
+    if args.fleet_smoke:
+        fleet_smoke(args)
+    elif args.fleet:
+        serve_fleet(args)
+    elif args.frontend_smoke:
         frontend_smoke(args)
     elif args.listen:
         serve_listen(args)

@@ -20,10 +20,11 @@ the registry call counters).
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import threading
 from collections import OrderedDict
-from typing import Any, Hashable, Optional, Tuple
+from typing import Any, Dict, Hashable, Optional, Tuple
 
 import numpy as np
 
@@ -44,22 +45,86 @@ def make_key(mask: np.ndarray, backend: str, config: Hashable,
     return (digest, mask.shape, str(mask.dtype), backend, config, mesh)
 
 
+def _canon(obj: Any) -> bytes:
+    """A process-stable byte rendering of one key component.
+
+    Dataclass configs (``YCHGConfig``) render as class name + sorted
+    ``field=repr(value)`` pairs — reprs of str/int/float/bool/None are
+    deterministic across interpreters, unlike ``hash()``. Anything else
+    falls back to ``repr`` (stable for the primitives that actually appear
+    in keys; an attached device mesh has no stable rendering, which is why
+    fleet workers run unmeshed engines).
+    """
+    if obj is None:
+        return b"none"
+    if isinstance(obj, bytes):
+        return obj
+    if isinstance(obj, str):
+        return obj.encode()
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        fields = sorted(
+            (f.name, repr(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj))
+        return (type(obj).__name__ + ":" +
+                ",".join(f"{n}={v}" for n, v in fields)).encode()
+    return repr(obj).encode()
+
+
+def serialize_key(key: CacheKey) -> bytes:
+    """A canonical, PROCESS-STABLE byte string for a :func:`make_key` tuple.
+
+    The in-process tuple key relies on per-process ``hash()`` (randomised
+    by PYTHONHASHSEED), so it can never cross a process boundary; this
+    rendering is what the fleet router consistent-hashes on and what
+    sibling caches look each other's entries up by — identical
+    (mask, backend, config) must produce identical bytes in every worker,
+    across restarts (``tests/test_fleet.py`` pins this with a
+    different-PYTHONHASHSEED subprocess). Components are length-prefixed
+    so no two distinct keys can collide by concatenation.
+    """
+    digest, shape, dtype, backend, config, mesh = key
+    parts = (
+        b"ychg-key-v1",
+        digest,
+        "x".join(str(int(s)) for s in shape).encode(),
+        _canon(dtype),
+        _canon(backend),
+        _canon(config),
+        _canon(mesh),
+    )
+    return b"".join(len(p).to_bytes(4, "big") + p for p in parts)
+
+
 class ResultCache:
     """Thread-safe LRU over :func:`make_key` keys with hit/miss counters.
 
     ``capacity`` is an entry count; 0 disables the cache entirely (every
     ``get`` is a miss, ``put`` is a no-op) so the service can run cacheless
     without branching at every call site.
+
+    ``index_serialized=True`` additionally indexes every entry by its
+    :func:`serialize_key` bytes so a *sibling process* can look entries up
+    over the RPC ``cache_probe`` verb (``probe_serialized``) — fleet
+    workers run with it on; the single-process default stays off and pays
+    nothing. ``peer_probe`` is the outbound half: the base class never
+    peers (returns None); ``repro.fleet.peering.PeeredResultCache``
+    overrides it to ask siblings before the service pays compute.
+    ``peer_hits``/``peer_misses`` count those outbound probes.
     """
 
-    def __init__(self, capacity: int = 1024):
+    def __init__(self, capacity: int = 1024, *,
+                 index_serialized: bool = False):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = capacity
+        self.index_serialized = index_serialized
         self._entries: "OrderedDict[CacheKey, Any]" = OrderedDict()
+        self._by_serialized: Dict[bytes, CacheKey] = {}
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self.peer_hits = 0
+        self.peer_misses = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -86,9 +151,31 @@ class ResultCache:
         with self._lock:
             self._entries[key] = value
             self._entries.move_to_end(key)
+            if self.index_serialized:
+                self._by_serialized[serialize_key(key)] = key
             while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+                evicted, _ = self._entries.popitem(last=False)
+                if self.index_serialized:
+                    self._by_serialized.pop(serialize_key(evicted), None)
+
+    def probe_serialized(self, skey: bytes) -> Optional[Any]:
+        """Inbound sibling lookup by serialized key; purely local — a probe
+        never recurses into ``peer_probe`` and never counts toward the
+        local hit/miss rate (it is the *sibling's* miss, not ours)."""
+        with self._lock:
+            key = self._by_serialized.get(skey)
+            if key is None:
+                return None
+            value = self._entries.get(key)
+            if value is not None:
+                self._entries.move_to_end(key)
+            return value
+
+    def peer_probe(self, key: CacheKey) -> Optional[Any]:
+        """Outbound sibling probe on a local miss. Base: no peers."""
+        return None
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._by_serialized.clear()

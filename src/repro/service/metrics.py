@@ -48,6 +48,8 @@ class ServiceMetrics:
     # sorted ((bucket, count), ...) pairs, so fairness regressions (one hot
     # bucket shedding everyone) are visible per bucket, not just in total
     shed_by_bucket: Tuple[Tuple[Any, int], ...] = ()
+    peer_hits: int = 0        # local misses served by a sibling's cache
+    peer_misses: int = 0      # outbound probes no sibling could answer
 
     @property
     def n_compiled_shapes(self) -> int:
@@ -118,6 +120,7 @@ class MetricsRecorder:
                  cache_misses: int, backend: str, shed: int = 0,
                  blocked: int = 0,
                  shed_by_bucket: Tuple[Tuple[Any, int], ...] = (),
+                 peer_hits: int = 0, peer_misses: int = 0,
                  ) -> ServiceMetrics:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64) * 1e3
@@ -149,4 +152,6 @@ class MetricsRecorder:
                 ),
                 backend=backend,
                 shed_by_bucket=shed_by_bucket,
+                peer_hits=peer_hits,
+                peer_misses=peer_misses,
             )

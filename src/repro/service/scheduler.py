@@ -49,7 +49,9 @@ mechanisms fix that:
     credits per round, flushing while its deficit covers the next flush's
     occupancy. A hot bucket with a deep backlog dispatches one batch per
     round, interleaved with everyone else, instead of flushing its whole
-    backlog in arrival order ahead of an aged minority request.
+    backlog in arrival order ahead of an aged minority request. Banked
+    deficit is capped at one quantum beyond the largest flush, so credit
+    accrued across rounds can never pay for a peer-starving mega-burst.
     ``fair=False`` keeps the legacy arrival-order flushes so benchmarks
     can measure exactly what fairness buys (``benchmarks/bench_frontend``).
 """
@@ -426,6 +428,13 @@ class Scheduler:
         """
         served = 0
         quantum = self.config.max_batch
+        # banked deficit is CAPPED at one quantum beyond the largest
+        # possible flush (= max_batch): DRR's fairness guarantee is only as
+        # good as the bank stays bounded — credit accrued while a bucket
+        # sits pending-but-unready must never later pay for a mega-burst
+        # that flushes its whole backlog ahead of every other bucket
+        # (tests/test_scheduler.py pins the no-mega-burst behavior)
+        deficit_cap = quantum + self.config.max_batch
         while True:
             now = time.monotonic()
             ready = self._ready_buckets(now)
@@ -437,7 +446,8 @@ class Scheduler:
                     served += 1
                 continue
             for b in ready:
-                self._deficit[b] = self._deficit.get(b, 0) + quantum
+                self._deficit[b] = min(
+                    self._deficit.get(b, 0) + quantum, deficit_cap)
                 while True:
                     with self._cond:
                         rs = self._pending.get(b)

@@ -232,6 +232,24 @@ class YCHGService:
             req = _Request(mask=a, key=key, bucket=(side, str(a.dtype)),
                            t_submit=time.monotonic(), futures=[fut])
             self._leaders[key] = req
+        # peer probe OUTSIDE the lock (it is a blocking network call in a
+        # fleet): the leader is already registered, so duplicates arriving
+        # mid-probe coalesce onto it and share the peered result below.
+        # Base caches answer None and cost nothing.
+        peered = self.cache.peer_probe(key)
+        if peered is not None:
+            with self._lock:
+                self.cache.put(key, peered)
+                self._leaders.pop(key, None)
+            # the leader + every rider that joined during the probe: all
+            # served without consuming an admission slot (same rule as a
+            # local cache hit); riders recorded their submits when they
+            # coalesced, so completions are recorded per future
+            self._recorder.record_submit()
+            for f in req.futures:
+                self._recorder.record_cache_hit(a.size)
+                _fulfil(f, peered)
+            return fut
         # admission happens OUTSIDE the service lock: a blocked submitter
         # must not hold the lock the completion path needs to free a slot.
         # The leader is registered first so duplicates coalesce (for free)
@@ -271,6 +289,8 @@ class YCHGService:
             shed_by_bucket=tuple(
                 sorted(self._scheduler.shed_by_bucket.items())),
             backend=self.engine.resolve_backend(),
+            peer_hits=self.cache.peer_hits,
+            peer_misses=self.cache.peer_misses,
         )
 
     # ----------------------------------------------------------- lifecycle

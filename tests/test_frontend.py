@@ -77,6 +77,24 @@ def test_array_codec_rejects_malformed_payloads():
         protocol.decode_array(dict(good, b64="!!not base64!!"))
 
 
+def test_array_codec_rejects_non_positive_dims():
+    """Pre-fix regression (PR 6): a shape like [-1, -8] has a positive
+    PRODUCT, so the byte-length check passed and the bare ``reshape``
+    ValueError escaped the ProtocolError contract; a zero dim with an
+    empty payload sailed through entirely and decoded to an empty array
+    nothing downstream expects. Non-positive dims are malformed input and
+    must fail as ProtocolError."""
+    good = protocol.encode_array(np.arange(8, dtype=np.uint8).reshape(1, 8))
+    # product (-1)*(-8) = 8 = the payload's byte count: only the sign
+    # check can reject this one
+    with pytest.raises(protocol.ProtocolError, match="non-positive"):
+        protocol.decode_array(dict(good, shape=[-1, -8]))
+    with pytest.raises(protocol.ProtocolError, match="non-positive"):
+        protocol.decode_array(dict(good, shape=[0], b64=""))
+    with pytest.raises(protocol.ProtocolError, match="non-positive"):
+        protocol.decode_array(dict(good, shape=[8, 0], b64=""))
+
+
 def test_result_codec_roundtrip_matches_to_host():
     result = YCHGEngine().analyze(_mask((9, 13), seed=3))
     want = result.to_host()
@@ -270,6 +288,73 @@ def test_http_failed_submit_is_500_not_a_dropped_connection():
         resp = client._request("POST", "/v1/analyze", body)
         assert resp.status == 500
         assert "closed" in resp.read().decode()
+
+
+def test_http_batch_negative_dims_are_per_line_400_not_500():
+    """The wire twin of the non-positive-dims codec fix: pre-fix the
+    escaped reshape ValueError hit the batch path's catch-all and the
+    client saw a per-line 500 for what is a malformed request. It must be
+    a per-line 400, with the rest of the stream unharmed."""
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        good = protocol.encode_array(_mask((8, 8), seed=60))
+        # (-8)*(-8) = 64 = the payload's byte count: passes the length
+        # check, only the sign check can reject it
+        bad = dict(good, shape=[-8, -8])
+        body = json.dumps({"masks": [dict(bad, id="bad"),
+                                     dict(good, id="ok")]}).encode()
+        resp = client._request("POST", "/v1/analyze_batch", body)
+        assert resp.status == 200
+        items = {}
+        while True:
+            line = resp.readline()
+            if not line:
+                break
+            obj = json.loads(line)
+            items[obj["id"]] = obj
+        assert "result" in items["ok"]
+        assert "result" not in items["bad"]
+        assert items["bad"]["status"] == 400
+
+
+def test_client_survives_malformed_retry_after_header():
+    """Pre-fix regression (PR 6): the 429 path did
+    ``float(resp.headers.get("Retry-After", 1.0))``, so a header a proxy
+    mangled (or emptied) raised ValueError out of ``YCHGClient.analyze``
+    instead of the typed FrontendOverloaded. A canned-response socket
+    stands in for the mangling middlebox; the client must degrade to the
+    default backoff, not blow up."""
+    import socket
+    import threading
+
+    canned = (b"HTTP/1.1 429 Too Many Requests\r\n"
+              b"Content-Type: application/json\r\n"
+              b"Retry-After: soon\r\n"
+              b"Content-Length: 22\r\n"
+              b"Connection: close\r\n\r\n"
+              b'{"error":"overloaded"}')
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+
+    def serve_one():
+        conn, _ = srv.accept()
+        with conn:
+            conn.recv(65536)
+            conn.sendall(canned)
+
+    t = threading.Thread(target=serve_one, daemon=True)
+    t.start()
+    try:
+        with YCHGClient("127.0.0.1", port, timeout=30.0) as client:
+            with pytest.raises(FrontendOverloaded) as exc_info:
+                client.analyze(_mask((8, 8)))
+        assert exc_info.value.retry_after_s == 1.0
+        assert exc_info.value.status == 429
+    finally:
+        srv.close()
+        t.join(5)
 
 
 # ---------------------------------------------------------- RPC transport

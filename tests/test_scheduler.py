@@ -349,6 +349,35 @@ def test_fair_drr_interleaves_hot_backlog_with_minority():
     assert hot_names == [f"h{i}" for i in range(16)]
 
 
+def test_banked_deficit_cannot_fund_a_mega_burst():
+    """DRR banking is CAPPED (one quantum beyond the largest flush):
+    credit a bucket accrued across earlier rounds must never later pay
+    for flushing its whole backlog ahead of a minority peer.
+
+    The test seeds the hot bucket's bank directly — the white-box stand-in
+    for "many rounds of banked quantum" — then offers a 32-deep hot
+    backlog against one cold request. Pre-fix (unbounded bank) the seeded
+    credit pays for all four hot flushes back to back and the cold
+    request dispatches dead last; with the cap, the bank clamps to at
+    most two flushes' worth, so the cold request is served within the
+    first round (third dispatch at the latest)."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=True)
+    for i in range(32):
+        sched.submit(Req(f"h{i}", bucket=("HOT", "u8")))
+    sched.submit(Req("c0", bucket=("COLD", "u8")))
+    sched._deficit[("HOT", "u8")] = 1000   # banked across earlier rounds
+    sched.start()
+    sched.close()
+    order = [(b, len(names)) for b, names, _ in fake.dispatches]
+    assert order.count((("HOT", "u8"), 8)) == 4     # backlog fully served
+    cold_at = order.index((("COLD", "u8"), 1))
+    assert cold_at <= 2, (
+        f"banked deficit funded a mega-burst: cold request dispatched "
+        f"{cold_at + 1}th in {order}")
+
+
 def test_unfair_legacy_policy_serves_hot_backlog_first():
     """fair=False keeps the arrival-order policy (the benchmark's unfair
     arm): the minority request waits behind the whole hot backlog."""
