@@ -24,6 +24,17 @@ a **sibling cache** (``peer_hits > 0``), and when the recording box had
 ``--fleet`` may run standalone (no ``--fresh``) so the fleet-smoke CI
 job can gate the archive without re-running the service bench.
 
+A fourth family gates the scene archive the same way: ``--scene
+BENCH_scene.json`` (standalone-capable, run by the scene-smoke CI job)
+requires ``scene_stitch.bit_identical`` and
+``checkpoint_overhead.resume_bit_identical`` to be true — no escape
+hatch, these are correctness, not speed — and holds the two same-box
+relative ratios: stitched throughput at least ``min_scene_stitch_ratio``
+of per-tile-naive (batching strips must not be slower than not
+batching), and ``checkpoint_overhead_fraction`` at most
+``max_checkpoint_overhead`` (kill-anywhere resumability must stay
+affordable). A ``cpu_limited`` note on a row waives only its ratio bar.
+
 ``--simulate-regression`` degrades the fresh numbers before comparison
 (speedups halved-and-halved-again, pad fractions inflated) so CI can
 prove the gate actually trips — the bench-gate job runs that first and
@@ -46,6 +57,8 @@ DEFAULT_GATE = {
     "max_pad_fraction_increase": 0.4,
     "min_low_occupancy_pad_gap": 0.5,
     "min_fleet_ratio": 2.0,
+    "min_scene_stitch_ratio": 0.5,
+    "max_checkpoint_overhead": 0.5,
 }
 
 
@@ -141,6 +154,49 @@ def check_fleet(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
     return failures
 
 
+def check_scene(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
+    """Hard invariants of the committed scene archive. Bit-identity
+    verdicts have no escape; the same-box ratio bars can be waived only
+    by a ``cpu_limited`` note on the row."""
+    failures: List[str] = []
+    rows = {row["scenario"]: row for row in report.get("scenarios", [])}
+
+    stitch = rows.get("scene_stitch")
+    if stitch is None:
+        failures.append("scene archive has no scene_stitch scenario")
+    else:
+        if stitch.get("bit_identical") is not True:
+            failures.append(
+                "scene_stitch: stitched result not bit-identical to the "
+                "whole-scene analysis")
+        ratio = stitch.get("stitched_vs_naive_ratio")
+        floor = gate["min_scene_stitch_ratio"]
+        if "cpu_limited" not in stitch.get("note", ""):
+            if ratio is None or ratio < floor:
+                failures.append(
+                    f"scene_stitch: stitched_vs_naive_ratio {ratio} < "
+                    f"{floor} without a cpu_limited note — strip batching "
+                    f"became slower than per-tile calls")
+
+    ckpt = rows.get("checkpoint_overhead")
+    if ckpt is None:
+        failures.append("scene archive has no checkpoint_overhead scenario")
+    else:
+        if ckpt.get("resume_bit_identical") is not True:
+            failures.append(
+                "checkpoint_overhead: interrupt->resume output not "
+                "byte-identical to the uninterrupted run")
+        frac = ckpt.get("checkpoint_overhead_fraction")
+        ceil = gate["max_checkpoint_overhead"]
+        if "cpu_limited" not in ckpt.get("note", ""):
+            if frac is None or frac > ceil:
+                failures.append(
+                    f"checkpoint_overhead: overhead fraction {frac} > "
+                    f"{ceil} without a cpu_limited note — per-stack "
+                    f"checkpointing became unaffordable")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_service.json")
@@ -149,12 +205,15 @@ def main() -> None:
     ap.add_argument("--fleet", default=None,
                     help="BENCH_fleet.json to check invariants of (may "
                          "run standalone, without --fresh)")
+    ap.add_argument("--scene", default=None,
+                    help="BENCH_scene.json to check invariants of (may "
+                         "run standalone, without --fresh)")
     ap.add_argument("--simulate-regression", action="store_true",
                     help="degrade the fresh numbers first; the gate MUST "
                          "exit nonzero (CI self-test)")
     args = ap.parse_args()
-    if args.fresh is None and args.fleet is None:
-        ap.error("nothing to do: pass --fresh and/or --fleet")
+    if args.fresh is None and args.fleet is None and args.scene is None:
+        ap.error("nothing to do: pass --fresh, --fleet, and/or --scene")
     with open(args.baseline) as f:
         baseline_report = json.load(f)
     gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
@@ -182,6 +241,13 @@ def main() -> None:
         failures += fleet_failures
         print(f"fleet gate: {args.fleet} "
               f"{'FAILED' if fleet_failures else 'ok'}")
+    if args.scene is not None:
+        with open(args.scene) as f:
+            scene_report = json.load(f)
+        scene_failures = check_scene(scene_report, gate)
+        failures += scene_failures
+        print(f"scene gate: {args.scene} "
+              f"{'FAILED' if scene_failures else 'ok'}")
     if failures:
         print("\nPERF REGRESSION:")
         for f_ in failures:

@@ -10,9 +10,14 @@ Design (scaled-down Orbax-style, no external deps):
     LATEST                 atomic pointer file, written last
 
 Crash safety: shards are written to ``step_X.tmp/`` then the directory is
-atomically renamed and LATEST updated; a step directory without a manifest
-whose ``done`` flag is true is ignored on restore, so a node failure mid-save
-can never corrupt the restore path. ``keep`` bounds disk usage.
+atomically renamed and LATEST updated (the manifest itself is also written
+via temp + ``os.replace`` inside the staging dir); a step directory whose
+manifest is missing, unparsable, lacks ``done: true``, or references a
+shard file that is absent or not a valid zip archive is treated as
+*invalid*: ``latest_step`` warns and falls back to the newest **valid**
+step instead of crashing the restoring job, so a kill mid-save — or a torn
+disk write that corrupts the newest checkpoint — costs at most one
+checkpoint interval, never the whole bulk job. ``keep`` bounds disk usage.
 
 Elastic restore: leaves are stored by pytree path, restore re-shards onto
 whatever mesh/topology the restoring job uses (restore(shardings=...) places
@@ -26,6 +31,8 @@ import json
 import os
 import shutil
 import threading
+import warnings
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -96,8 +103,13 @@ class Checkpointer:
             if size >= _SHARD_BYTES:
                 flush()
         flush()
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        # manifest via temp + atomic rename: a kill mid-json.dump leaves a
+        # .tmp file the validator ignores, never a half-written manifest
+        # that parses but lies
+        man_tmp = os.path.join(tmp, "manifest.json.tmp")
+        with open(man_tmp, "w") as f:
             json.dump({"step": step, "index": index, "done": True}, f)
+        os.replace(man_tmp, os.path.join(tmp, "manifest.json"))
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -117,18 +129,76 @@ class Checkpointer:
 
     # -- restore --------------------------------------------------------------
 
-    def latest_step(self) -> Optional[int]:
-        ptr = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(ptr):
+    def _validate_step_dir(self, name: str) -> Optional[int]:
+        """Step number if ``name`` holds a complete, readable checkpoint.
+
+        A valid step dir has a parsable manifest with ``done: true`` whose
+        every referenced shard file exists and is a well-formed zip (npz)
+        containing the expected member. Anything else — truncated JSON from
+        a kill mid-write, a missing or torn shard — returns None.
+        """
+        d = os.path.join(self.dir, name)
+        man = os.path.join(d, "manifest.json")
+        try:
+            with open(man) as f:
+                m = json.load(f)
+        except (OSError, ValueError):
             return None
-        with open(ptr) as f:
-            name = f.read().strip()
-        man = os.path.join(self.dir, name, "manifest.json")
-        if not os.path.exists(man):
-            return None  # incomplete save; treat as absent
-        with open(man) as f:
-            m = json.load(f)
-        return m["step"] if m.get("done") else None
+        if not m.get("done") or not isinstance(m.get("step"), int):
+            return None
+        index = m.get("index", {})
+        try:
+            members_by_file: dict[str, set] = {}
+            for meta in index.values():
+                members_by_file.setdefault(meta["file"], set()).add(
+                    meta["key"] + ".npy")
+            for fname, members in members_by_file.items():
+                with zipfile.ZipFile(os.path.join(d, fname)) as z:
+                    if not members.issubset(set(z.namelist())):
+                        return None
+        except (OSError, KeyError, TypeError, zipfile.BadZipFile):
+            return None
+        return m["step"]
+
+    def latest_step(self) -> Optional[int]:
+        """Newest *valid* step, or None.
+
+        The LATEST pointer is a hint, not an authority: if the step it
+        names fails validation (kill during ``_write``, torn shard), this
+        warns and scans the step directories newest-first for the first
+        one that validates, so a corrupt checkpoint costs one save
+        interval instead of crashing the whole bulk job.
+        """
+        ptr = os.path.join(self.dir, "LATEST")
+        pointed: Optional[str] = None
+        if os.path.exists(ptr):
+            try:
+                with open(ptr) as f:
+                    pointed = f.read().strip()
+            except OSError:
+                pointed = None
+        if pointed:
+            step = self._validate_step_dir(pointed)
+            if step is not None:
+                return step
+            warnings.warn(
+                f"checkpoint {pointed!r} (named by LATEST) is incomplete "
+                f"or corrupt; falling back to the newest valid step",
+                RuntimeWarning, stacklevel=2)
+        candidates = sorted(
+            (d for d in os.listdir(self.dir)
+             if d.startswith("step_") and not d.endswith(".tmp")),
+            reverse=True)
+        for name in candidates:
+            if name == pointed:
+                continue  # already failed validation above
+            step = self._validate_step_dir(name)
+            if step is not None:
+                return step
+            warnings.warn(
+                f"checkpoint {name!r} is incomplete or corrupt; skipping",
+                RuntimeWarning, stacklevel=2)
+        return None
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Restore into the structure of ``like``; optionally re-shard."""

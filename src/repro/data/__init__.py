@@ -1,3 +1,3 @@
-from repro.data import modis, pipeline, synthetic
+from repro.data import modis, pipeline, scenes, synthetic
 
-__all__ = ["modis", "pipeline", "synthetic"]
+__all__ = ["modis", "pipeline", "scenes", "synthetic"]

@@ -57,11 +57,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-queue-depth", type=int, default=None)
     ap.add_argument("--bucket-queue-depth", type=int, default=None)
     ap.add_argument("--policy", default="block", choices=["block", "shed"])
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="share a persistent JAX compilation cache (a "
+                         "restarted worker reloads its bucket ladder's "
+                         "compiles from disk instead of recompiling)")
     return ap
 
 
 def main(argv=None) -> None:
     args = build_parser().parse_args(argv)
+    if args.compile_cache:
+        from repro.launch.compilecache import enable_compile_cache
+
+        enable_compile_cache(args.compile_cache)
 
     from repro.engine import YCHGEngine
     from repro.fleet.peering import PeeredResultCache

@@ -335,6 +335,12 @@ class FrontendServer:
         gauge("ychg_compiled_shapes", m.n_compiled_shapes)
         gauge("ychg_drain_rate_rps", round(self._drain.rate(), 3))
         gauge("ychg_backend_info", 1, f'{{backend="{m.backend}"}}')
+        # scene/bulk workload progress (repro.scene), attached via
+        # service.attach_scene_progress(); all zero when none is running
+        gauge("ychg_scene_tiles_done", m.scene_tiles_done)
+        gauge("ychg_scene_tiles_total", m.scene_tiles_total)
+        counter("ychg_scene_resumes_total", m.scene_resumes)
+        gauge("ychg_scene_stitch_seconds", round(m.scene_stitch_time_s, 6))
         return "\n".join(lines) + "\n"
 
     # -------------------------------------------------------------- RPC side

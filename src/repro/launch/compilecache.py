@@ -1,0 +1,38 @@
+"""Opt-in JAX persistent compilation cache for serve/bulk entry points.
+
+A restarted fleet worker or a resumed bulk job re-lowers and re-compiles
+every rung of its bucket ladder from scratch — pure cold-start tax, since
+the shapes are identical across restarts by construction (traffic cannot
+change them, only config can). Pointing every process at one on-disk
+cache directory makes the second process's compiles disk reads.
+
+Deliberately opt-in (``serve.py --compile-cache DIR`` /
+``fleet.worker --compile-cache DIR``): the default CPU interpret-mode
+tests must not silently depend on cache state, and the cache directory is
+a shared mutable resource the operator should own. Thresholds are set to
+"cache everything" because the bucket ladder is a small closed set of
+executables — eviction pressure is not a concern, restart latency is.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def enable_compile_cache(directory: str) -> bool:
+    """Point this process's JAX at a persistent compilation cache.
+
+    Returns True when the cache was enabled, False when this jax build
+    has no persistent-cache support (the caller keeps working, just
+    without restart-time compile reuse).
+    """
+    try:
+        jax.config.update("jax_compilation_cache_dir", directory)
+        # cache every executable regardless of compile time or size: the
+        # bucket ladder is a small closed set, and the whole point is that
+        # a restart pays zero recompiles
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except AttributeError:       # ancient jax: no persistent cache knobs
+        return False
+    return True

@@ -50,6 +50,13 @@ class ServiceMetrics:
     shed_by_bucket: Tuple[Tuple[Any, int], ...] = ()
     peer_hits: int = 0        # local misses served by a sibling's cache
     peer_misses: int = 0      # outbound probes no sibling could answer
+    # scene/bulk workload attached via service.attach_scene_progress():
+    # granule-scale streaming progress (repro.scene), all zero when no
+    # scene job is publishing through this service
+    scene_tiles_done: int = 0
+    scene_tiles_total: int = 0
+    scene_resumes: int = 0          # checkpoint restores across the job
+    scene_stitch_time_s: float = 0.0  # host-side seam/stitch accumulation
 
     @property
     def n_compiled_shapes(self) -> int:
@@ -121,6 +128,8 @@ class MetricsRecorder:
                  blocked: int = 0,
                  shed_by_bucket: Tuple[Tuple[Any, int], ...] = (),
                  peer_hits: int = 0, peer_misses: int = 0,
+                 scene_tiles_done: int = 0, scene_tiles_total: int = 0,
+                 scene_resumes: int = 0, scene_stitch_time_s: float = 0.0,
                  ) -> ServiceMetrics:
         with self._lock:
             lat = np.asarray(self._latencies, np.float64) * 1e3
@@ -154,4 +163,8 @@ class MetricsRecorder:
                 shed_by_bucket=shed_by_bucket,
                 peer_hits=peer_hits,
                 peer_misses=peer_misses,
+                scene_tiles_done=scene_tiles_done,
+                scene_tiles_total=scene_tiles_total,
+                scene_resumes=scene_resumes,
+                scene_stitch_time_s=scene_stitch_time_s,
             )

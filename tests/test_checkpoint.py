@@ -1,0 +1,173 @@
+"""`repro.checkpoint` suite: atomic saves, GC, and crash-recovery fallback.
+
+Policy (tests/README.md §Checkpoint tests): corruption is *simulated
+deliberately* — truncating a shard zip, rewriting a manifest with partial
+JSON, pointing LATEST at a deleted directory — never produced by racing a
+writer. Each recovery case asserts two things: the fallback **result**
+(``latest_step`` lands on the newest checkpoint that still validates) and
+the fallback **signal** (a ``RuntimeWarning`` naming the skipped step), so
+a silent wrong-restore can never pass. Restores compare bit-identically
+(values, dtypes, shapes) against the saved host arrays.
+
+The corruption cases here were written against the pre-hardening
+``Checkpointer`` (which trusted LATEST blindly and crashed in ``restore``)
+and fail on it; they pin the fallback contract ``repro.scene.BulkJob``
+relies on for kill-anywhere resumability.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(seed=0):
+    """Nested pytree with mixed dtypes/shapes (no int64/float64: x64 is
+    off, restore round-trips through jnp.asarray)."""
+    rng = np.random.default_rng(seed)
+    return {
+        "state": {
+            "runs": rng.integers(0, 100, 37).astype(np.int32),
+            "carry": (rng.random(37) < 0.5).astype(np.uint8),
+        },
+        "meta": [np.int32(seed), np.float32(seed / 2)],
+        "scalar": np.zeros((), np.int32) + seed,
+    }
+
+
+def _assert_tree_equal(got, want):
+    import jax
+
+    g_leaves = jax.tree_util.tree_leaves(got)
+    w_leaves = jax.tree_util.tree_leaves(want)
+    assert len(g_leaves) == len(w_leaves)
+    for g, w in zip(g_leaves, w_leaves):
+        g, w = np.asarray(g), np.asarray(w)
+        assert g.dtype == w.dtype
+        assert g.shape == w.shape
+        np.testing.assert_array_equal(g, w)
+
+
+def _corrupt_shard(ckpt_dir, step):
+    """Truncate a step's first shard: the zip central directory is at the
+    end of the file, so this is unreadable, like a torn disk write."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    shard = sorted(f for f in os.listdir(d) if f.endswith(".npz"))[0]
+    with open(os.path.join(d, shard), "r+b") as f:
+        f.truncate(8)
+
+
+# -------------------------------------------------------------- round trip
+
+
+def test_save_restore_round_trip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    tree = _tree(seed=3)
+    ckpt.save(100, tree)
+    assert ckpt.latest_step() == 100
+    _assert_tree_equal(ckpt.restore(100, like=tree), tree)
+
+
+def test_async_save_wait_then_restore(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), async_save=True)
+    tree = _tree(seed=4)
+    ckpt.save(7, tree)
+    ckpt.wait()   # flush: the write thread owns the files until joined
+    assert ckpt.latest_step() == 7
+    _assert_tree_equal(ckpt.restore(7, like=tree), tree)
+
+
+def test_keep_gc_drops_oldest(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ckpt.save(step, _tree(seed=step))
+    names = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert names == ["step_00000003", "step_00000004"]
+    assert ckpt.latest_step() == 4
+
+
+def test_latest_none_on_empty_dir(tmp_path):
+    assert Checkpointer(str(tmp_path)).latest_step() is None
+
+
+# ------------------------------------------------- crash-recovery fallback
+# These cases fail on the pre-hardening Checkpointer: it either returned
+# the corrupt step (restore then crashed the job) or raised outright.
+
+
+def test_corrupt_newest_shard_falls_back_with_warning(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    good = _tree(seed=1)
+    ckpt.save(1, good)
+    ckpt.save(2, _tree(seed=2))
+    _corrupt_shard(str(tmp_path), 2)
+    with pytest.warns(RuntimeWarning, match="step_00000002"):
+        assert ckpt.latest_step() == 1
+    _assert_tree_equal(ckpt.restore(1, like=good), good)
+
+
+def test_truncated_manifest_json_falls_back(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, _tree(seed=1))
+    ckpt.save(2, _tree(seed=2))
+    man = os.path.join(tmp_path, "step_00000002", "manifest.json")
+    with open(man) as f:
+        text = f.read()
+    with open(man, "w") as f:
+        f.write(text[: len(text) // 2])   # kill mid-json.dump
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.latest_step() == 1
+
+
+def test_manifest_without_done_flag_is_invalid(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, _tree(seed=1))
+    ckpt.save(2, _tree(seed=2))
+    man = os.path.join(tmp_path, "step_00000002", "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    del m["done"]
+    with open(man, "w") as f:
+        json.dump(m, f)
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.latest_step() == 1
+
+
+def test_latest_pointing_at_missing_dir_falls_back(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(5, _tree(seed=5))
+    with open(os.path.join(tmp_path, "LATEST"), "w") as f:
+        f.write("step_00000099")   # pointer updated, dir lost
+    with pytest.warns(RuntimeWarning, match="step_00000099"):
+        assert ckpt.latest_step() == 5
+
+
+def test_leftover_tmp_dir_is_ignored(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(3, _tree(seed=3))
+    # a kill between staging and the atomic rename leaves only .tmp
+    os.makedirs(os.path.join(tmp_path, "step_00000009.tmp"))
+    assert ckpt.latest_step() == 3
+
+
+def test_all_checkpoints_corrupt_returns_none(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, _tree(seed=1))
+    _corrupt_shard(str(tmp_path), 1)
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.latest_step() is None
+
+
+def test_missing_shard_file_is_invalid(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(1, _tree(seed=1))
+    ckpt.save(2, _tree(seed=2))
+    d = os.path.join(tmp_path, "step_00000002")
+    for f in os.listdir(d):
+        if f.endswith(".npz"):
+            os.remove(os.path.join(d, f))
+    with pytest.warns(RuntimeWarning):
+        assert ckpt.latest_step() == 1
