@@ -18,6 +18,7 @@ host dict that ``core.api.analyze_image`` used to return.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Iterable, Iterator, Optional
 
 import numpy as np
@@ -251,10 +252,16 @@ class YCHGEngine:
 
     def _run(self, imgs: Array, *, batched: bool) -> YCHGResult:
         spec = self._resolve()
+        # counted BEFORE the run so a raising backend still shows up in
+        # call_count; the dispatch-cost histogram only sees successes
         registry.note_call(spec.name)
+        t0 = time.monotonic()
         if self.mesh is not None:
-            return _from_summary(self._run_meshed(spec, imgs), batched)
-        return _from_summary(spec.run(imgs, self.config), batched)
+            out = _from_summary(self._run_meshed(spec, imgs), batched)
+        else:
+            out = _from_summary(spec.run(imgs, self.config), batched)
+        registry.note_dispatch(spec.name, time.monotonic() - t0)
+        return out
 
     def _run_meshed(self, spec: registry.BackendSpec, imgs: Array) -> YCHGSummary:
         """shard_map ``spec`` over the 1-D batch mesh.

@@ -29,12 +29,16 @@ import dataclasses
 import functools
 from typing import Callable, Mapping, Optional, Tuple
 
+from repro.obs.histogram import DISPATCH_BOUNDS, Histogram, HistogramSnapshot
+
 __all__ = [
     "BackendSpec",
     "backend_names",
     "call_count",
+    "dispatch_seconds",
     "get_backend",
     "note_call",
+    "note_dispatch",
     "register_backend",
     "reset_call_counts",
     "resolve",
@@ -122,6 +126,27 @@ def call_count(name: Optional[str] = None) -> int:
 
 def reset_call_counts() -> None:
     _CALL_COUNTS.clear()
+    _DISPATCH_SECONDS.clear()
+
+
+# Per-backend dispatch-cost histograms: how long the engine's synchronous
+# dispatch call (issue, not device completion — jax dispatch is async) took,
+# keyed by backend name. Same best-effort discipline as _CALL_COUNTS.
+_DISPATCH_SECONDS: "dict[str, Histogram]" = {}
+
+
+def note_dispatch(name: str, seconds: float) -> None:
+    """Record the synchronous dispatch cost of one engine call (called by
+    the engine next to :func:`note_call`)."""
+    hist = _DISPATCH_SECONDS.get(name)
+    if hist is None:
+        hist = _DISPATCH_SECONDS.setdefault(name, Histogram(DISPATCH_BOUNDS))
+    hist.observe(max(0.0, seconds))
+
+
+def dispatch_seconds() -> "dict[str, HistogramSnapshot]":
+    """Per-backend dispatch-cost histogram snapshots (frozen)."""
+    return {name: h.snapshot() for name, h in _DISPATCH_SECONDS.items()}
 
 
 def get_backend(name: str) -> BackendSpec:

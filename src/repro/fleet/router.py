@@ -50,12 +50,23 @@ from repro.fleet.worker import parse_ready_line
 from repro.frontend import protocol
 from repro.frontend.client import AsyncRPCClient, FrontendError
 from repro.frontend.server import (
+    TRACE_HEADER,
     _chunk,
+    _DrainRate,
     _head,
     _parse_head,
     _respond,
     _respond_json,
 )
+from repro.obs import (
+    NULL_TRACE,
+    PromBuilder,
+    base_family,
+    maybe_trace,
+    parse_prom_text,
+    recorder,
+)
+from repro.obs.histogram import HistogramSnapshot
 from repro.service.batching import pick_bucket_side
 from repro.service.cache import make_key, serialize_key
 from repro.service.scheduler import (
@@ -131,6 +142,7 @@ class _RouterRequest:
     t_submit: float
     future: Future
     served_by: Optional[str] = None
+    trace: Any = NULL_TRACE   # the HTTP handler's trace; spans join it
 
 
 def routing_key(mask: np.ndarray) -> bytes:
@@ -169,6 +181,10 @@ class FleetRouter:
         self.rerouted_total = 0
         self.unroutable_total = 0
         self.completed_total = 0
+        # completion-rate estimator feeding the router's own 429
+        # Retry-After (same rolling-window class the frontend uses);
+        # observed and read on the loop thread only
+        self._drain = _DrainRate()
         self._scheduler = Scheduler(
             config.scheduler_config(),
             dispatch=self._dispatch,
@@ -264,6 +280,12 @@ class FleetRouter:
         order past downed/failing workers. A worker that ANSWERS (even
         with an error status) ends the walk — only transport failures
         reroute, so a deterministic 4xx/5xx never retries elsewhere."""
+        t0 = time.monotonic()
+        call_frame: Dict[str, Any] = {"op": "analyze", "mask": req.payload}
+        if req.trace.enabled:
+            # the RPC frame field mirroring the HTTP X-YCHG-Trace header:
+            # the worker's spans join this router-side trace id
+            call_frame["trace"] = req.trace.trace_id
         last_exc: Optional[Exception] = None
         first = True
         for name in self._ring.preference(req.skey):
@@ -274,7 +296,7 @@ class FleetRouter:
             try:
                 client = await self._client(name)
                 frame = await asyncio.wait_for(
-                    client.call({"op": "analyze", "mask": req.payload}),
+                    client.call(call_frame),
                     timeout=self.config.forward_timeout_s)
             except Exception as e:
                 last_exc = e
@@ -285,8 +307,12 @@ class FleetRouter:
             if not first:
                 self.rerouted_total += 1
             req.served_by = name
+            req.trace.add("router.forward", t0, time.monotonic(),
+                          worker=name, rerouted=not first)
             return frame
         self.unroutable_total += 1
+        req.trace.add("router.forward", t0, time.monotonic(),
+                      outcome="unroutable")
         raise FrontendError(
             f"no live worker could serve this request "
             f"(last error: {last_exc})", status=503)
@@ -391,7 +417,8 @@ class FleetRouter:
                     break
                 body = await reader.readexactly(n) if n else b""
                 keep = headers.get("connection", "").lower() != "close"
-                keep = await self._route(method, target, body, writer, keep)
+                keep = await self._route(method, target, body, writer, keep,
+                                         headers)
                 if not keep:
                     break
         except (ConnectionError, asyncio.LimitOverrunError,
@@ -405,7 +432,9 @@ class FleetRouter:
                 pass
 
     async def _route(self, method: str, target: str, body: bytes,
-                     writer: asyncio.StreamWriter, keep: bool) -> bool:
+                     writer: asyncio.StreamWriter, keep: bool,
+                     headers: Optional[Dict[str, str]] = None) -> bool:
+        trace_id = (headers or {}).get(TRACE_HEADER) or None
         try:
             if method == "GET" and target == "/healthz":
                 await _respond_json(writer, 200, {
@@ -416,10 +445,16 @@ class FleetRouter:
                 page = await self._rollup_metrics()
                 await _respond(writer, 200, page.encode(),
                                "text/plain; version=0.0.4", keep)
+            elif method == "GET" and target == "/debug/traces":
+                # router-side flight recorder only; worker rings are
+                # served by each worker's own /debug/traces
+                await _respond(writer, 200,
+                               recorder().to_chrome_json().encode(),
+                               "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
-                await self._http_analyze(body, writer, keep)
+                await self._http_analyze(body, writer, keep, trace_id)
             elif method == "POST" and target == "/v1/analyze_batch":
-                await self._http_analyze_batch(body, writer)
+                await self._http_analyze_batch(body, writer, trace_id)
                 keep = False
             else:
                 await _respond_json(writer, 404, {
@@ -435,24 +470,36 @@ class FleetRouter:
             await _respond_json(writer, 500, {"error": str(e)}, keep)
         return keep
 
-    async def _submit(self, item: Dict[str, Any]) -> Dict[str, Any]:
+    async def _submit(self, item: Dict[str, Any],
+                      trace: Any = None) -> Dict[str, Any]:
         """Admit one encoded mask through the DRR scheduler and await the
         worker's response frame. decode_array validates the payload and
         yields shape/dtype for the bucket + routing key; the DECODED mask
         goes no further — the worker gets the client's original bytes."""
+        tr = trace if trace is not None else NULL_TRACE
         mask = protocol.decode_array(item["mask"])
         side = pick_bucket_side(mask.shape, self.config.bucket_sides)
         req = _RouterRequest(
             payload=item["mask"], skey=routing_key(mask),
             bucket=(side, str(mask.dtype)), t_submit=time.monotonic(),
-            future=Future())
+            future=Future(), trace=tr)
         loop = asyncio.get_running_loop()
         # submit on the executor: a "block" park must not stall the loop
+        t_gate = time.monotonic()
         await loop.run_in_executor(
             self._pool, self._scheduler.submit, req)
+        tr.add("router.admission", t_gate, time.monotonic())
         frame = await asyncio.wrap_future(req.future)
         self.completed_total += 1
+        self._drain.observe(self.completed_total)
         return frame
+
+    def _retry_hint_s(self) -> float:
+        """Measured Retry-After for a router-side shed: the observed
+        completion rate over the current backlog (1.0 s only while cold —
+        no completions observed yet)."""
+        self._drain.observe(self.completed_total)
+        return self._drain.retry_after_s(self._scheduler.backlog())
 
     def _frame_to_response(self, frame: Dict[str, Any],
                            rid: Any) -> Tuple[int, Dict[str, Any]]:
@@ -466,33 +513,43 @@ class FleetRouter:
         return int(frame.get("status", 500)), out
 
     async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
-                            keep: bool) -> None:
-        payload = json.loads(body)
-        rid = payload.get("id")
+                            keep: bool,
+                            trace_id: Optional[str] = None) -> None:
+        tr = maybe_trace(trace_id, process="router")
         try:
-            frame = await self._submit(payload)
-        except ServiceOverloaded as e:
-            retry = 1.0
-            await _respond_json(
-                writer, 429,
-                {"error": str(e), "status": 429, "retry_after_s": retry},
-                keep, extra=[("Retry-After", str(max(1, math.ceil(retry))))])
-            return
-        except FrontendError as e:
-            await _respond_json(writer, e.status, {
-                "error": str(e), "status": e.status}, keep)
-            return
-        status, out = self._frame_to_response(frame, rid)
-        extra = None
-        if status == 429 and out.get("retry_after_s") is not None:
-            extra = [("Retry-After",
-                      str(max(1, math.ceil(float(out["retry_after_s"])))))]
-        await _respond_json(writer, status, out, keep, extra=extra)
+            payload = json.loads(body)
+            rid = payload.get("id")
+            try:
+                frame = await self._submit(payload, tr)
+            except ServiceOverloaded as e:
+                retry = self._retry_hint_s()
+                await _respond_json(
+                    writer, 429,
+                    {"error": str(e), "status": 429,
+                     "retry_after_s": round(retry, 3)},
+                    keep,
+                    extra=[("Retry-After", str(max(1, math.ceil(retry))))])
+                return
+            except FrontendError as e:
+                await _respond_json(writer, e.status, {
+                    "error": str(e), "status": e.status}, keep)
+                return
+            status, out = self._frame_to_response(frame, rid)
+            extra = None
+            if status == 429 and out.get("retry_after_s") is not None:
+                extra = [("Retry-After",
+                          str(max(1,
+                                  math.ceil(float(out["retry_after_s"])))))]
+            await _respond_json(writer, status, out, keep, extra=extra)
+        finally:
+            tr.finish()
 
     async def _http_analyze_batch(self, body: bytes,
-                                  writer: asyncio.StreamWriter) -> None:
+                                  writer: asyncio.StreamWriter,
+                                  trace_id: Optional[str] = None) -> None:
         """Chunked NDJSON in COMPLETION order, same contract as the
         single-process front end."""
+        tr = maybe_trace(trace_id, process="router")
         payload = json.loads(body)
         items = payload["masks"]
         if not isinstance(items, list):
@@ -501,10 +558,10 @@ class FleetRouter:
         async def run_one(i: int, item: Dict[str, Any]) -> Dict[str, Any]:
             rid = item.get("id", i)
             try:
-                frame = await self._submit({"mask": item})
+                frame = await self._submit({"mask": item}, tr)
             except ServiceOverloaded as e:
                 return {"id": rid, "error": str(e), "status": 429,
-                        "retry_after_s": 1.0}
+                        "retry_after_s": round(self._retry_hint_s(), 3)}
             except protocol.ProtocolError as e:
                 return {"id": rid, "error": str(e), "status": 400}
             except FrontendError as e:
@@ -527,6 +584,7 @@ class FleetRouter:
         finally:
             for t in tasks:
                 t.cancel()
+            tr.finish()
 
     # -------------------------------------------------------- metrics rollup
 
@@ -547,7 +605,10 @@ class FleetRouter:
 
     async def _rollup_metrics(self) -> str:
         """One Prometheus page for the whole fleet: worker ``*_total``
-        series summed per label set, per-worker up gauges, router
+        counters AND histogram families summed per label set (exact,
+        because every process shares the fixed bucket boundaries of
+        :mod:`repro.obs.histogram` — ``_bucket``/``_sum``/``_count`` are
+        all plain summable counters), per-worker up gauges, router
         counters."""
         loop = asyncio.get_running_loop()
         pages: Dict[str, Optional[str]] = {}
@@ -555,47 +616,68 @@ class FleetRouter:
             pages[name] = (await loop.run_in_executor(
                 self._pool, self._fetch_worker_metrics, link)
                 if link.up else None)
-        totals: Dict[str, float] = {}
-        order: List[str] = []
-        for page in pages.values():
-            if page is None:
+        totals: Dict[Tuple[str, Tuple], float] = {}
+        order: List[Tuple[str, Tuple]] = []
+        types: Dict[str, str] = {}
+        for text in pages.values():
+            if text is None:
                 continue
-            for line in page.splitlines():
-                if not line or line.startswith("#"):
+            try:
+                page = parse_prom_text(text)
+            except ValueError:
+                continue   # one malformed worker must not kill the page
+            types.update(page.types)
+            for s in page.samples:
+                fam = base_family(s.name)
+                is_hist = page.types.get(fam) == "histogram"
+                if not (s.name.endswith("_total") or is_hist):
                     continue
-                series, _, value = line.rpartition(" ")
-                if not series.split("{", 1)[0].endswith("_total"):
-                    continue
-                try:
-                    v = float(value)
-                except ValueError:
-                    continue
-                if series not in totals:
-                    order.append(series)
-                totals[series] = totals.get(series, 0.0) + v
-        lines = ["# HELP ychg_* fleet rollup: worker *_total series summed "
-                 "across workers + router-side ychg_fleet_* series"]
-        for series in order:
-            v = totals[series]
-            lines.append(f"# TYPE {series.split('{', 1)[0]} counter")
-            lines.append(
-                f"{series} {int(v) if float(v).is_integer() else v}")
-        lines.append("# TYPE ychg_fleet_worker_up gauge")
+                key = (s.name, s.labels)
+                if key not in totals:
+                    order.append(key)
+                    totals[key] = 0.0
+                totals[key] += s.value
+        # group summed series by family (first-seen order) so TYPE lines
+        # come out once per family, with histogram families declared as
+        # histograms rather than counters
+        fam_order: List[str] = []
+        fam_series: Dict[str, List[Tuple[str, Tuple]]] = {}
+        for name, labels in order:
+            fam = base_family(name)
+            if types.get(fam) != "histogram":
+                fam = name
+            if fam not in fam_series:
+                fam_order.append(fam)
+                fam_series[fam] = []
+            fam_series[fam].append((name, labels))
+        b = PromBuilder()
+        b.raw("# HELP ychg_* fleet rollup: worker *_total and histogram "
+              "series summed across workers + router-side ychg_fleet_* "
+              "series")
+        for fam in fam_order:
+            b.header(fam,
+                     "histogram" if types.get(fam) == "histogram"
+                     else "counter")
+            for name, labels in fam_series[fam]:
+                b.sample(name, labels, totals[(name, labels)])
+        b.header("ychg_fleet_worker_up", "gauge",
+                 "1 when the worker answered the last metrics scrape")
         for name, link in self._links.items():
-            lines.append(
-                f'ychg_fleet_worker_up{{worker="{name}"}} '
-                f"{1 if link.up and pages.get(name) is not None else 0}")
-        for cname, v in (("ychg_fleet_routed_total", self.routed_total),
-                         ("ychg_fleet_rerouted_total", self.rerouted_total),
-                         ("ychg_fleet_unroutable_total",
-                          self.unroutable_total),
-                         ("ychg_fleet_completed_total",
-                          self.completed_total)):
-            lines.append(f"# TYPE {cname} counter")
-            lines.append(f"{cname} {v}")
-        lines.append("# TYPE ychg_fleet_queue_depth gauge")
-        lines.append(f"ychg_fleet_queue_depth {self._scheduler.backlog()}")
-        return "\n".join(lines) + "\n"
+            b.sample("ychg_fleet_worker_up", (("worker", name),),
+                     1 if link.up and pages.get(name) is not None else 0)
+        b.counter("ychg_fleet_routed_total", self.routed_total,
+                  "requests forwarded to a worker")
+        b.counter("ychg_fleet_rerouted_total", self.rerouted_total,
+                  "forwards that failed over past their ring owner")
+        b.counter("ychg_fleet_unroutable_total", self.unroutable_total,
+                  "requests no live worker could serve")
+        b.counter("ychg_fleet_completed_total", self.completed_total,
+                  "requests answered through the router")
+        b.gauge("ychg_fleet_queue_depth", self._scheduler.backlog(),
+                "router-side admitted-but-unforwarded requests")
+        b.gauge("ychg_fleet_drain_rate_rps", round(self._drain.rate(), 3),
+                "observed router completion rate feeding Retry-After")
+        return b.render()
 
 
 # ------------------------------------------------------------- supervision

@@ -16,6 +16,7 @@ shutdown never abandons admitted requests.
 from __future__ import annotations
 
 import argparse
+import os
 import signal
 import threading
 
@@ -61,6 +62,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="share a persistent JAX compilation cache (a "
                          "restarted worker reloads its bucket ladder's "
                          "compiles from disk instead of recompiling)")
+    ap.add_argument("--trace-dump", default=None, metavar="PATH",
+                    help="dump this worker's flight recorder as Chrome-trace "
+                         "JSON to PATH.<pid> on shutdown")
     return ap
 
 
@@ -71,10 +75,15 @@ def main(argv=None) -> None:
 
         enable_compile_cache(args.compile_cache)
 
+    from repro import obs
     from repro.engine import YCHGEngine
     from repro.fleet.peering import PeeredResultCache
     from repro.frontend import ServerThread
     from repro.service import ServiceConfig, YCHGService
+
+    if args.trace_dump:
+        # per-process suffix: every worker of a supervisor shares the flag
+        obs.configure(dump_path=f"{args.trace_dump}.{os.getpid()}")
 
     config = ServiceConfig(
         bucket_sides=tuple(int(b) for b in args.buckets.split(",")),
@@ -95,6 +104,7 @@ def main(argv=None) -> None:
                           rpc_port=args.rpc_port) as srv:
             print(ready_line(srv.rpc_port, srv.port), flush=True)
             stop.wait()
+            obs.auto_dump("worker-shutdown")
             # context exits drain: ServerThread stops accepting, then
             # service.close() finishes every admitted request
 

@@ -27,6 +27,11 @@ from typing import Any, Dict, Iterable, Iterator, List, Optional, Sequence
 import numpy as np
 
 from repro.frontend import protocol
+from repro.obs import maybe_trace
+
+# must match repro.frontend.server.TRACE_HEADER (kept literal here so the
+# client stays importable without the server module)
+TRACE_HEADER = "X-YCHG-Trace"
 
 
 class FrontendError(RuntimeError):
@@ -121,14 +126,18 @@ class YCHGClient:
         self.close()
 
     def _request(self, method: str, path: str,
-                 body: Optional[bytes] = None) -> http.client.HTTPResponse:
+                 body: Optional[bytes] = None,
+                 headers: Optional[Dict[str, str]] = None,
+                 ) -> http.client.HTTPResponse:
         """One request with a single transparent retry on a dropped
         keep-alive connection (the server or an idle timeout closed it)."""
         for attempt in (0, 1):
             conn = self._connection()
             try:
-                conn.request(method, path, body=body, headers={
-                    "Content-Type": "application/json"} if body else {})
+                hdrs = dict(headers or {})
+                if body:
+                    hdrs.setdefault("Content-Type", "application/json")
+                conn.request(method, path, body=body, headers=hdrs)
                 return conn.getresponse()
             except (http.client.HTTPException, ConnectionError, OSError):
                 self.close()
@@ -164,28 +173,54 @@ class YCHGClient:
             raise FrontendError(body.decode(errors="replace"), resp.status)
         return body.decode()
 
-    def analyze(self, mask: np.ndarray,
-                id: Any = None) -> Dict[str, np.ndarray]:
-        """One mask -> the ``to_host()``-shaped result dict (bit-identical
-        to in-process ``service.submit(mask).result().to_host()``)."""
-        req = dict(protocol.encode_array(np.asarray(mask)))
-        body = json.dumps({"mask": req, "id": id}).encode()
-        resp = self._request("POST", "/v1/analyze", body)
-        payload = resp.read()
-        if resp.status == 429:
-            try:
-                obj = json.loads(payload)
-            except ValueError:
-                obj = {}
-            raise FrontendOverloaded(
-                obj.get("error", "overloaded"),
-                retry_after_s=_retry_after_s(obj, resp.headers))
+    def debug_traces(self) -> Dict[str, Any]:
+        """The server's flight recorder as parsed Chrome-trace JSON
+        (``{"traceEvents": [...]}``), straight off ``GET /debug/traces``."""
+        resp = self._request("GET", "/debug/traces")
+        body = resp.read()
         if resp.status != 200:
-            raise FrontendError(payload.decode(errors="replace"), resp.status)
-        return protocol.decode_result(json.loads(payload)["result"])
+            raise FrontendError(body.decode(errors="replace"), resp.status)
+        return json.loads(body)
+
+    def analyze(self, mask: np.ndarray, id: Any = None,
+                trace_id: Optional[str] = None) -> Dict[str, np.ndarray]:
+        """One mask -> the ``to_host()``-shaped result dict (bit-identical
+        to in-process ``service.submit(mask).result().to_host()``).
+
+        ``trace_id`` propagates over the ``X-YCHG-Trace`` header so the
+        server's spans join the caller's trace; the client's own encode +
+        wire spans land in this process's flight recorder under the same
+        id."""
+        tr = maybe_trace(trace_id, process="client")
+        try:
+            t0 = time.monotonic()
+            req = dict(protocol.encode_array(np.asarray(mask)))
+            body = json.dumps({"mask": req, "id": id}).encode()
+            t1 = time.monotonic()
+            tr.add("client.encode", t0, t1, bytes=len(body))
+            headers = {TRACE_HEADER: tr.trace_id} if tr.enabled else None
+            resp = self._request("POST", "/v1/analyze", body, headers)
+            payload = resp.read()
+            tr.add("client.wire", t1, time.monotonic(),
+                   status=resp.status)
+            if resp.status == 429:
+                try:
+                    obj = json.loads(payload)
+                except ValueError:
+                    obj = {}
+                raise FrontendOverloaded(
+                    obj.get("error", "overloaded"),
+                    retry_after_s=_retry_after_s(obj, resp.headers))
+            if resp.status != 200:
+                raise FrontendError(payload.decode(errors="replace"),
+                                    resp.status)
+            return protocol.decode_result(json.loads(payload)["result"])
+        finally:
+            tr.finish()
 
     def analyze_batch(self, masks: Sequence[np.ndarray],
                       ids: Optional[Iterable[Any]] = None,
+                      trace_id: Optional[str] = None,
                       ) -> Iterator[BatchItem]:
         """Submit a batch; yield :class:`BatchItem` per mask **in the
         server's completion order**, as the lines arrive off the wire."""
@@ -194,23 +229,34 @@ class YCHGClient:
         if len(id_list) != len(masks):
             raise ValueError(
                 f"{len(masks)} masks but {len(id_list)} ids")
-        items = []
-        for rid, m in zip(id_list, masks):
-            d = dict(protocol.encode_array(np.asarray(m)))
-            d["id"] = rid
-            items.append(d)
-        body = json.dumps({"masks": items}).encode()
-        resp = self._request("POST", "/v1/analyze_batch", body)
-        if resp.status != 200:
-            payload = resp.read()
-            raise FrontendError(payload.decode(errors="replace"), resp.status)
-        # http.client decodes the chunked framing; readline() returns one
-        # NDJSON line as soon as its chunk lands — that is the streaming
-        while True:
-            line = resp.readline()
-            if not line:
-                break
-            yield _decode_line(json.loads(line))
+        tr = maybe_trace(trace_id, process="client")
+        try:
+            t0 = time.monotonic()
+            items = []
+            for rid, m in zip(id_list, masks):
+                d = dict(protocol.encode_array(np.asarray(m)))
+                d["id"] = rid
+                items.append(d)
+            body = json.dumps({"masks": items}).encode()
+            t1 = time.monotonic()
+            tr.add("client.encode", t0, t1, bytes=len(body),
+                   masks=len(items))
+            headers = {TRACE_HEADER: tr.trace_id} if tr.enabled else None
+            resp = self._request("POST", "/v1/analyze_batch", body, headers)
+            if resp.status != 200:
+                payload = resp.read()
+                raise FrontendError(payload.decode(errors="replace"),
+                                    resp.status)
+            # http.client decodes the chunked framing; readline() returns
+            # one NDJSON line as soon as its chunk lands — the streaming
+            while True:
+                line = resp.readline()
+                if not line:
+                    break
+                yield _decode_line(json.loads(line))
+            tr.add("client.wire", t1, time.monotonic(), masks=len(items))
+        finally:
+            tr.finish()
 
 
 class AsyncRPCClient:

@@ -39,6 +39,7 @@ synchronous callers (tests, the CLI smoke, benchmarks).
 from __future__ import annotations
 
 import asyncio
+import functools
 import json
 import math
 import threading
@@ -48,8 +49,15 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.engine import registry
 from repro.frontend import protocol
+from repro.obs import PromBuilder, maybe_trace, recorder
 from repro.service import ServiceOverloaded, YCHGService
+from repro.service.metrics import bucket_labels
+
+# request-trace propagation header: a client (or the fleet router) sends
+# its trace id here and this process's spans join that trace
+TRACE_HEADER = "x-ychg-trace"
 
 # executor width: how many clients may sit inside service.submit at once
 # (under "block" each parked worker IS one unit of propagated backpressure)
@@ -147,11 +155,15 @@ class FrontendServer:
 
     # ----------------------------------------------------- service bridging
 
-    async def _submit(self, mask) -> Any:
+    async def _submit(self, mask, trace=None) -> Any:
         """submit on the executor (a "block" park never blocks the loop),
-        then await the service future on the loop."""
+        then await the service future on the loop. ``trace`` joins the
+        service's stage spans to this request's trace (the frontend stays
+        the finisher)."""
         loop = asyncio.get_running_loop()
-        cf = await loop.run_in_executor(self._pool, self.service.submit, mask)
+        cf = await loop.run_in_executor(
+            self._pool,
+            functools.partial(self.service.submit, mask, trace=trace))
         return await asyncio.wrap_future(cf)
 
     def _overload_body(self, exc: Exception) -> Tuple[Dict[str, Any], float]:
@@ -190,7 +202,8 @@ class FrontendServer:
                 if n:
                     body = await reader.readexactly(n)
                 keep = headers.get("connection", "").lower() != "close"
-                keep = await self._route(method, target, body, writer, keep)
+                keep = await self._route(method, target, body, writer, keep,
+                                         headers)
                 if not keep:
                     break
         except (ConnectionError, asyncio.LimitOverrunError,
@@ -205,8 +218,10 @@ class FrontendServer:
                 pass
 
     async def _route(self, method: str, target: str, body: bytes,
-                     writer: asyncio.StreamWriter, keep: bool) -> bool:
+                     writer: asyncio.StreamWriter, keep: bool,
+                     headers: Optional[Dict[str, str]] = None) -> bool:
         """Dispatch one request; returns whether to keep the connection."""
+        trace_id = (headers or {}).get(TRACE_HEADER) or None
         try:
             if method == "GET" and target == "/healthz":
                 m = self.service.metrics()
@@ -216,10 +231,16 @@ class FrontendServer:
             elif method == "GET" and target == "/metrics":
                 await _respond(writer, 200, self._render_metrics().encode(),
                                "text/plain; version=0.0.4", keep)
+            elif method == "GET" and target == "/debug/traces":
+                # the flight recorder's ring as Chrome-trace JSON — load it
+                # straight into Perfetto/chrome://tracing
+                await _respond(writer, 200,
+                               recorder().to_chrome_json().encode(),
+                               "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
-                await self._http_analyze(body, writer, keep)
+                await self._http_analyze(body, writer, keep, trace_id)
             elif method == "POST" and target == "/v1/analyze_batch":
-                await self._http_analyze_batch(body, writer)
+                await self._http_analyze_batch(body, writer, trace_id)
                 keep = False   # chunked stream ends the exchange
             else:
                 await _respond_json(writer, 404, {
@@ -238,35 +259,51 @@ class FrontendServer:
         return keep
 
     async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
-                            keep: bool) -> None:
-        payload = json.loads(body)
-        mask = protocol.decode_array(payload["mask"])
+                            keep: bool,
+                            trace_id: Optional[str] = None) -> None:
+        tr = maybe_trace(trace_id, process="frontend")
         try:
-            result = await self._submit(mask)
-        except ServiceOverloaded as e:
-            out, retry = self._overload_body(e)
+            t0 = time.monotonic()
+            payload = json.loads(body)
+            mask = protocol.decode_array(payload["mask"])
+            tr.add("frontend.parse", t0, time.monotonic(),
+                   bytes=len(body))
+            try:
+                result = await self._submit(mask, tr)
+            except ServiceOverloaded as e:
+                out, retry = self._overload_body(e)
+                await _respond_json(
+                    writer, 429, out, keep,
+                    extra=[("Retry-After", str(max(1, math.ceil(retry))))])
+                return
             await _respond_json(
-                writer, 429, out, keep,
-                extra=[("Retry-After", str(max(1, math.ceil(retry))))])
-            return
-        await _respond_json(
-            writer, 200,
-            {"id": payload.get("id"), "result": protocol.encode_result(result)},
-            keep)
+                writer, 200,
+                {"id": payload.get("id"),
+                 "result": protocol.encode_result(result)},
+                keep)
+        finally:
+            # the frontend created this trace (possibly adopting the
+            # client's id), so the frontend finishes it — on every path
+            tr.finish()
 
     async def _http_analyze_batch(self, body: bytes,
-                                  writer: asyncio.StreamWriter) -> None:
+                                  writer: asyncio.StreamWriter,
+                                  trace_id: Optional[str] = None) -> None:
         """Chunked NDJSON, one line per mask in COMPLETION order."""
+        tr = maybe_trace(trace_id, process="frontend")
+        t0 = time.monotonic()
         payload = json.loads(body)
         items = payload["masks"]
         if not isinstance(items, list):
             raise protocol.ProtocolError("'masks' must be a list")
+        tr.add("frontend.parse", t0, time.monotonic(), bytes=len(body),
+               masks=len(items))
 
         async def run_one(i: int, item: Dict[str, Any]) -> Dict[str, Any]:
             rid = item.get("id", i)
             try:
                 mask = protocol.decode_array(item)
-                result = await self._submit(mask)
+                result = await self._submit(mask, tr)
             except ServiceOverloaded as e:
                 out, _ = self._overload_body(e)
                 out["id"] = rid
@@ -291,57 +328,81 @@ class FrontendServer:
         finally:
             for t in tasks:
                 t.cancel()
+            tr.finish()
 
     def _render_metrics(self) -> str:
         """ServiceMetrics in Prometheus text exposition format."""
         m = self.service.metrics()
         self._drain.observe(m.completed)
-        lines = [
-            "# HELP ychg_* yCHG ROI service metrics "
-            "(see repro.service.metrics.ServiceMetrics)",
-        ]
-
-        def counter(name, value):
-            lines.append(f"# TYPE {name} counter")
-            lines.append(f"{name} {value}")
-
-        def gauge(name, value, labels=""):
-            lines.append(f"# TYPE {name} gauge")
-            lines.append(f"{name}{labels} {value}")
-
-        counter("ychg_submitted_total", m.submitted)
-        counter("ychg_completed_total", m.completed)
-        counter("ychg_completed_from_cache_total", m.completed_from_cache)
-        counter("ychg_cache_hits_total", m.cache_hits)
-        counter("ychg_cache_misses_total", m.cache_misses)
-        counter("ychg_coalesced_total", m.coalesced)
-        counter("ychg_batches_total", m.batches)
-        counter("ychg_shed_total", m.shed)
-        counter("ychg_blocked_total", m.blocked)
-        counter("ychg_cache_peer_hits_total", m.peer_hits)
-        counter("ychg_cache_peer_misses_total", m.peer_misses)
-        lines.append("# TYPE ychg_shed_bucket_total counter")
+        b = PromBuilder()
+        b.counter("ychg_submitted_total", m.submitted,
+                  "requests accepted by submit()")
+        b.counter("ychg_completed_total", m.completed,
+                  "futures fulfilled (cache hits + computed)")
+        b.counter("ychg_completed_from_cache_total", m.completed_from_cache,
+                  "completions served straight from the result cache")
+        b.counter("ychg_cache_hits_total", m.cache_hits,
+                  "result-cache lookups that hit")
+        b.counter("ychg_cache_misses_total", m.cache_misses,
+                  "result-cache lookups that missed")
+        b.counter("ychg_coalesced_total", m.coalesced,
+                  "duplicate in-flight requests joined to a leader")
+        b.counter("ychg_batches_total", m.batches,
+                  "bucket stacks dispatched to the engine")
+        b.counter("ychg_shed_total", m.shed,
+                  "submits rejected with ServiceOverloaded")
+        b.counter("ychg_blocked_total", m.blocked,
+                  "submits that waited at the admission gate")
+        b.counter("ychg_cache_peer_hits_total", m.peer_hits,
+                  "local misses served by a sibling's cache")
+        b.counter("ychg_cache_peer_misses_total", m.peer_misses,
+                  "outbound peer probes no sibling could answer")
+        b.header("ychg_shed_bucket_total", "counter",
+                 "sheds attributed to the rejected request's bucket")
         for bucket, count in m.shed_by_bucket:
-            side, dtype = bucket
-            lines.append(
-                f'ychg_shed_bucket_total{{side="{side}",dtype="{dtype}"}} '
-                f"{count}")
-        gauge("ychg_queue_depth", m.queue_depth)
-        gauge("ychg_hit_rate", m.hit_rate)
-        gauge("ychg_p50_latency_ms", m.p50_latency_ms)
-        gauge("ychg_p95_latency_ms", m.p95_latency_ms)
-        gauge("ychg_mpx_per_s", m.mpx_per_s)
-        gauge("ychg_pad_fraction", m.pad_fraction)
-        gauge("ychg_compiled_shapes", m.n_compiled_shapes)
-        gauge("ychg_drain_rate_rps", round(self._drain.rate(), 3))
-        gauge("ychg_backend_info", 1, f'{{backend="{m.backend}"}}')
+            b.sample("ychg_shed_bucket_total", bucket_labels(bucket), count)
+        b.gauge("ychg_queue_depth", m.queue_depth,
+                "requests waiting + pending-in-bucket")
+        b.gauge("ychg_hit_rate", m.hit_rate, "cache hit rate")
+        b.gauge("ychg_p50_latency_ms", m.p50_latency_ms,
+                "median request latency from the histogram, compute only")
+        b.gauge("ychg_p95_latency_ms", m.p95_latency_ms,
+                "p95 request latency from the histogram, compute only")
+        b.gauge("ychg_mpx_per_s", m.mpx_per_s,
+                "real request pixels served per active second")
+        b.gauge("ychg_pad_fraction", m.pad_fraction,
+                "dispatched pixels that were padding")
+        b.gauge("ychg_compiled_shapes", m.n_compiled_shapes,
+                "distinct dispatched batch shapes")
+        b.gauge("ychg_drain_rate_rps", round(self._drain.rate(), 3),
+                "observed completion rate feeding Retry-After")
+        b.gauge("ychg_backend_info", 1,
+                "resolved engine backend as a label",
+                labels=(("backend", m.backend),))
         # scene/bulk workload progress (repro.scene), attached via
         # service.attach_scene_progress(); all zero when none is running
-        gauge("ychg_scene_tiles_done", m.scene_tiles_done)
-        gauge("ychg_scene_tiles_total", m.scene_tiles_total)
-        counter("ychg_scene_resumes_total", m.scene_resumes)
-        gauge("ychg_scene_stitch_seconds", round(m.scene_stitch_time_s, 6))
-        return "\n".join(lines) + "\n"
+        b.gauge("ychg_scene_tiles_done", m.scene_tiles_done,
+                "scene tiles stitched so far")
+        b.gauge("ychg_scene_tiles_total", m.scene_tiles_total,
+                "scene tiles expected")
+        b.counter("ychg_scene_resumes_total", m.scene_resumes,
+                  "checkpoint restores across the scene job")
+        b.gauge("ychg_scene_stitch_seconds", round(m.scene_stitch_time_s, 6),
+                "host-side seam/stitch time accumulated")
+        # fixed-boundary histograms: end-to-end latency per request bucket,
+        # per-stage timing, and the engine's synchronous dispatch cost —
+        # the boundaries are module constants, so a fleet rollup may sum
+        # these series across workers exactly
+        b.histogram("ychg_request_latency_seconds", m.latency_hists,
+                    "submit -> result ready, compute completions only")
+        b.histogram("ychg_stage_seconds", m.stage_hists,
+                    "per-stage request timing (docs/observability.md)")
+        b.histogram(
+            "ychg_engine_dispatch_seconds",
+            [((("backend", name),), snap) for name, snap in
+             sorted(registry.dispatch_seconds().items())],
+            "synchronous engine dispatch cost per backend")
+        return b.render()
 
     # -------------------------------------------------------------- RPC side
 
@@ -397,9 +458,15 @@ class FrontendServer:
 
         async def run_analyze(frame: Dict[str, Any]) -> None:
             rid = frame.get("id")
+            # the RPC frame's "trace" field is the fleet's propagation
+            # seam: a router puts its trace id here and this worker's
+            # spans join the router's trace
+            tr = maybe_trace(frame.get("trace") or None, process="worker")
             try:
+                t0 = time.monotonic()
                 mask = protocol.decode_array(frame["mask"])
-                result = await self._submit(mask)
+                tr.add("frontend.parse", t0, time.monotonic())
+                result = await self._submit(mask, tr)
             except ServiceOverloaded as e:
                 out, _ = self._overload_body(e)
                 out["id"] = rid
@@ -411,6 +478,8 @@ class FrontendServer:
             except Exception as e:
                 await send({"id": rid, "error": str(e), "status": 500})
                 return
+            finally:
+                tr.finish()
             await send({"id": rid,
                         "result": protocol.encode_result(result)})
 

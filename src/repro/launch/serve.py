@@ -33,6 +33,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.archs import smoke_config
 from repro.configs import get_config
 from repro.models import count_params, init_params
@@ -170,6 +171,9 @@ def serve_listen(args):
                 threading.Event().wait()
             except KeyboardInterrupt:
                 print("shutting down", flush=True)
+                path = obs.auto_dump("serve-shutdown")
+                if path:
+                    print(f"flight recorder dumped to {path}", flush=True)
 
 
 def serve_connect(args):
@@ -203,7 +207,13 @@ def frontend_smoke(args):
 
       1. a streamed client batch is BIT-IDENTICAL (values, dtypes, shapes)
          to in-process ``YCHGService.submit`` on the same masks;
-      2. at a full admission queue the wire answer is HTTP 429 with a
+      2. one traced request leaves a single flight-recorder trace whose
+         spans cover client -> frontend -> scheduler -> engine in order
+         (skipped under ``YCHG_TRACE=0``);
+      3. every ``/metrics`` series parses as Prometheus text, histogram
+         ``_sum``/``_count`` agree with their buckets, and the latency
+         histogram's total count equals completed-minus-cache-served;
+      4. at a full admission queue the wire answer is HTTP 429 with a
          Retry-After, and the service's shed counter moves (visible in
          /metrics down to the per-bucket counter).
 
@@ -212,6 +222,7 @@ def frontend_smoke(args):
     from repro.data import modis
     from repro.engine import YCHGEngine
     from repro.frontend import FrontendOverloaded, ServerThread, YCHGClient
+    from repro.obs import base_family, parse_prom_text
     from repro.service import YCHGService
 
     masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
@@ -235,6 +246,79 @@ def frontend_smoke(args):
                         f"not bit-identical over the wire")
         print(f"frontend smoke: {len(masks)} masks round-tripped over "
               f"loopback HTTP bit-identical to in-process submit")
+
+        # trace leg: one fresh mask end to end, then one trace id in the
+        # flight recorder must cover every stage of the request
+        if obs.tracing_enabled():
+            tid = obs.new_trace_id()
+            client.analyze(modis.snowfield(args.res, seed=4242),
+                           trace_id=tid)
+            events = [e for e in client.debug_traces().get("traceEvents", [])
+                      if e.get("args", {}).get("trace_id") == tid]
+            names = {e["name"] for e in events}
+            needed = {"client.encode", "client.wire", "frontend.parse",
+                      "cache.probe", "scheduler.admission",
+                      "scheduler.queue_wait", "scheduler.flush",
+                      "engine.compute", "engine.crop"}
+            if needed - names:
+                raise SystemExit(f"frontend smoke [trace]: spans missing "
+                                 f"from the flight recorder: "
+                                 f"{sorted(needed - names)}")
+            ts = {e["name"]: e["ts"] for e in events}
+            chain = ["client.encode", "frontend.parse",
+                     "scheduler.admission", "engine.compute", "engine.crop"]
+            for a, b in zip(chain, chain[1:]):
+                if ts[b] < ts[a]:   # same process, same clock: strict
+                    raise SystemExit(f"frontend smoke [trace]: span {b!r} "
+                                     f"starts before {a!r}")
+            print("frontend smoke: one trace covers client -> frontend -> "
+                  "scheduler -> engine with ordered spans", flush=True)
+
+        # metrics leg: the whole page must parse; histograms must be
+        # internally consistent and tie out against the request counters
+        page = parse_prom_text(client.metrics_text())
+        lat_count = 0.0
+        for fam in sorted(n for n, t in page.types.items()
+                          if t == "histogram"):
+            series = {}
+            for s in page.samples:
+                if base_family(s.name) != fam:
+                    continue
+                key = tuple(p for p in s.labels if p[0] != "le")
+                d = series.setdefault(key, {"b": [], "sum": None,
+                                            "count": None})
+                if s.name.endswith("_bucket"):
+                    d["b"].append(s.value)
+                elif s.name.endswith("_sum"):
+                    d["sum"] = s.value
+                elif s.name.endswith("_count"):
+                    d["count"] = s.value
+            for key, d in series.items():
+                if d["sum"] is None or d["count"] is None or not d["b"]:
+                    raise SystemExit(
+                        f"frontend smoke [metrics]: histogram {fam} series "
+                        f"{dict(key)} is missing _sum/_count/buckets")
+                if d["b"] != sorted(d["b"]) or d["b"][-1] != d["count"]:
+                    raise SystemExit(
+                        f"frontend smoke [metrics]: histogram {fam} series "
+                        f"{dict(key)} buckets disagree with _count")
+                if fam == "ychg_request_latency_seconds":
+                    lat_count += d["count"]
+
+        def scalar(name):
+            vals = [s.value for s in page.samples
+                    if s.name == name and not s.labels]
+            return vals[0] if vals else 0.0
+
+        want_count = (scalar("ychg_completed_total")
+                      - scalar("ychg_completed_from_cache_total"))
+        if lat_count != want_count:
+            raise SystemExit(
+                f"frontend smoke [metrics]: latency histogram count "
+                f"{lat_count} != completed-minus-cached {want_count}")
+        print(f"frontend smoke: /metrics parsed clean; latency histogram "
+              f"count {lat_count:.0f} ties out against the request "
+              f"counters", flush=True)
 
     # overload leg: ONE admission slot, held by an in-process submit parked
     # in a long delay window, so the wire request deterministically sheds
@@ -273,6 +357,8 @@ def _worker_args(args):
         wa += ["--bucket-queue-depth", str(args.bucket_queue_depth)]
     if args.compile_cache:
         wa += ["--compile-cache", args.compile_cache]
+    if args.trace_dump:
+        wa += ["--trace-dump", args.trace_dump]
     return wa
 
 
@@ -386,6 +472,53 @@ def fleet_smoke(args):
             print(f"fleet smoke: {len(masks)} masks through router over 2 "
                   f"workers bit-identical to in-process submit", flush=True)
 
+            # trace leg: one traced batch, then merge the client-local,
+            # router, and per-worker flight recorders and assert a single
+            # trace id stitches spans across >= 2 processes in order
+            if obs.tracing_enabled():
+                tid = obs.new_trace_id()
+                fresh = [modis.snowfield(args.res, seed=7000 + s)
+                         for s in range(2)]
+                for it in client.analyze_batch(fresh, trace_id=tid):
+                    if not it.ok:
+                        raise SystemExit(f"fleet smoke [trace]: traced "
+                                         f"batch failed: {it.error}")
+                events = list(obs.recorder().chrome_events())
+                events += client.debug_traces().get("traceEvents", [])
+                for l in links:
+                    with YCHGClient(l.host, l.http_port) as wc:
+                        events += wc.debug_traces().get("traceEvents", [])
+                events = [e for e in events
+                          if e.get("args", {}).get("trace_id") == tid]
+                names = {e["name"] for e in events}
+                needed = {"client.encode", "router.admission",
+                          "router.forward", "frontend.parse",
+                          "scheduler.queue_wait", "engine.compute"}
+                if needed - names:
+                    raise SystemExit(f"fleet smoke [trace]: spans missing "
+                                     f"across the fleet recorders: "
+                                     f"{sorted(needed - names)}")
+                pids = {e["pid"] for e in events}
+                if len(pids) < 2:
+                    raise SystemExit(
+                        f"fleet smoke [trace]: trace {tid} never crossed a "
+                        f"process boundary (pids {sorted(pids)})")
+                ts = {}
+                for e in events:   # earliest start per span name
+                    ts[e["name"]] = min(ts.get(e["name"], e["ts"]), e["ts"])
+                slack_us = 100_000   # cross-process wall alignment slack
+                chain = ["client.encode", "router.admission",
+                         "frontend.parse", "engine.compute"]
+                for a, b in zip(chain, chain[1:]):
+                    if ts[b] + slack_us < ts[a]:
+                        raise SystemExit(f"fleet smoke [trace]: span {b!r} "
+                                         f"starts before {a!r}")
+                import json as _json
+                _json.loads(_json.dumps({"traceEvents": events}))
+                print(f"fleet smoke: trace {tid} stitches "
+                      f"{len(events)} spans across {len(pids)} processes "
+                      f"(client -> router -> worker)", flush=True)
+
             ring = HashRing([l.name for l in links],
                             router.config.replicas)
             owner = ring.node_for(routing_key(masks[0]))
@@ -471,6 +604,9 @@ def scene_run(args):
           f"stitch {snap.stitch_time_s * 1e3:.1f}ms", flush=True)
     for path in report.written:
         print(f"  wrote {path}", flush=True)
+    dump = obs.auto_dump("scene-run-end")
+    if dump:
+        print(f"flight recorder dumped to {dump}", flush=True)
     if not report.completed:
         print("interrupted — rerun the same command to resume from the "
               "checkpoint", flush=True)
@@ -672,6 +808,10 @@ def main():
                          "(restarted workers / resumed bulk jobs reload "
                          "their compiles from disk); plumbed to --fleet "
                          "workers")
+    ap.add_argument("--trace-dump", default=None, metavar="PATH",
+                    help="dump the flight recorder (recent request traces) "
+                         "as Chrome-trace JSON to PATH on shutdown; "
+                         "plumbed to --fleet workers (each appends .<pid>)")
     ap.add_argument("--scene-smoke", action="store_true",
                     help="ychg only: scene subsystem end-to-end assert "
                          "(stitch bit-identity, kill->resume "
@@ -699,6 +839,8 @@ def main():
     scn.add_argument("--max-stacks", type=int, default=None,
                      help="stop (with a checkpoint) after N stacks")
     args = ap.parse_args()
+    if args.trace_dump:
+        obs.configure(dump_path=args.trace_dump)
     if args.compile_cache:
         from repro.launch.compilecache import enable_compile_cache
 

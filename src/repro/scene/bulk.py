@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.engine import YCHGEngine
+from repro.obs import NULL_TRACE, maybe_trace
 from repro.scene.granule import GranuleReader, GranuleSpec
 from repro.scene.result import write_scene_result
 from repro.scene.runner import (
@@ -170,9 +171,17 @@ class BulkJob:
 
         stacks_done = tiles_done = granules_done = 0
         written: List[str] = []
+        tr = NULL_TRACE  # current granule's trace (one trace per granule)
+
+        def save_ckpt(gi: int, st: SceneState) -> None:
+            c0 = time.monotonic()
+            self._save(gi, st, resumes)
+            tr.add("scene.checkpoint", c0, time.monotonic(),
+                   granule=gi, tile=st.next_tile)
 
         def interrupted(gi: int, st: SceneState) -> BulkJobReport:
-            self._save(gi, st, resumes)
+            save_ckpt(gi, st)
+            tr.finish()
             return BulkJobReport(
                 status="interrupted", granules_done=granules_done,
                 tiles_done=tiles_done, stacks_done=stacks_done,
@@ -184,6 +193,7 @@ class BulkJob:
             reader = GranuleReader.open(spec, cfg.tile_h)
             if state is None:
                 state = SceneState.fresh(reader.width)
+            tr = maybe_trace(process="scene")
             since_ckpt = 0
             while state.next_tile < reader.n_tiles:
                 if should_stop is not None and should_stop():
@@ -191,19 +201,32 @@ class BulkJob:
                 if max_stacks is not None and stacks_done >= max_stacks:
                     return interrupted(gi, state)
                 n = min(cfg.stack_tiles, reader.n_tiles - state.next_tile)
+                r0 = time.monotonic()
                 stack = reader.read_stack(state.next_tile, n)
+                r1 = time.monotonic()
+                tr.add("scene.read", r0, r1, granule=spec.granule_id,
+                       tile=state.next_tile, tiles=n)
                 res = self.runner.engine.analyze_batch(stack)
-                self.runner.update(state, stack, np.asarray(res.runs))
+                runs = np.asarray(res.runs)
+                c1 = time.monotonic()
+                tr.add("scene.compute", r1, c1, granule=spec.granule_id,
+                       tiles=n)
+                self.runner.update(state, stack, runs)
+                tr.add("scene.stitch", c1, time.monotonic(),
+                       granule=spec.granule_id)
                 stacks_done += 1
                 tiles_done += n
                 since_ckpt += 1
                 if self.progress is not None:
                     self.progress.note_tiles(n)
                 if since_ckpt >= cfg.checkpoint_every:
-                    self._save(gi, state, resumes)
+                    save_ckpt(gi, state)
                     since_ckpt = 0
+            w0 = time.monotonic()
             result = self.runner.finalize(reader, state, self.progress)
             written.append(write_scene_result(self.output_path(spec), result))
+            tr.add("scene.write", w0, time.monotonic(),
+                   granule=spec.granule_id)
             granules_done += 1
             if self.progress is not None:
                 self.progress.note_granule_done()
@@ -212,9 +235,9 @@ class BulkJob:
             # but this skips the recompute)
             state = (SceneState.fresh(self.manifest[gi + 1].width)
                      if gi + 1 < len(self.manifest) else None)
-            self._save(gi + 1,
-                       state if state is not None else SceneState.fresh(1),
-                       resumes)
+            save_ckpt(gi + 1,
+                      state if state is not None else SceneState.fresh(1))
+            tr.finish()
         return BulkJobReport(
             status="completed", granules_done=granules_done,
             tiles_done=tiles_done, stacks_done=stacks_done, resumes=resumes,

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import ychg
 from repro.engine import YCHGEngine
+from repro.obs import maybe_trace
 from repro.scene.granule import GranuleReader
 from repro.scene.result import SceneResult
 
@@ -239,14 +240,20 @@ class SceneRunner:
 
     def analyze_scene(self, reader: GranuleReader, *,
                       progress: Optional[SceneProgress] = None,
-                      state: Optional[SceneState] = None) -> SceneResult:
+                      state: Optional[SceneState] = None,
+                      trace=None) -> SceneResult:
         """Stream the whole granule (from ``state`` if given) and stitch.
 
         Stacks flow through ``engine.analyze_stream``, so strip reading
         and host->device transfer of stack n+1 overlap the device compute
         of stack n — the service's double-buffering discipline applied to
-        the offline path.
+        the offline path. When tracing is on, each stack leaves
+        ``scene.read`` / ``scene.compute`` (stream wait, which overlaps
+        the *next* read by design) / ``scene.stitch`` spans plus one
+        ``scene.finalize`` span on the trace.
         """
+        tr = trace if trace is not None else maybe_trace(process="scene")
+        own = trace is None
         state = state if state is not None else SceneState.fresh(reader.width)
         pending: "collections.deque[np.ndarray]" = collections.deque()
 
@@ -254,16 +261,34 @@ class SceneRunner:
             t = state.next_tile
             while t < reader.n_tiles:
                 n = min(self.stack_tiles, reader.n_tiles - t)
+                r0 = time.monotonic()
                 s = reader.read_stack(t, n)
+                tr.add("scene.read", r0, time.monotonic(),
+                       granule=reader.granule_id, tile=t, tiles=n)
                 pending.append(s)
                 yield s
                 t += n
 
-        for res in self.engine.analyze_stream(stacks()):
-            stack = pending.popleft()
-            t0 = time.perf_counter()
-            self.update(state, stack, np.asarray(res.runs))
-            if progress is not None:
-                progress.note_stitch(time.perf_counter() - t0)
-                progress.note_tiles(stack.shape[0])
-        return self.finalize(reader, state, progress)
+        try:
+            t_wait = time.monotonic()
+            for res in self.engine.analyze_stream(stacks()):
+                t_got = time.monotonic()
+                stack = pending.popleft()
+                tr.add("scene.compute", t_wait, t_got,
+                       granule=reader.granule_id, tiles=stack.shape[0])
+                s0 = time.monotonic()
+                self.update(state, stack, np.asarray(res.runs))
+                s1 = time.monotonic()
+                tr.add("scene.stitch", s0, s1, granule=reader.granule_id)
+                if progress is not None:
+                    progress.note_stitch(s1 - s0)
+                    progress.note_tiles(stack.shape[0])
+                t_wait = time.monotonic()
+            f0 = time.monotonic()
+            result = self.finalize(reader, state, progress)
+            tr.add("scene.finalize", f0, time.monotonic(),
+                   granule=reader.granule_id)
+            return result
+        finally:
+            if own:
+                tr.finish()

@@ -3,13 +3,23 @@
 The recorder is written from two threads (submit side and the scheduler
 loop) under one lock; ``snapshot()`` is the only read surface and returns
 an immutable :class:`ServiceMetrics`, so callers never see half-updated
-counters. Latencies keep a bounded window (recent-traffic percentiles, not
-lifetime averages) and hold *compute* completions only — cache hits are
-counted in ``completed_from_cache`` but never push their ~0 ms samples
-into the window, so p50/p95 describe what a miss actually costs instead of
-averaging in the hit rate. Mpx/s is real request pixels served over the
-first-submit -> last-completion window, so idle time before traffic does
-not dilute it.
+counters.
+
+Latency is held in fixed-boundary log-spaced histograms (one per request
+bucket, see :mod:`repro.obs.histogram`) rather than a bounded deque: the
+histograms render as real Prometheus ``_bucket``/``_sum``/``_count``
+series, and because the boundaries are process-independent constants, a
+fleet router can roll worker pages up by plain summation. They hold
+*compute* completions only — cache hits are counted in
+``completed_from_cache`` but never observed, so p50/p95 describe what a
+miss actually costs instead of averaging in the hit rate. Per-stage
+timings (cache probe, admission wait, queue wait, flush assembly, device
+compute, crop) land in a parallel family of stage histograms.
+
+Mpx/s is real request pixels served over *active* time: each completion
+contributes the gap since the previous completion, capped at its own
+latency — so idle gaps between bursts no longer deflate throughput (two
+bursts separated by a sleep report the same rate as one burst).
 """
 
 from __future__ import annotations
@@ -17,10 +27,45 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import deque
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-import numpy as np
+from repro.obs.histogram import (
+    DEFAULT_LATENCY_BOUNDS,
+    Histogram,
+    HistogramSnapshot,
+    empty_snapshot,
+)
+
+LabelPairs = Tuple[Tuple[str, str], ...]
+HistSeries = Tuple[Tuple[LabelPairs, HistogramSnapshot], ...]
+
+# Stage taxonomy (docs/observability.md is the contract): every stage
+# histogram key must come from this set so dashboards and the fleet
+# rollup never meet a surprise label.
+STAGES = (
+    "cache_probe",   # content-key hash + local cache lookup
+    "peer_probe",    # sibling cache RPC on a local miss (peered only)
+    "admission",     # admission-gate wait (block policy backpressure)
+    "queue_wait",    # admitted -> batch assembly started
+    "flush",         # pad_stack + device transfer + dispatch issue
+    "compute",       # device execution (dispatch -> block_until_ready)
+    "crop",          # per-request result slicing off the padded batch
+)
+
+# Smallest latency credited to a completion when accounting active time:
+# guards div-by-zero on sub-clock-resolution cache-adjacent completions.
+_MIN_ACTIVE_S = 1e-3
+
+
+def bucket_labels(bucket: Any) -> LabelPairs:
+    """Service bucket key -> Prometheus label pairs. Buckets are
+    (side, dtype) tuples everywhere in the service; anything else gets a
+    single opaque ``bucket`` label so the renderer never crashes."""
+    if isinstance(bucket, tuple) and len(bucket) == 2:
+        return (("side", str(bucket[0])), ("dtype", str(bucket[1])))
+    if bucket is None:
+        return ()
+    return (("bucket", str(bucket)),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,27 +102,58 @@ class ServiceMetrics:
     scene_tiles_total: int = 0
     scene_resumes: int = 0          # checkpoint restores across the job
     scene_stitch_time_s: float = 0.0  # host-side seam/stitch accumulation
+    # end-to-end latency histograms, one series per request bucket
+    # (labels like (("side","64"),("dtype","uint8"))); the sum of every
+    # series' count equals completed - completed_from_cache
+    latency_hists: HistSeries = ()
+    # per-stage timing histograms, labels (("stage",...), + bucket labels)
+    stage_hists: HistSeries = ()
 
     @property
     def n_compiled_shapes(self) -> int:
         return len(self.compiled_shapes)
 
+    def latency_hist(self) -> HistogramSnapshot:
+        """All request buckets merged into one end-to-end histogram."""
+        merged = empty_snapshot(DEFAULT_LATENCY_BOUNDS)
+        for _labels, snap in self.latency_hists:
+            merged = merged.merge(snap)
+        return merged
+
 
 class MetricsRecorder:
     def __init__(self, latency_window: int = 4096):
+        # latency_window is accepted for API compatibility but unused:
+        # fixed-boundary histograms are unbounded-in-time by design (the
+        # windowing that made percentiles "recent" now belongs to the
+        # scrape interval of whatever reads /metrics)
+        del latency_window
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
         self.completed_from_cache = 0
         self.coalesced = 0
         self.batches = 0
-        self._latencies: "deque[float]" = deque(maxlen=latency_window)
+        self._latency_hists: Dict[Any, Histogram] = {}
+        self._stage_hists: Dict[Tuple[str, Any], Histogram] = {}
         self._shapes: set = set()
         self._real_px = 0
         self._dispatched_px = 0
         self._served_px = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
+        self._active_s = 0.0
+
+    def _note_active(self, latency_s: float, now: float) -> None:
+        """Credit active time for one completion: the gap since the last
+        completion, capped at this request's own latency (so a burst of
+        overlapping requests is not double-counted and an idle gap before
+        a burst contributes at most one request's latency)."""
+        credit = max(latency_s, _MIN_ACTIVE_S)
+        anchor = self._t_last if self._t_last is not None else self._t_first
+        if anchor is not None:
+            credit = min(credit, max(0.0, now - anchor))
+        self._active_s += credit
 
     def record_submit(self) -> None:
         with self._lock:
@@ -98,15 +174,20 @@ class MetricsRecorder:
             self.submitted -= n
             self.coalesced -= n
 
-    def record_cache_hit(self, pixels: int) -> None:
+    def record_cache_hit(self, pixels: int,
+                         now: Optional[float] = None) -> None:
         """A request served from the cache: counts toward completions and
-        served pixels, but stays OUT of the latency window — a flood of
-        ~0 ms hits would otherwise deflate p50/p95 for compute traffic."""
+        served pixels, but stays OUT of the latency histograms — a flood
+        of ~0 ms hits would otherwise deflate p50/p95 for compute
+        traffic. Contributes (at most) the minimum active-time quantum."""
+        if now is None:
+            now = time.monotonic()
         with self._lock:
             self.completed += 1
             self.completed_from_cache += 1
             self._served_px += pixels
-            self._t_last = time.monotonic()
+            self._note_active(0.0, now)
+            self._t_last = now
 
     def record_batch(self, shape: Tuple[int, int, int], real_px: int) -> None:
         with self._lock:
@@ -116,12 +197,35 @@ class MetricsRecorder:
             self._dispatched_px += shape[0] * shape[1] * shape[2]
 
     def record_complete(self, latency_s: float, pixels: int,
-                        n_requests: int = 1) -> None:
+                        n_requests: int = 1, bucket: Any = None,
+                        now: Optional[float] = None) -> None:
+        """A computed batch's requests finished. The latency histogram is
+        observed once per request (not per batch) so the histogram count
+        stays equal to ``completed - completed_from_cache``."""
+        if now is None:
+            now = time.monotonic()
         with self._lock:
             self.completed += n_requests
             self._served_px += pixels * n_requests
-            self._latencies.append(latency_s)
-            self._t_last = time.monotonic()
+            hist = self._latency_hists.get(bucket)
+            if hist is None:
+                hist = self._latency_hists[bucket] = Histogram(
+                    DEFAULT_LATENCY_BOUNDS)
+            for _ in range(n_requests):
+                hist.observe(latency_s)
+            self._note_active(latency_s, now)
+            self._t_last = now
+
+    def observe_stage(self, stage: str, bucket: Any,
+                      seconds: float) -> None:
+        """One stage timing sample (see STAGES for the taxonomy)."""
+        key = (stage, bucket)
+        with self._lock:
+            hist = self._stage_hists.get(key)
+            if hist is None:
+                hist = self._stage_hists[key] = Histogram(
+                    DEFAULT_LATENCY_BOUNDS)
+        hist.observe(max(0.0, seconds))
 
     def snapshot(self, *, queue_depth: int, cache_hits: int,
                  cache_misses: int, backend: str, shed: int = 0,
@@ -132,12 +236,18 @@ class MetricsRecorder:
                  scene_resumes: int = 0, scene_stitch_time_s: float = 0.0,
                  ) -> ServiceMetrics:
         with self._lock:
-            lat = np.asarray(self._latencies, np.float64) * 1e3
-            span = (
-                self._t_last - self._t_first
-                if self._t_first is not None and self._t_last is not None
-                else 0.0
-            )
+            latency_hists = tuple(
+                (bucket_labels(bucket), hist.snapshot())
+                for bucket, hist in sorted(
+                    self._latency_hists.items(), key=lambda kv: str(kv[0])))
+            stage_hists = tuple(
+                ((("stage", stage),) + bucket_labels(bucket),
+                 hist.snapshot())
+                for (stage, bucket), hist in sorted(
+                    self._stage_hists.items(), key=lambda kv: str(kv[0])))
+            merged = empty_snapshot(DEFAULT_LATENCY_BOUNDS)
+            for _labels, snap in latency_hists:
+                merged = merged.merge(snap)
             total = cache_hits + cache_misses
             return ServiceMetrics(
                 submitted=self.submitted,
@@ -152,9 +262,12 @@ class MetricsRecorder:
                 blocked=blocked,
                 compiled_shapes=tuple(sorted(self._shapes)),
                 hit_rate=cache_hits / total if total else 0.0,
-                p50_latency_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
-                p95_latency_ms=float(np.percentile(lat, 95)) if lat.size else 0.0,
-                mpx_per_s=self._served_px / span / 1e6 if span > 0 else 0.0,
+                p50_latency_ms=merged.quantile(0.50) * 1e3,
+                p95_latency_ms=merged.quantile(0.95) * 1e3,
+                mpx_per_s=(
+                    self._served_px / self._active_s / 1e6
+                    if self._active_s > 0 else 0.0
+                ),
                 pad_fraction=(
                     1.0 - self._real_px / self._dispatched_px
                     if self._dispatched_px else 0.0
@@ -167,4 +280,6 @@ class MetricsRecorder:
                 scene_tiles_total=scene_tiles_total,
                 scene_resumes=scene_resumes,
                 scene_stitch_time_s=scene_stitch_time_s,
+                latency_hists=latency_hists,
+                stage_hists=stage_hists,
             )

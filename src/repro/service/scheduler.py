@@ -65,6 +65,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
+from repro.obs import auto_dump
+
 
 class ServiceOverloaded(RuntimeError):
     """Submit rejected: the queue is at ``max_queue_depth`` under
@@ -340,6 +342,16 @@ class Scheduler:
     # --------------------------------------------------------------- the loop
 
     def _loop(self) -> None:
+        # an unhandled escape from the dispatch loop kills the thread and
+        # hangs every outstanding future — the least this process can do
+        # on the way down is leave the flight recorder's evidence behind
+        try:
+            self._run_loop()
+        except BaseException:
+            auto_dump("scheduler-loop-error")
+            raise
+
+    def _run_loop(self) -> None:
         while True:
             with self._cond:
                 oldest = (min(rs[0].t_submit for rs in self._pending.values())

@@ -46,6 +46,7 @@ import numpy as np
 import jax
 
 from repro.engine import YCHGEngine, YCHGResult
+from repro.obs import NULL_TRACE, maybe_trace
 from repro.service.batching import (
     Bucket,
     crop_result,
@@ -158,6 +159,16 @@ class _Request:
     bucket: Bucket
     t_submit: float
     futures: List[Future]     # leader's future + any coalesced duplicates
+    trace: Any = NULL_TRACE   # request trace the stage spans land in
+    own_trace: bool = False   # True: the service created it and finishes it
+    # stage-edge timestamps (monotonic). t_gate is stamped by the submitter
+    # just before the admission gate; t_admitted just after submit returns
+    # (the scheduler thread may dispatch before that write lands, so
+    # consumers fall back t_admitted -> t_gate -> t_submit); t_dispatch is
+    # stamped by the scheduler thread when the batch is issued.
+    t_gate: float = 0.0
+    t_admitted: float = 0.0
+    t_dispatch: float = 0.0
 
 
 class YCHGService:
@@ -195,22 +206,35 @@ class YCHGService:
 
     # ------------------------------------------------------------ requests
 
-    def submit(self, mask: Any) -> "Future[YCHGResult]":
+    def submit(self, mask: Any, *,
+               trace: Optional[Any] = None) -> "Future[YCHGResult]":
         """Enqueue one (H, W) mask; the future resolves to a ready result.
 
         Raises :class:`ServiceOverloaded` when the queue is at
         ``max_queue_depth`` under ``overload_policy="shed"``; blocks here
         (not on device work) under ``"block"``.
+
+        ``trace`` joins this request's stage spans to an existing
+        :class:`repro.obs.Trace` (the frontend passes the one it opened
+        from the ``X-YCHG-Trace`` header, and stays responsible for
+        finishing it). Without one, the service opens its own trace and
+        finishes it when the request resolves.
         """
         if self._closed:
             raise RuntimeError("service is closed")
+        tr = trace if trace is not None else maybe_trace()
+        own = trace is None
+        t_probe0 = time.monotonic()
         a = np.ascontiguousarray(np.asarray(mask))
         if a.ndim != 2:
             raise ValueError(f"submit expects an (H, W) mask, got {a.shape}")
         side = pick_bucket_side(a.shape, self.config.bucket_sides)
+        bucket = (side, str(a.dtype))
         key = make_key(a, self.engine.resolve_backend(), self.engine.config,
                        self.engine.mesh)
         fut: "Future[YCHGResult]" = Future()
+        cached = None
+        outcome = "miss"
         # cache check, coalesce, and leader registration are ONE critical
         # section, shared with the completion side's cache.put + leader
         # retirement: a duplicate always sees the leader or the cached
@@ -222,22 +246,49 @@ class YCHGService:
             if cached is not None:
                 self._recorder.record_submit()
                 self._recorder.record_cache_hit(a.size)
-                fut.set_result(cached)
-                return fut
-            leader = self._leaders.get(key)
-            if leader is not None:
-                leader.futures.append(fut)
-                self._recorder.record_submit()
-                self._recorder.record_coalesced()
-                return fut
-            req = _Request(mask=a, key=key, bucket=(side, str(a.dtype)),
-                           t_submit=time.monotonic(), futures=[fut])
-            self._leaders[key] = req
+                outcome = "hit"
+            else:
+                leader = self._leaders.get(key)
+                if leader is not None:
+                    leader.futures.append(fut)
+                    self._recorder.record_submit()
+                    self._recorder.record_coalesced()
+                    outcome = "coalesced"
+                else:
+                    req = _Request(mask=a, key=key, bucket=bucket,
+                                   t_submit=time.monotonic(), futures=[fut],
+                                   trace=tr, own_trace=own)
+                    self._leaders[key] = req
+        t_probe1 = time.monotonic()
+        self._recorder.observe_stage("cache_probe", bucket,
+                                     t_probe1 - t_probe0)
+        tr.add("cache.probe", t_probe0, t_probe1, outcome=outcome)
+        if outcome == "hit":
+            fut.set_result(cached)
+            if own:
+                tr.finish()
+            return fut
+        if outcome == "coalesced":
+            # the rider's spans end here; the leader's trace carries the
+            # compute stages for the shared result
+            if own:
+                tr.finish()
+            return fut
         # peer probe OUTSIDE the lock (it is a blocking network call in a
         # fleet): the leader is already registered, so duplicates arriving
         # mid-probe coalesce onto it and share the peered result below.
         # Base caches answer None and cost nothing.
+        t_peer0 = time.monotonic()
         peered = self.cache.peer_probe(key)
+        t_peer1 = time.monotonic()
+        if hasattr(self.cache, "set_peers"):
+            # only peer-capable caches get a peer_probe stage sample: the
+            # base ResultCache answers None in ~0 time and a flood of those
+            # samples would bury the real probe distribution
+            self._recorder.observe_stage("peer_probe", bucket,
+                                         t_peer1 - t_peer0)
+            tr.add("cache.peer_probe", t_peer0, t_peer1,
+                   outcome="hit" if peered is not None else "miss")
         if peered is not None:
             with self._lock:
                 self.cache.put(key, peered)
@@ -250,11 +301,14 @@ class YCHGService:
             for f in req.futures:
                 self._recorder.record_cache_hit(a.size)
                 _fulfil(f, peered)
+            if own:
+                tr.finish()
             return fut
         # admission happens OUTSIDE the service lock: a blocked submitter
         # must not hold the lock the completion path needs to free a slot.
         # The leader is registered first so duplicates coalesce (for free)
         # even while their leader waits at the admission gate.
+        req.t_gate = time.monotonic()
         try:
             self._scheduler.submit(req)
         except BaseException as e:
@@ -270,7 +324,15 @@ class YCHGService:
             for f in req.futures:
                 if not f.done() and f.set_running_or_notify_cancel():
                     f.set_exception(e)
+            tr.add("scheduler.admission", req.t_gate, time.monotonic(),
+                   outcome=type(e).__name__)
+            if own:
+                tr.finish()
             raise
+        req.t_admitted = time.monotonic()
+        self._recorder.observe_stage("admission", bucket,
+                                     req.t_admitted - req.t_gate)
+        tr.add("scheduler.admission", req.t_gate, req.t_admitted)
         # counted only once actually admitted: a shed submit is not
         # "accepted", so submitted - completed tracks real outstanding work
         self._recorder.record_submit()
@@ -331,13 +393,29 @@ class YCHGService:
 
     def _dispatch(self, bucket: Bucket, requests: List[_Request],
                   batch_size: int) -> YCHGResult:
+        t0 = time.monotonic()
         side, dtype = bucket
+        for r in requests:
+            # queue wait: admitted -> this flush started assembling. The
+            # submitter's t_admitted write may not have landed yet (the
+            # scheduler can flush before submit() returns), so fall back
+            # through the race-free stamps
+            start = r.t_admitted or r.t_gate or r.t_submit
+            self._recorder.observe_stage("queue_wait", bucket,
+                                         max(0.0, t0 - start))
+            r.trace.add("scheduler.queue_wait", start, t0)
         stack = pad_stack([r.mask for r in requests], side, batch_size,
                           np.dtype(dtype))
         # the host->device transfer of THIS bucket starts here, while the
         # previous bucket's computation is still in flight
         x = jax.device_put(stack)
         result = self.engine.analyze_batch(x)  # async dispatch
+        t1 = time.monotonic()
+        self._recorder.observe_stage("flush", bucket, t1 - t0)
+        for r in requests:
+            r.t_dispatch = t1
+            r.trace.add("scheduler.flush", t0, t1,
+                        batch=batch_size, occupancy=len(requests))
         self._recorder.record_batch(
             stack.shape, sum(r.mask.size for r in requests))
         return result
@@ -350,7 +428,12 @@ class YCHGService:
         try:
             result.block_until_ready()
             now = time.monotonic()
+            if requests:
+                t_disp = requests[0].t_dispatch or now
+                self._recorder.observe_stage(
+                    "compute", requests[0].bucket, max(0.0, now - t_disp))
             for row, req in enumerate(requests):
+                tc0 = time.monotonic()
                 out = crop_result(result, row, req.mask.shape[1])
                 # atomic with submit's cache-check/coalesce: insert before
                 # retiring the leader, so a duplicate in this instant hits
@@ -358,20 +441,38 @@ class YCHGService:
                 with self._lock:
                     self.cache.put(req.key, out)
                     self._leaders.pop(req.key, None)
+                tc1 = time.monotonic()
+                self._recorder.observe_stage("crop", req.bucket, tc1 - tc0)
                 self._recorder.record_complete(
-                    now - req.t_submit, req.mask.size, len(req.futures))
+                    now - req.t_submit, req.mask.size, len(req.futures),
+                    bucket=req.bucket)
+                # spans go on BEFORE the futures resolve: a waiter that
+                # owns this trace finishes it the moment its future fires
+                tr = req.trace
+                tr.add("engine.compute", req.t_dispatch or now, now,
+                       rows=len(requests))
+                tr.add("engine.crop", tc0, tc1, row=row)
                 for fut in req.futures:
                     _fulfil(fut, out)
+                if req.own_trace:
+                    tr.finish()
         except Exception as e:
             self._fail(requests, e)
 
     def _fail(self, requests: List[_Request], exc: Exception) -> None:
+        now = time.monotonic()
         for req in requests:
             with self._lock:
                 self._leaders.pop(req.key, None)
+            # span before the futures fire, same as _complete: a waiter
+            # that owns this trace finishes it as soon as it unblocks
+            req.trace.add("service.fail", now, now,
+                          error=type(exc).__name__)
             for fut in req.futures:
                 if not fut.done() and fut.set_running_or_notify_cancel():
                     fut.set_exception(exc)
+            if req.own_trace:
+                req.trace.finish()
 
 
 def _fulfil(fut: Future, value: Any) -> None:

@@ -375,3 +375,97 @@ def test_router_admission_sheds_429_when_workers_are_saturated():
         for e in engines:
             e.resume.set()
         _close_fleet(closers)
+
+
+def test_router_429_retry_after_reflects_measured_drain_rate():
+    """The 429 hint comes from the router's drain-rate estimator, not the
+    old hardcoded 1.0 s: seed the estimator white-box with a known rate
+    (10 completions/s) and the Retry-After must be (backlog + 1) / 10 =
+    0.1 s — the parked holder is in flight at the worker, not queued, so
+    backlog is 0 at shed time."""
+    engines = [_GatedEngine(), _GatedEngine()]
+    links, closers = _two_worker_fleet(engines=engines)
+    holder_fut = {}
+    try:
+        router = FleetRouter(links, RouterConfig(
+            bucket_sides=(32,), max_batch=4, max_queue_depth=1,
+            overload_policy="shed"))
+        with RouterThread(router) as rt, \
+                YCHGClient("127.0.0.1", rt.port) as client:
+            holder_mask, shed_mask = (_mask((28, 28), seed=62),
+                                      _mask((28, 28), seed=63))
+            t = threading.Thread(
+                target=lambda: holder_fut.update(
+                    out=client.analyze(holder_mask)),
+                daemon=True)
+            t.start()
+            deadline = time.monotonic() + TIMEOUT
+            while not any(e.entered.is_set() for e in engines):
+                assert time.monotonic() < deadline, "holder never arrived"
+                time.sleep(0.005)
+            # seed: 10 completions over the last second; the huge interval
+            # pins the samples against the loop's own observe() calls
+            now = time.monotonic()
+            router._drain._interval = 1e9
+            router._drain._samples = [(now - 1.0, 0), (now, 10)]
+            with YCHGClient("127.0.0.1", rt.port) as shed_client:
+                with pytest.raises(FrontendOverloaded) as exc_info:
+                    shed_client.analyze(shed_mask)
+            assert exc_info.value.status == 429
+            assert exc_info.value.retry_after_s == pytest.approx(
+                0.1, abs=0.001)
+            for e in engines:
+                e.resume.set()
+            t.join(TIMEOUT)
+            assert "runs" in holder_fut.get("out", {})
+    finally:
+        for e in engines:
+            e.resume.set()
+        _close_fleet(closers)
+
+
+def test_rollup_sums_worker_histograms_exactly():
+    """Fixed bucket boundaries make the fleet rollup exact arithmetic:
+    every ychg_request_latency_seconds series on the router's /metrics
+    page equals the plain sum of the two workers' series, and the summed
+    histogram stays internally consistent (_count == +Inf bucket)."""
+    from repro.obs import base_family, parse_prom_text
+
+    masks = [_mask((28, 28), seed=70 + i) for i in range(6)]
+    links, closers = _two_worker_fleet()
+    try:
+        router = FleetRouter(links, RouterConfig(bucket_sides=(32,),
+                                                 max_batch=4))
+        with RouterThread(router) as rt, \
+                YCHGClient("127.0.0.1", rt.port) as client:
+            items = {it.id: it for it in client.analyze_batch(masks)}
+            assert all(it.ok for it in items.values())
+            worker_pages = []
+            for link in links:
+                with YCHGClient("127.0.0.1", link.http_port) as wc:
+                    worker_pages.append(parse_prom_text(wc.metrics_text()))
+            page = parse_prom_text(client.metrics_text())
+        fam = "ychg_request_latency_seconds"
+        assert page.types.get(fam) == "histogram"
+
+        def hist_series(p):
+            return {(s.name, s.labels): s.value for s in p.samples
+                    if base_family(s.name) == fam}
+
+        want = {}
+        for wp in worker_pages:
+            for key, v in hist_series(wp).items():
+                want[key] = want.get(key, 0.0) + v
+        got = hist_series(page)
+        assert want, "workers exported no latency histogram series"
+        for key, v in want.items():
+            assert got.get(key) == v, key
+        inf = sum(v for (n, labels), v in got.items()
+                  if n.endswith("_bucket") and dict(labels)["le"] == "+Inf")
+        counts = sum(v for (n, _), v in got.items()
+                     if n.endswith("_count"))
+        assert inf == counts == len(masks)
+        # the plain-counter legacy rollup behaviour still holds alongside
+        assert page.get("ychg_completed_total") == len(masks)
+    finally:
+        _close_fleet(closers)
