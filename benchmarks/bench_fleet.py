@@ -41,7 +41,7 @@ import numpy as np
 import jax
 
 from repro.data import modis
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.fleet import FleetRouter, FleetSupervisor, HashRing, RouterConfig, RouterThread
 from repro.fleet.router import routing_key
 from repro.frontend import ServerThread, YCHGClient
@@ -84,7 +84,7 @@ def run_fleet_vs_single(n_workers: int, n_requests: int) -> dict:
                         max_delay_ms=2.0)
 
     # ---- single-process arm (reference results double as the identity bar)
-    with YCHGService(YCHGEngine(), cfg) as svc, ServerThread(svc) as srv, \
+    with YCHGService(Engine(), cfg) as svc, ServerThread(svc) as srv, \
             YCHGClient("127.0.0.1", srv.port) as client:
         list(client.analyze_batch(warm))
         single_s, single_items = _timed_batch(client, timed)
@@ -167,7 +167,7 @@ def main() -> None:
     report = {
         "bench": "fleet_scaling",
         "platform": jax.default_backend(),
-        "backend": YCHGEngine().resolve_backend(),
+        "backend": Engine().resolve_backend(),
         "note": (
             "fleet_vs_single serves one pool of distinct masks through a "
             "single-process front end and through the fleet router over "

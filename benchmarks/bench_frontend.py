@@ -40,7 +40,7 @@ import numpy as np
 import jax
 
 from repro.data import modis
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.frontend import ServerThread, YCHGClient
 from repro.service import ServiceConfig, ServiceOverloaded, YCHGService
 
@@ -54,7 +54,7 @@ def _pace(t0: float, n: int, rate: float) -> None:
         time.sleep(min(1e-3, remaining))
 
 
-def _warm_rungs(engine: YCHGEngine, res: int, max_batch: int = 8) -> None:
+def _warm_rungs(engine: Engine, res: int, max_batch: int = 8) -> None:
     """Compile every sub-batch rung's batch + crop shape outside timing."""
     from repro.service import crop_result, sub_batch_ladder
 
@@ -71,7 +71,7 @@ def run_wire_vs_inprocess() -> dict:
     pool = [modis.snowfield(res, seed=900 + i) for i in range(pool_size)]
     rng = np.random.default_rng(7)
     schedule = rng.choice(pool_size, size=n_requests)
-    engine = YCHGEngine()
+    engine = Engine()
     cfg = ServiceConfig(bucket_sides=(res,), max_batch=8, max_delay_ms=2.0)
 
     with YCHGService(engine, cfg) as svc:
@@ -115,7 +115,7 @@ def run_wire_vs_inprocess() -> dict:
 # ------------------------------------------------------ fair vs unfair skew
 
 
-def _run_skew_arm(engine: YCHGEngine, knobs: dict,
+def _run_skew_arm(engine: Engine, knobs: dict,
                   requests: List[tuple], rate: float) -> dict:
     """One admission policy under the shared skewed open-loop schedule.
 
@@ -170,7 +170,7 @@ def run_fair_vs_unfair_skew() -> dict:
          modis.snowfield(64 if n % 6 == 0 else 128, seed=1000 + n))
         for n in range(n_requests)
     ]
-    engine = YCHGEngine()
+    engine = Engine()
     # compile every ladder rung (batch + crop) for both buckets up front
     for res in (64, 128):
         _warm_rungs(engine, res)
@@ -218,7 +218,7 @@ def main() -> None:
     report = {
         "bench": "frontend_load_sweep",
         "platform": jax.default_backend(),
-        "backend": YCHGEngine().resolve_backend(),
+        "backend": Engine().resolve_backend(),
         "note": (
             "wire_vs_inprocess drives one schedule through in-process "
             "submit and through loopback HTTP (streamed batch + "

@@ -45,7 +45,7 @@ import numpy as np
 import jax
 
 from repro.data import scenes
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.scene import (
     BulkJob,
     BulkJobConfig,
@@ -77,7 +77,7 @@ def _identical(got: dict, want: dict) -> bool:
 
 def run_scene_stitch(height: int, width: int, tile_h: int,
                      stack_tiles: int, repeats: int) -> dict:
-    engine = YCHGEngine()
+    engine = Engine()
     mask = scenes.scene(height, width, seed=42, cell=64)
     reader = GranuleReader.from_array(mask, tile_h, granule_id="bench")
     runner = SceneRunner(engine, stack_tiles=stack_tiles)
@@ -127,7 +127,7 @@ def run_scene_stitch(height: int, width: int, tile_h: int,
 
 def run_checkpoint_overhead(height: int, width: int, tile_h: int,
                             stack_tiles: int, n_granules: int) -> dict:
-    engine = YCHGEngine()
+    engine = Engine()
     manifest = synthetic_manifest(n_granules, height, width, seed=7,
                                   cell=64)
     px = n_granules * height * width

@@ -40,7 +40,7 @@ import numpy as np
 import jax
 
 from repro.data import modis
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.service import (
     ServiceConfig,
     ServiceOverloaded,
@@ -108,7 +108,7 @@ def build_schedule(sc: Scenario, rng: np.random.Generator) -> np.ndarray:
     return rng.choice(sc.pool_size, size=sc.n_requests, p=weights / weights.sum())
 
 
-def run_naive(engine: YCHGEngine, pool, schedule, rate) -> float:
+def run_naive(engine: Engine, pool, schedule, rate) -> float:
     """Per-request blocking engine.analyze over the schedule; returns rps."""
     t0 = time.perf_counter()
     for n, i in enumerate(schedule):
@@ -139,7 +139,7 @@ def _pace(t0: float, n: int, rate: float) -> None:
         time.sleep(min(1e-3, remaining))
 
 
-def _warm_rungs(engine: YCHGEngine, res: int, max_batch: int = 8) -> None:
+def _warm_rungs(engine: Engine, res: int, max_batch: int = 8) -> None:
     """Compile every sub-batch ladder rung's batch computation AND the
     service's per-request crop fan-out for it, outside any timed region."""
     from repro.service import crop_result
@@ -154,7 +154,7 @@ def run_scenario(sc: Scenario) -> dict:
     schedule = build_schedule(sc, np.random.default_rng(sc.seed + 1))
     sides = tuple(sorted(set(sc.resolutions)))
     max_batch = 8
-    engine = YCHGEngine()
+    engine = Engine()
     svc = YCHGService(engine, ServiceConfig(bucket_sides=sides,
                                             max_batch=max_batch,
                                             max_delay_ms=2.0))
@@ -211,7 +211,7 @@ def run_low_occupancy(pool_size: int = 24) -> dict:
         cfg = ServiceConfig(bucket_sides=(res,), max_batch=max_batch,
                             max_delay_ms=2.0, cache_entries=0,
                             sub_batches=sub)
-        with YCHGService(YCHGEngine(), cfg) as svc:
+        with YCHGService(Engine(), cfg) as svc:
             svc.analyze(pool[0], timeout=600)   # warm: compile outside timing
             t0 = time.perf_counter()
             for m in pool:
@@ -242,9 +242,9 @@ def run_overload() -> dict:
                 cache_entries=0)
     # compile every ladder rung (batch + crop) once, outside every
     # measurement below
-    _warm_rungs(YCHGEngine(), res)
+    _warm_rungs(Engine(), res)
     # probe steady-state capacity, then offer a multiple of it
-    with YCHGService(YCHGEngine(), ServiceConfig(**base)) as svc:
+    with YCHGService(Engine(), ServiceConfig(**base)) as svc:
         svc.analyze(pool[0], timeout=600)
         t0 = time.perf_counter()
         for f in [svc.submit(m) for m in pool[:40]]:
@@ -260,7 +260,7 @@ def run_overload() -> dict:
         ("bounded_shed", {"max_queue_depth": 16, "overload_policy": "shed"}),
     ):
         shed = 0
-        with YCHGService(YCHGEngine(),
+        with YCHGService(Engine(),
                          ServiceConfig(**base, **knobs)) as svc:
             svc.analyze(pool[0], timeout=600)
             futures = []
@@ -323,7 +323,7 @@ def main() -> None:
         "bench": "service_load_sweep",
         "mode": "quick" if args.quick else "full",
         "platform": jax.default_backend(),
-        "backend": YCHGEngine().resolve_backend(),
+        "backend": Engine().resolve_backend(),
         "note": (
             "steady-state (both paths warmed); naive = blocking per-request "
             "engine.analyze on the same schedule; latency percentiles are "

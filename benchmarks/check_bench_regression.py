@@ -35,6 +35,15 @@ batching), and ``checkpoint_overhead_fraction`` at most
 ``max_checkpoint_overhead`` (kill-anywhere resumability must stay
 affordable). A ``cpu_limited`` note on a row waives only its ratio bar.
 
+A fifth family gates the multi-op archive: ``--ops BENCH_ops.json``
+(standalone-capable, run by the op-smoke CI job) requires every
+``{op}_serving`` row and the ``pipeline_vs_sequential`` row to be
+``bit_identical`` (correctness, no escape hatch) and holds the
+compound-pipeline throughput at least ``min_ops_pipeline_ratio`` of the
+compose-by-hand sequential arm — the device-resident chain removes a
+host round trip and must never be slower. As everywhere, a
+``cpu_limited`` note waives only the ratio bar, never bit-identity.
+
 ``--simulate-regression`` degrades the fresh numbers before comparison
 (speedups halved-and-halved-again, pad fractions inflated) so CI can
 prove the gate actually trips — the bench-gate job runs that first and
@@ -59,6 +68,7 @@ DEFAULT_GATE = {
     "min_fleet_ratio": 2.0,
     "min_scene_stitch_ratio": 0.5,
     "max_checkpoint_overhead": 0.5,
+    "min_ops_pipeline_ratio": 1.0,
 }
 
 
@@ -197,6 +207,47 @@ def check_scene(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
     return failures
 
 
+def check_ops(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
+    """Hard invariants of the committed multi-op archive. Every serving
+    row and the compound-pipeline row must be bit-identical (no escape
+    hatch); the pipeline-vs-sequential throughput bar can be waived only
+    by a ``cpu_limited`` note on the row."""
+    failures: List[str] = []
+    rows = {row["scenario"]: row for row in report.get("scenarios", [])}
+
+    for op in ("ychg", "ccl", "denoise"):
+        row = rows.get(f"{op}_serving")
+        if row is None:
+            failures.append(f"ops archive has no {op}_serving scenario")
+        elif row.get("bit_identical") is not True:
+            failures.append(
+                f"{op}_serving: wire results not bit-identical to the "
+                f"op's jnp reference")
+
+    pipe = rows.get("pipeline_vs_sequential")
+    if pipe is None:
+        failures.append("ops archive has no pipeline_vs_sequential scenario")
+    else:
+        if pipe.get("bit_identical") is not True:
+            failures.append(
+                "pipeline_vs_sequential: compound results not bit-identical "
+                "to the stages issued as separate requests")
+        cores = pipe.get("cores", 0)
+        ratio = pipe.get("pipeline_vs_sequential_ratio")
+        floor = gate["min_ops_pipeline_ratio"]
+        if cores >= 4:
+            if ratio is None or ratio < floor:
+                failures.append(
+                    f"pipeline_vs_sequential: ratio {ratio} < {floor} on "
+                    f"{cores} cores — the compound path (which removes a "
+                    f"host round trip) became slower than composing by hand")
+        elif "cpu_limited" not in pipe.get("note", ""):
+            failures.append(
+                f"pipeline_vs_sequential: recorded on {cores} core(s) "
+                "without the cpu_limited note — re-record with bench_ops.py")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_service.json")
@@ -208,12 +259,17 @@ def main() -> None:
     ap.add_argument("--scene", default=None,
                     help="BENCH_scene.json to check invariants of (may "
                          "run standalone, without --fresh)")
+    ap.add_argument("--ops", default=None,
+                    help="BENCH_ops.json to check invariants of (may "
+                         "run standalone, without --fresh)")
     ap.add_argument("--simulate-regression", action="store_true",
                     help="degrade the fresh numbers first; the gate MUST "
                          "exit nonzero (CI self-test)")
     args = ap.parse_args()
-    if args.fresh is None and args.fleet is None and args.scene is None:
-        ap.error("nothing to do: pass --fresh, --fleet, and/or --scene")
+    if (args.fresh is None and args.fleet is None and args.scene is None
+            and args.ops is None):
+        ap.error("nothing to do: pass --fresh, --fleet, --scene, "
+                 "and/or --ops")
     with open(args.baseline) as f:
         baseline_report = json.load(f)
     gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
@@ -248,6 +304,13 @@ def main() -> None:
         failures += scene_failures
         print(f"scene gate: {args.scene} "
               f"{'FAILED' if scene_failures else 'ok'}")
+    if args.ops is not None:
+        with open(args.ops) as f:
+            ops_report = json.load(f)
+        ops_failures = check_ops(ops_report, gate)
+        failures += ops_failures
+        print(f"ops gate: {args.ops} "
+              f"{'FAILED' if ops_failures else 'ok'}")
     if failures:
         print("\nPERF REGRESSION:")
         for f_ in failures:

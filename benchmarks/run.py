@@ -26,7 +26,7 @@ import jax
 
 from repro.core import serial, ychg
 from repro.data import modis
-from repro.engine import YCHGConfig, YCHGEngine, get_backend
+from repro.engine import Engine, YCHGConfig, get_backend
 from repro.kernels import ops as kops
 
 
@@ -107,7 +107,7 @@ def bench_fused_batch_sweep() -> list[str]:
     anchors the crossover threshold.
     """
     rows = []
-    eng_fused = YCHGEngine(YCHGConfig(backend="fused"))
+    eng_fused = Engine(YCHGConfig(backend="fused"))
     for res in (128, 256, 512):
         for bsz in (1, 8, 32):
             imgs = np.stack([modis.snowfield(res, seed=s) for s in range(bsz)])
@@ -139,7 +139,7 @@ def bench_fused_batch_sweep() -> list[str]:
 
 
 def bench_engine_dispatch() -> list[str]:
-    """Per-call overhead of the YCHGEngine dispatch layer.
+    """Per-call overhead of the Engine dispatch layer.
 
     The engine's acceptance bar is <= 5 us/call over invoking the backend
     callable directly. Real kernels jitter by tens of us per call in
@@ -174,7 +174,7 @@ def bench_engine_dispatch() -> list[str]:
         supports_mesh=False, device_kinds=("cpu", "gpu", "tpu"),
     ))
     try:
-        eng = YCHGEngine(YCHGConfig(backend="_bench_null"))
+        eng = Engine(YCHGConfig(backend="_bench_null"))
         direct, cfg = get_backend("_bench_null").run, eng.config
         t_direct = per_call_us(lambda: direct(jimgs, cfg).n_hyperedges,
                                calls=10000)
@@ -188,7 +188,7 @@ def bench_engine_dispatch() -> list[str]:
                 f"null_backend_isolated_budget_us=5")
 
     for backend in ("fused", "jax"):
-        beng = YCHGEngine(YCHGConfig(backend=backend))
+        beng = Engine(YCHGConfig(backend=backend))
         t_real = per_call_us(
             lambda: beng.analyze_batch(jimgs).n_hyperedges, calls=100)
         rows.append(f"engine_dispatch_engine_{backend},{t_real:.1f},"

@@ -1,6 +1,6 @@
 """Quickstart: the paper's two-step yCHG algorithm on a synthetic scene.
 
-The canonical entry point is ``repro.engine.YCHGEngine``: one engine, every
+The canonical entry point is ``repro.engine.Engine``: one engine, every
 backend, device-resident results. ``backend="auto"`` resolves from the
 registry (jit'd jnp on CPU/GPU, the fused single-launch Pallas kernel on
 TPU).
@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core import regions
 from repro.data import modis
-from repro.engine import YCHGConfig, YCHGEngine
+from repro.engine import Engine, YCHGConfig
 from repro.service import ServiceConfig, YCHGService
 
 
@@ -22,7 +22,7 @@ def main():
     print(f"scene: {img.shape}, coverage {img.mean():.1%}")
 
     # Step 1 + 2 on the "GPU": one engine call, result stays on device
-    engine = YCHGEngine()  # backend="auto"
+    engine = Engine()  # backend="auto"
     result = engine.analyze(img)
     print(f"engine dispatched to backend={engine.resolve_backend()!r}")
     out = result.to_host()  # host copy only where the example prints
@@ -32,7 +32,7 @@ def main():
           f"{out['n_hyperedges']} yConvex hyperedges")
 
     # Paper's serial baseline agrees exactly (same engine API, host backend)
-    ser = YCHGEngine(YCHGConfig(backend="serial")).analyze(img).to_host()
+    ser = Engine(YCHGConfig(backend="serial")).analyze(img).to_host()
     assert np.array_equal(out["runs"], ser["runs"])
     print("serial baseline agrees exactly")
 

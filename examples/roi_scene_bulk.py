@@ -25,7 +25,7 @@ import tempfile
 import numpy as np
 
 from repro.data import scenes
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.scene import (
     BulkJob,
     BulkJobConfig,
@@ -38,7 +38,7 @@ from repro.scene import (
 
 
 def main():
-    engine = YCHGEngine()
+    engine = Engine()
 
     # 1. stitch parity: strips + seam correction == whole scene, exactly.
     #    45 rows over 8-row strips leaves a ragged, zero-padded last strip.

@@ -1,7 +1,7 @@
 """End-to-end satellite ROI pipeline (the paper's deployment scenario).
 
 Tiles of a large MODIS-like scene flow through the data pipeline behind a
-single ``YCHGEngine`` built from the workload config:
+single ``Engine`` built from the workload config:
   1. background prefetch of tile batches,
   2. the paper's two-step yCHG operator on device — the engine's fused
      backend: one kernel launch per tile batch (vs two launches per image
@@ -21,7 +21,7 @@ import numpy as np
 from repro.configs.ychg_modis import config as workload_config
 from repro.data import modis
 from repro.data.pipeline import Prefetcher, anyres_select, filter_empty_tiles, ychg_stats
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.sharding import make_batch_mesh
 
 
@@ -44,7 +44,7 @@ def main():
 
     wl = workload_config()
     # force the fused single-launch path (auto would pick jit'd jnp on CPU)
-    engine = YCHGEngine(wl.engine.to_engine_config(backend="fused"))
+    engine = Engine(wl.engine.to_engine_config(backend="fused"))
 
     t0 = time.perf_counter()
     n_tiles = n_kept = n_edges = n_launches = 0

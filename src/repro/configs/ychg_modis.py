@@ -3,7 +3,7 @@
 Knobs mirror the poster's experiments: resolution series up to the
 21000x21000 scene (knob a) and hyperedge series 147 -> 4,124,319 (knob b).
 The ``engine`` section is the canonical way this workload constructs its
-yCHG computation: ``YCHGEngine(config().engine.to_engine_config())``.
+yCHG computation: ``Engine(config().engine.to_engine_config())``.
 """
 
 from __future__ import annotations

@@ -1,4 +1,4 @@
-"""DEPRECATED shim over :mod:`repro.engine` — use ``YCHGEngine`` instead.
+"""DEPRECATED shim over :mod:`repro.engine` — use ``Engine`` instead.
 
 ``analyze_image`` was the original high-level entry point with string
 backend selection. It survives only for backwards compatibility: every call
@@ -6,8 +6,8 @@ emits a ``DeprecationWarning`` and delegates to the engine, returning the
 exact legacy host-NumPy dict. New code should construct the engine
 directly::
 
-    from repro.engine import YCHGConfig, YCHGEngine
-    engine = YCHGEngine(YCHGConfig(backend="jax"))
+    from repro.engine import Engine, YCHGConfig
+    engine = Engine(YCHGConfig(backend="jax"))
     result = engine.analyze(img)          # device-resident YCHGResult
     legacy = result.to_host()             # the dict this shim returns
 
@@ -30,17 +30,17 @@ _ENGINES: Dict[str, Any] = {}
 
 def _engine(backend: str):
     if backend not in _ENGINES:
-        from repro.engine import YCHGConfig, YCHGEngine
+        from repro.engine import Engine, YCHGConfig
 
-        _ENGINES[backend] = YCHGEngine(YCHGConfig(backend=backend))
+        _ENGINES[backend] = Engine(YCHGConfig(backend=backend))
     return _ENGINES[backend]
 
 
 def analyze_image(img: Any, backend: str = "jax") -> Dict[str, np.ndarray]:
-    """DEPRECATED: use ``repro.engine.YCHGEngine``. Returns host NumPy values."""
+    """DEPRECATED: use ``repro.engine.Engine``. Returns host NumPy values."""
     warnings.warn(
         "repro.core.api.analyze_image is deprecated; use "
-        "repro.engine.YCHGEngine(...).analyze(img) (and .to_host() for this "
+        "repro.engine.Engine(...).analyze(img) (and .to_host() for this "
         "dict form)",
         DeprecationWarning,
         stacklevel=2,

@@ -19,7 +19,7 @@ from typing import TYPE_CHECKING, Dict, Iterator, List, Optional
 import numpy as np
 
 if TYPE_CHECKING:  # pragma: no cover
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
 
 
 class Prefetcher:
@@ -65,17 +65,17 @@ _STATS_BACKENDS = {"auto": "auto", "fused": "fused", "jnp": "jax"}
 
 
 @functools.lru_cache(maxsize=None)
-def _default_engine(backend: str) -> "YCHGEngine":
-    from repro.engine import YCHGConfig, YCHGEngine
+def _default_engine(backend: str) -> "Engine":
+    from repro.engine import Engine, YCHGConfig
 
-    return YCHGEngine(YCHGConfig(backend=backend))
+    return Engine(YCHGConfig(backend=backend))
 
 
 def ychg_stats(masks: np.ndarray, backend: str = "auto", *,
-               engine: Optional["YCHGEngine"] = None) -> Dict[str, np.ndarray]:
+               engine: Optional["Engine"] = None) -> Dict[str, np.ndarray]:
     """(B,H,W) uint8 -> per-tile ROI statistics via the two-step algorithm.
 
-    Pass ``engine`` (a ``repro.engine.YCHGEngine``) to control dispatch —
+    Pass ``engine`` (a ``repro.engine.Engine``) to control dispatch —
     the whole batch runs as one device computation under that engine's
     policy (fused = ONE Pallas kernel launch per batch, no per-image
     step-1/step-2 round-trip). Without an engine, the legacy ``backend``
@@ -101,7 +101,7 @@ def ychg_stats(masks: np.ndarray, backend: str = "auto", *,
 def filter_empty_tiles(masks: np.ndarray, min_hyperedges: int = 1,
                        backend: str = "auto",
                        stats: Optional[Dict[str, np.ndarray]] = None,
-                       engine: Optional["YCHGEngine"] = None
+                       engine: Optional["Engine"] = None
                        ) -> np.ndarray:
     """Drop tiles whose ROI has no hyperedges (paper's step 1+2 as a filter).
 

@@ -1,58 +1,93 @@
-"""`repro.engine` — the canonical entry point for yCHG computations.
+"""`repro.engine` — the canonical entry point for image-operator compute.
 
-One device-resident API over every backend, batch shape, and mesh. Build a
-:class:`YCHGEngine` from a frozen :class:`YCHGConfig`; call ``analyze``
-(one mask), ``analyze_batch`` (a stack), or ``analyze_stream`` (an
-iterable). Every call returns a :class:`YCHGResult` pytree that stays on
-device; ``.to_host()`` gives the old host dict, ``.to_summary()`` the
-``core.ychg.YCHGSummary`` view.
+One device-resident API over every op, backend, batch shape, and mesh.
+Build an :class:`Engine` from a frozen :class:`EngineConfig` (née
+``YCHGConfig`` — same class); call ``analyze`` (one mask), ``analyze_batch``
+(a stack), ``analyze_stream`` (an iterable), or ``run_pipeline`` (an
+ordered op chain, executed device-resident end to end). Every call returns
+the op's result pytree that stays on device; ``.to_host()`` gives the old
+host dict, ``.to_summary()`` the op's summary view.
 
-Backend dispatch lives in :mod:`repro.engine.registry`: implementations
-self-register with capability flags and ``backend="auto"`` resolves per
-call from the input shape and available devices — no if/elif chains, and
-the shard_map path is just the fused backend with a mesh attached
-(``engine.with_mesh(mesh)``).
+Backend dispatch lives in :mod:`repro.engine.registry`, keyed on
+``(op, backend name)``: implementations self-register with capability
+flags and ``backend="auto"`` resolves per call from (op, platform, batch
+shape, mesh) — no if/elif chains, and the shard_map path is just a
+mesh-capable backend with a mesh attached (``engine.with_mesh(mesh)``).
+What each op *is* (result pytree, reference parity bar, pipeline
+chainability) lives in :mod:`repro.engine.ops`; ``docs/ops.md`` shows how
+to add one.
 
 Migration from the four legacy call sites (all now route through here):
 
   legacy call                                   engine form
   --------------------------------------------  ---------------------------------
-  core.api.analyze_image(img, backend="jax")    YCHGEngine(YCHGConfig(
+  core.api.analyze_image(img, backend="jax")    Engine(EngineConfig(
                                                   backend="jax")
                                                 ).analyze(img).to_host()
-  kernels.ops.analyze_fused(stack)              YCHGEngine(YCHGConfig(
+  kernels.ops.analyze_fused(stack)              Engine(EngineConfig(
                                                   backend="fused")
                                                 ).analyze_batch(stack)
-  sharding.batch_sharded_analyze(stack,         YCHGEngine(YCHGConfig(
+  sharding.batch_sharded_analyze(stack,         Engine(EngineConfig(
       mesh=mesh)                                  backend="fused"),
                                                   mesh=mesh,
                                                 ).analyze_batch(stack)
   data.pipeline.ychg_stats(masks,               data.pipeline.ychg_stats(masks,
       backend="fused")                              engine=engine)
 
-``core.api.analyze_image`` and ``sharding.batch_sharded_analyze`` remain as
-thin shims that emit ``DeprecationWarning`` and delegate here; CI runs the
-examples with ``-W error::DeprecationWarning`` so no in-repo caller can
-regress onto them.
+``core.api.analyze_image``, ``sharding.batch_sharded_analyze`` — and, since
+the multi-op refactor, ``YCHGEngine`` itself — remain as thin shims that
+emit ``DeprecationWarning`` and delegate here; CI runs the examples and
+smoke drivers with ``-W error::DeprecationWarning`` so no in-repo caller
+can regress onto them.
 """
 
-from repro.engine.engine import YCHGConfig, YCHGEngine, YCHGResult
+from repro.engine.engine import (
+    Engine,
+    EngineConfig,
+    YCHGConfig,
+    YCHGEngine,
+    YCHGResult,
+)
 from repro.engine.registry import (
     BackendSpec,
+    UnknownOpError,
     backend_names,
     get_backend,
     register_backend,
+    registered_ops,
     resolve,
 )
-from repro.engine import backends as _backends  # noqa: F401  (self-registration)
+from repro.engine.ops import (
+    CCLResult,
+    DenoiseResult,
+    OpSpec,
+    get_op,
+    op_names,
+    register_op,
+)
+from repro.engine.ops import _finalize_ychg_result_type as _fin
+
+_fin()
+del _fin
+from repro.engine import backends as _backends  # noqa: E402,F401  (self-registration)
 
 __all__ = [
     "BackendSpec",
+    "CCLResult",
+    "DenoiseResult",
+    "Engine",
+    "EngineConfig",
+    "OpSpec",
+    "UnknownOpError",
     "YCHGConfig",
     "YCHGEngine",
     "YCHGResult",
     "backend_names",
     "get_backend",
+    "get_op",
+    "op_names",
     "register_backend",
+    "register_op",
+    "registered_ops",
     "resolve",
 ]

@@ -1,11 +1,13 @@
-"""The five in-repo yCHG backends, self-registered on import.
+"""The in-repo op backends, self-registered on import.
 
-Each ``run(imgs, config)`` maps a (B, H, W) stack to a batched
-``core.ychg.YCHGSummary`` bit-identical to ``core.ychg.analyze`` — the
-parity suite in ``tests/test_engine.py`` enforces this for every entry in
-the registry, so a new backend is held to the same bar just by registering.
+yCHG first — each ``run(imgs, config)`` maps a (B, H, W) stack to a batched
+``core.ychg.YCHGSummary`` bit-identical to ``core.ychg.analyze`` — then the
+other platform ops (``ccl``, ``denoise``), each held to its own in-repo
+reference. The parity suites in ``tests/test_engine.py`` and
+``tests/test_ops.py`` enforce this for every entry in the registry, so a
+new backend is held to the same bar just by registering.
 
-Capability summary (drives ``backend="auto"``):
+Capability summary for ``op="ychg"`` (drives ``backend="auto"``):
 
   name     batch  mesh   runs on        auto-picked on
   jax      yes    no     cpu/gpu/tpu    cpu, gpu (jit'd jnp — fastest there)
@@ -13,6 +15,10 @@ Capability summary (drives ``backend="auto"``):
   pallas   no     no     tpu, cpu*      — (two-pass kernels; explicit only)
   serial   no     no     cpu            — (paper's NumPy CPU baseline)
   scalar   no     no     cpu            — (per-pixel loops; tiny images only)
+
+``ccl`` and ``denoise`` each register ``jax`` (the jnp reference itself)
+and ``pallas`` (whole-image VMEM kernels) with the same priority shape:
+jnp on cpu/gpu, the kernel on tpu.
 
   * cpu = Pallas interpret mode (exact, Python-evaluated; correctness, not
     speed). Device backends never copy device arrays through the host.
@@ -29,6 +35,8 @@ import jax.numpy as jnp
 from repro.core import serial, ychg
 from repro.core.ychg import YCHGSummary
 from repro.engine.registry import BackendSpec, register_backend
+from repro.kernels import ccl as kccl
+from repro.kernels import denoise as kdenoise
 from repro.kernels import ops as kops
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -117,4 +125,52 @@ register_backend(BackendSpec(
     name="scalar", run=_run_scalar, supports_batch=False, supports_mesh=False,
     device_kinds=("cpu",),
     priority={"cpu": 1},
+))
+
+
+# ----------------------------------------------------------------- ccl
+
+def _run_ccl_jax(imgs, config: "YCHGConfig") -> kccl.CCLSummary:
+    return kccl.labels(imgs)
+
+
+def _run_ccl_pallas(imgs, config: "YCHGConfig") -> kccl.CCLSummary:
+    return kccl.labels_pallas(imgs, interpret=config.interpret)
+
+
+register_backend(BackendSpec(
+    op="ccl", name="jax", run=_run_ccl_jax,
+    supports_batch=True, supports_mesh=True,
+    device_kinds=("cpu", "gpu", "tpu"),
+    priority={"cpu": 100, "gpu": 100, "tpu": 50},
+))
+register_backend(BackendSpec(
+    op="ccl", name="pallas", run=_run_ccl_pallas,
+    supports_batch=True, supports_mesh=True,
+    device_kinds=("tpu", "cpu", "gpu"),
+    priority={"tpu": 100, "cpu": 40, "gpu": 40},
+))
+
+
+# ------------------------------------------------------------- denoise
+
+def _run_denoise_jax(imgs, config: "YCHGConfig") -> kdenoise.DenoiseSummary:
+    return kdenoise.denoise(imgs)
+
+
+def _run_denoise_pallas(imgs, config: "YCHGConfig") -> kdenoise.DenoiseSummary:
+    return kdenoise.denoise_pallas(imgs, interpret=config.interpret)
+
+
+register_backend(BackendSpec(
+    op="denoise", name="jax", run=_run_denoise_jax,
+    supports_batch=True, supports_mesh=True,
+    device_kinds=("cpu", "gpu", "tpu"),
+    priority={"cpu": 100, "gpu": 100, "tpu": 50},
+))
+register_backend(BackendSpec(
+    op="denoise", name="pallas", run=_run_denoise_pallas,
+    supports_batch=True, supports_mesh=True,
+    device_kinds=("tpu", "cpu", "gpu"),
+    priority={"tpu": 100, "cpu": 40, "gpu": 40},
 ))

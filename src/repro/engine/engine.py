@@ -1,25 +1,36 @@
-"""`YCHGConfig` / `YCHGResult` / `YCHGEngine` — the unified entry point.
+"""`YCHGConfig` / `YCHGResult` / `Engine` — the unified entry point.
 
 One engine instance owns one dispatch policy (backend selection, Pallas tile
-sizes, streaming threshold, optional device mesh) and exposes three verbs:
+sizes, streaming threshold, optional device mesh) over every registered
+*operator* — yCHG first, plus ``ccl`` and ``denoise`` — and exposes three
+verbs (each takes ``op=`` to override the engine's default op per call):
 
   * ``analyze(img)``         — one (H, W) mask; internally a B=1 view of the
                                batched path, NOT a separate code path;
   * ``analyze_batch(stack)`` — a (B, H, W) stack in one device computation;
-  * ``analyze_stream(it)``   — an iterable of masks/stacks, one
-                               ``YCHGResult`` yielded per item.
+  * ``analyze_stream(it)``   — an iterable of masks/stacks, one result
+                               yielded per item;
 
-Every verb returns a :class:`YCHGResult`: a ``jax.tree_util``-registered
-pytree of device arrays (it can cross ``jit``/``shard_map`` boundaries and
-never leaves the device implicitly). ``.to_host()`` produces the legacy
-host dict that ``core.api.analyze_image`` used to return.
+plus ``run_pipeline(stack, stages)``: an ordered op chain executed
+device-resident end to end — each stage's output feeds the next with no
+host round trip, bit-identical to issuing the stages as separate calls.
+
+Every verb returns the op's result pytree (``YCHGResult`` for yCHG — see
+``repro.engine.ops`` for the others): ``jax.tree_util``-registered device
+arrays that can cross ``jit``/``shard_map`` boundaries and never leave the
+device implicitly. ``.to_host()`` produces the legacy host dict.
+
+``YCHGEngine`` remains as a deprecation shim over ``Engine`` (same policy,
+op pinned to ``"ychg"``), mirroring the PR 2 treatment of
+``core.api.analyze_image``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Iterable, Iterator, Optional
+import warnings
+from typing import Any, Callable, Dict, Iterable, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -39,11 +50,12 @@ _FIELDS = ("runs", "cut_vertices", "transitions", "births", "deaths",
 
 @dataclasses.dataclass(frozen=True)
 class YCHGConfig:
-    """Frozen, hashable engine construction knobs.
+    """Frozen, hashable engine construction knobs (shared by every op).
 
-    backend            "auto" resolves per call from the registry (platform +
-                       batch shape + mesh); or any registered name
-                       ("jax", "fused", "pallas", "serial", "scalar").
+    backend            "auto" resolves per (op, platform) from the registry;
+                       or any name registered for the engine's op
+                       ("jax", "fused", "pallas", "serial", "scalar" for
+                       ychg; "jax"/"pallas" for ccl and denoise).
     block_w, block_h   Pallas lane / streamed-row tile sizes.
     dtype              optional dtype name masks are cast to on ingest
                        (None = accept as-is; nonzero = foreground either way).
@@ -60,6 +72,11 @@ class YCHGConfig:
     mesh_axis: str = "data"
     interpret: Optional[bool] = None
     stream_vmem_budget: int = 4 * 1024 * 1024
+
+
+# the knobs are op-agnostic; EngineConfig is the preferred spelling going
+# forward, YCHGConfig the historical one (both are the same class)
+EngineConfig = YCHGConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,58 +140,84 @@ def _from_summary(s: YCHGSummary, batched: bool) -> YCHGResult:
     return r
 
 
-class YCHGEngine:
-    """The sole dispatch point for yCHG computations.
+def _zero_pad_region(x: Array, valid_hw: Array) -> Array:
+    """Zero rows >= h and cols >= w per image (valid_hw: (B, 2) int32).
 
-    ``YCHGEngine()`` (all defaults) resolves the best backend per call;
-    attach a device mesh with ``with_mesh`` to batch-shard the fused kernel
-    over it (padding to the mesh size and stripping the pad internally, so
-    callers never see padded-length results).
+    Between pipeline stages this restores the exact canvas a single-op
+    submit would see — a stage may write nonzero values into the pad
+    region (denoise's RMS does, next to native pixels), and the next stage
+    must not observe them. h/w stay traced, so one compiled pipeline
+    serves every ragged batch of a bucket shape.
+    """
+    _, h, w = x.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (h, w), 0)[None]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (h, w), 1)[None]
+    keep = (rows < valid_hw[:, 0, None, None]) & (
+        cols < valid_hw[:, 1, None, None])
+    return jnp.where(keep, x, jnp.zeros((), x.dtype))
+
+
+class Engine:
+    """The sole dispatch point for image-operator computations.
+
+    ``Engine()`` (all defaults) serves the ``ychg`` op, resolving the best
+    backend per call; ``Engine(op="ccl")`` pins a different default op, and
+    every verb accepts ``op=`` for per-call override. Attach a device mesh
+    with ``with_mesh`` to batch-shard any batch-capable backend over it
+    (padding to the mesh size and stripping the pad internally, so callers
+    never see padded-length results).
     """
 
     def __init__(self, config: YCHGConfig = YCHGConfig(), *,
-                 mesh: Optional[Mesh] = None):
+                 op: str = "ychg", mesh: Optional[Mesh] = None):
         if mesh is not None and config.mesh_axis not in mesh.axis_names:
             raise ValueError(
                 f"mesh has axes {mesh.axis_names}, config.mesh_axis="
                 f"{config.mesh_axis!r}"
             )
         self.config = config
+        self.op = op
         self.mesh = mesh
         # platform is fixed per process; cache it out of the hot dispatch path
         self._platform = jax.default_backend()
         self._cast_dtype = None if config.dtype is None else jnp.dtype(config.dtype)
-        # (registry generation, resolved spec) — revalidated against
+        # op -> (registry generation, resolved spec) — revalidated against
         # registry.generation() so late register_backend() calls still apply
-        self._spec_cache: Optional[tuple[int, registry.BackendSpec]] = None
+        self._spec_cache: Dict[str, tuple[int, registry.BackendSpec]] = {}
 
     # ------------------------------------------------------------- plumbing
 
-    def with_mesh(self, mesh: Optional[Mesh]) -> "YCHGEngine":
+    def with_mesh(self, mesh: Optional[Mesh]) -> "Engine":
         """Same policy, batch-sharded over ``mesh`` (None detaches)."""
-        return YCHGEngine(self.config, mesh=mesh)
+        return Engine(self.config, op=self.op, mesh=mesh)
 
-    def with_config(self, **overrides: Any) -> "YCHGEngine":
-        """New engine with ``dataclasses.replace``d config, same mesh."""
-        return YCHGEngine(dataclasses.replace(self.config, **overrides),
-                          mesh=self.mesh)
+    def with_config(self, **overrides: Any) -> "Engine":
+        """New engine with ``dataclasses.replace``d config, same op/mesh."""
+        return Engine(dataclasses.replace(self.config, **overrides),
+                      op=self.op, mesh=self.mesh)
 
-    def resolve_backend(self) -> str:
-        """Name of the backend this engine dispatches to right now."""
-        return self._resolve().name
+    def resolve_backend(self, op: Optional[str] = None) -> str:
+        """Name of the backend this engine dispatches ``op`` to right now."""
+        return self._resolve(op or self.op).name
 
-    def _resolve(self) -> registry.BackendSpec:
+    def _resolve(self, op: str) -> registry.BackendSpec:
         gen = registry.generation()
-        cached = self._spec_cache
+        cached = self._spec_cache.get(op)
         if cached is not None and cached[0] == gen:
             return cached[1]
         spec = registry.resolve(
             self.config.backend,
             platform=self._platform,
             need_mesh=self.mesh is not None,
+            op=op,
         )
-        self._spec_cache = (gen, spec)
+        self._spec_cache[op] = (gen, spec)
         return spec
+
+    def _opspec(self, op: str):
+        from repro.engine import ops as engine_ops
+
+        return engine_ops.get_op(op)
 
     def _ingest(self, imgs: Any) -> Array:
         # device arrays pass through untouched: no host round-trip, and no
@@ -187,37 +230,39 @@ class YCHGEngine:
 
     # ------------------------------------------------------------- dispatch
 
-    def analyze(self, img: Any) -> YCHGResult:
-        """One (H, W) mask -> B=1 ``YCHGResult`` (never copies device->host)."""
+    def analyze(self, img: Any, *, op: Optional[str] = None):
+        """One (H, W) mask -> B=1 result (never copies device->host)."""
         x = self._ingest(img)
         if x.ndim != 2:
             raise ValueError(f"analyze expects an (H, W) mask, got {x.shape}; "
                              "use analyze_batch for stacks")
-        return self._run(x[None], batched=False)
+        return self._run(x[None], batched=False, op=op or self.op)
 
-    def analyze_batch(self, stack: Any) -> YCHGResult:
-        """A (B, H, W) stack in one device computation -> ``YCHGResult``."""
+    def analyze_batch(self, stack: Any, *, op: Optional[str] = None):
+        """A (B, H, W) stack in one device computation."""
         x = self._ingest(stack)
         if x.ndim != 3:
             raise ValueError(f"analyze_batch expects a (B, H, W) stack, "
                              f"got {x.shape}")
-        return self._run(x, batched=True)
+        return self._run(x, batched=True, op=op or self.op)
 
-    def analyze_stream(self, items: Iterable[Any]) -> Iterator[YCHGResult]:
+    def analyze_stream(self, items: Iterable[Any], *,
+                       op: Optional[str] = None) -> Iterator[Any]:
         """Lazily map ``analyze``/``analyze_batch`` over an iterable,
         double-buffering ingest against device compute.
 
-        Each item may be an (H, W) mask or a (B, H, W) stack; one
-        ``YCHGResult`` is yielded per item, strictly in order. The stream
-        runs one item ahead of the yield point: item n+1 is pulled from the
-        iterator and its host->device transfer started *before* result n is
-        yielded, so while the consumer handles result n (whose computation
-        was dispatched asynchronously) the next item's host work and
-        transfer are already in flight. Compose with
-        ``data.pipeline.Prefetcher`` for background host I/O.
+        Each item may be an (H, W) mask or a (B, H, W) stack; one result is
+        yielded per item, strictly in order. The stream runs one item ahead
+        of the yield point: item n+1 is pulled from the iterator and its
+        host->device transfer started *before* result n is yielded, so
+        while the consumer handles result n (whose computation was
+        dispatched asynchronously) the next item's host work and transfer
+        are already in flight. Compose with ``data.pipeline.Prefetcher``
+        for background host I/O.
         """
+        run_op = op or self.op
         it = iter(items)
-        pending: Optional[YCHGResult] = None
+        pending = None
         while True:
             # pull and ingest (start the transfer of) item n+1 first ...
             try:
@@ -246,59 +291,119 @@ class YCHGEngine:
             # wait with the transfer above; dispatch n+1 when control returns
             if pending is not None:
                 yield pending
-            pending = self._run(x, batched=batched)
+            pending = self._run(x, batched=batched, op=run_op)
         if pending is not None:
             yield pending
 
-    def _run(self, imgs: Array, *, batched: bool) -> YCHGResult:
-        spec = self._resolve()
+    def run_pipeline(self, stack: Any, stages: Sequence[str], *,
+                     valid_hw: Optional[Any] = None, batched: bool = True,
+                     on_stage: Optional[Callable[[str, float, float],
+                                                 None]] = None):
+        """Execute an ordered op chain device-resident, no host round trips.
+
+        Each stage's ``chain_field`` output becomes the next stage's input
+        stack. ``valid_hw`` ((B, 2) int32 of per-image (h, w)) optionally
+        re-zeroes the pad region between stages so a bucket-padded batch
+        stays bit-identical to issuing the stages as separate (cropped)
+        submits — see :func:`_zero_pad_region`. ``on_stage(name, t0, t1)``
+        fires after each stage's (synchronous) dispatch — the service uses
+        it to emit per-stage ``pipeline.<op>`` spans and stage histograms.
+        Returns the LAST stage's result.
+        """
+        from repro.engine import ops as engine_ops
+
+        stages = engine_ops.validate_pipeline(stages)
+        x = self._ingest(stack)
+        if x.ndim != 3:
+            raise ValueError(
+                f"run_pipeline expects a (B, H, W) stack, got {x.shape}")
+        hw = None if valid_hw is None else jnp.asarray(valid_hw, jnp.int32)
+        result = None
+        for i, name in enumerate(stages):
+            t0 = time.monotonic()
+            result = self._run(x, batched=batched, op=name)
+            if i + 1 < len(stages):
+                x = getattr(result, self._opspec(name).chain_field)
+                if hw is not None:
+                    x = _zero_pad_region(x, hw)
+            if on_stage is not None:
+                on_stage(name, t0, time.monotonic())
+        return result
+
+    def _run(self, imgs: Array, *, batched: bool, op: str):
+        opspec = self._opspec(op)
+        spec = self._resolve(op)
         # counted BEFORE the run so a raising backend still shows up in
         # call_count; the dispatch-cost histogram only sees successes
-        registry.note_call(spec.name)
+        registry.note_call(spec.name, op)
         t0 = time.monotonic()
         if self.mesh is not None:
-            out = _from_summary(self._run_meshed(spec, imgs), batched)
+            out = opspec.from_summary(
+                self._run_meshed(spec, opspec, imgs), batched)
         else:
-            out = _from_summary(spec.run(imgs, self.config), batched)
-        registry.note_dispatch(spec.name, time.monotonic() - t0)
+            out = opspec.from_summary(spec.run(imgs, self.config), batched)
+        registry.note_dispatch(spec.name, time.monotonic() - t0, op)
         return out
 
-    def _run_meshed(self, spec: registry.BackendSpec, imgs: Array) -> YCHGSummary:
+    def _run_meshed(self, spec: registry.BackendSpec, opspec,
+                    imgs: Array):
         """shard_map ``spec`` over the 1-D batch mesh.
 
-        Ragged batches are padded with blank images (zero runs, zero
-        hyperedges — inert end to end) to a multiple of the mesh size and
-        the pad is stripped before returning, so non-divisible batch sizes
-        are invisible to callers.
+        Ragged batches are padded with blank images (inert end to end for
+        every op: zero pixels form no runs, no components, and denoise to
+        zero) to a multiple of the mesh size and the pad is stripped before
+        returning, so non-divisible batch sizes are invisible to callers.
         """
         from repro.sharding.ychg import pad_batch
 
         axis = self.config.mesh_axis
         x, b = pad_batch(imgs, self.mesh.shape[axis])
         cfg = self.config
+        fields = opspec.fields
 
         def local(xs: Array):
             s = spec.run(xs, cfg)
-            return tuple(getattr(s, f) for f in _FIELDS)
+            return tuple(getattr(s, f) for f in fields)
 
         pspec = P(axis)
         outs = shard_map(local, mesh=self.mesh, in_specs=pspec,
                          out_specs=pspec, check_rep=False)(x)
-        return YCHGSummary(*(o[:b] for o in outs))
+        return opspec.summary_type(*(o[:b] for o in outs))
 
     # ------------------------------------------------------------ tooling
 
     def lower(self, stack_shape: tuple[int, int, int],
-              dtype: Any = jnp.uint8) -> Any:
+              dtype: Any = jnp.uint8, op: Optional[str] = None) -> Any:
         """jit-lower this engine's batched path for an abstract input shape.
 
         Used by ``launch.dryrun`` to prove a (backend x shape) cell lowers
         and compiles without allocating the stack.
         """
-        spec = self._resolve()
+        run_op = op or self.op
+        opspec = self._opspec(run_op)
+        spec = self._resolve(run_op)
         cfg = self.config
 
-        def run(x: Array) -> YCHGResult:
-            return _from_summary(spec.run(x, cfg), batched=True)
+        def run(x: Array):
+            return opspec.from_summary(spec.run(x, cfg), batched=True)
 
         return jax.jit(run).lower(jax.ShapeDtypeStruct(stack_shape, dtype))
+
+
+class YCHGEngine(Engine):
+    """Deprecated alias for :class:`Engine` pinned to ``op="ychg"``.
+
+    Kept so the PR 2 migration table stays valid; emits a
+    ``DeprecationWarning`` exactly like ``core.api.analyze_image`` does.
+    CI's warning-strict jobs keep in-repo callers off this shim.
+    """
+
+    def __init__(self, config: YCHGConfig = YCHGConfig(), *,
+                 mesh: Optional[Mesh] = None):
+        warnings.warn(
+            "YCHGEngine is deprecated; use repro.engine.Engine "
+            "(op defaults to 'ychg')",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        super().__init__(config, op="ychg", mesh=mesh)

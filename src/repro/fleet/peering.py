@@ -28,7 +28,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from repro.engine import YCHGResult
+from repro.engine.ops import get_op, split_pipeline_key
 from repro.frontend import protocol
 from repro.service.cache import CacheKey, ResultCache, serialize_key
 
@@ -50,13 +50,16 @@ def _recv_exactly(sock: socket.socket, n: int) -> bytes:
 
 def probe_peer(host: str, port: int, skey: bytes, *,
                timeout: float = DEFAULT_PROBE_TIMEOUT_S,
-               ) -> Optional[Dict[str, Any]]:
+               opname: str = "ychg") -> Optional[Dict[str, Any]]:
     """One blocking ``cache_probe`` round trip; the decoded hit frame, or
-    None on miss/any failure."""
+    None on miss/any failure. ``opname`` tells the sibling which op's
+    field set to encode the stored entry with (the key already carries it
+    — this just saves the far side reverse-engineering the bytes)."""
     try:
         with socket.create_connection((host, port), timeout=timeout) as sock:
             sock.sendall(protocol.pack_frame(
-                {"op": "cache_probe", "key": skey.hex(), "id": 0}))
+                {"op": "cache_probe", "key": skey.hex(), "id": 0,
+                 "opname": opname}))
             head = _recv_exactly(sock, 4)
             payload = _recv_exactly(sock, protocol.unpack_frame_header(head))
     except (ConnectionError, OSError, protocol.ProtocolError):
@@ -98,16 +101,18 @@ class PeeredResultCache(ResultCache):
         if not peers:
             return None
         skey = serialize_key(key)
+        op_key = key[6]
+        result_type = get_op(split_pipeline_key(op_key)[-1]).result_type
         for host, port in peers:
             frame = probe_peer(host, port, skey,
-                               timeout=self.probe_timeout_s)
+                               timeout=self.probe_timeout_s, opname=op_key)
             if frame is None:
                 continue
             try:
                 fields = {
                     f: jnp.asarray(protocol.decode_array(frame["result"][f]))
-                    for f in protocol.RESULT_FIELDS}
-                result = YCHGResult(**fields, batched=False)
+                    for f in protocol.result_fields(op_key)}
+                result = result_type(**fields, batched=False)
             except (KeyError, TypeError, ValueError, protocol.ProtocolError):
                 continue   # a garbled reply is a miss, not an outage
             self.peer_hits += 1

@@ -45,6 +45,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.engine.ops import op_names
 from repro.fleet.hashring import HashRing
 from repro.fleet.worker import parse_ready_line
 from repro.frontend import protocol
@@ -138,20 +139,25 @@ class _RouterRequest:
 
     payload: Dict[str, Any]
     skey: bytes
-    bucket: Tuple[int, str]
+    bucket: Tuple[str, int, str]
     t_submit: float
     future: Future
+    op_key: str = "ychg"
+    stages: Optional[List[str]] = None
     served_by: Optional[str] = None
     trace: Any = NULL_TRACE   # the HTTP handler's trace; spans join it
 
 
-def routing_key(mask: np.ndarray) -> bytes:
+def routing_key(mask: np.ndarray, op: str = "ychg") -> bytes:
     """The placement key for a mask: the serialized cache key with the
     policy components pinned to fleet constants. All workers run one
     policy, so backend/config would be the same bytes in every key —
-    placement only ever depends on (content, shape, dtype), exactly the
-    components :func:`serialize_key` renders process-stably."""
-    return serialize_key(make_key(np.ascontiguousarray(mask), "fleet", None))
+    placement only ever depends on (content, shape, dtype, op), exactly
+    the components :func:`serialize_key` renders process-stably. The op
+    qualifies the key so the same mask under two ops lands wherever its
+    cache entry would live (entries are namespaced per op)."""
+    return serialize_key(
+        make_key(np.ascontiguousarray(mask), "fleet", None, op=op))
 
 
 class FleetRouter:
@@ -282,6 +288,11 @@ class FleetRouter:
         reroute, so a deterministic 4xx/5xx never retries elsewhere."""
         t0 = time.monotonic()
         call_frame: Dict[str, Any] = {"op": "analyze", "mask": req.payload}
+        if req.stages is not None:
+            call_frame["op"] = "pipeline"
+            call_frame["stages"] = req.stages
+        elif req.op_key != "ychg":
+            call_frame["opname"] = req.op_key
         if req.trace.enabled:
             # the RPC frame field mirroring the HTTP X-YCHG-Trace header:
             # the worker's spans join this router-side trace id
@@ -452,10 +463,22 @@ class FleetRouter:
                                recorder().to_chrome_json().encode(),
                                "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
+                # historical alias for /v1/ychg
                 await self._http_analyze(body, writer, keep, trace_id)
             elif method == "POST" and target == "/v1/analyze_batch":
                 await self._http_analyze_batch(body, writer, trace_id)
                 keep = False
+            elif method == "POST" and target == "/v1/pipeline":
+                await self._http_pipeline(body, writer, keep, trace_id)
+            elif method == "POST" and target.startswith("/v1/"):
+                opname = target[len("/v1/"):]
+                if opname in op_names():
+                    await self._http_analyze(body, writer, keep, trace_id,
+                                             op=opname)
+                else:
+                    await _respond_json(writer, 404, {
+                        "error": f"unknown op {opname!r}",
+                        "ops": list(op_names())}, keep)
             else:
                 await _respond_json(writer, 404, {
                     "error": f"no route for {method} {target}"}, keep)
@@ -471,7 +494,8 @@ class FleetRouter:
         return keep
 
     async def _submit(self, item: Dict[str, Any],
-                      trace: Any = None) -> Dict[str, Any]:
+                      trace: Any = None, op: Optional[str] = None,
+                      stages: Optional[List[str]] = None) -> Dict[str, Any]:
         """Admit one encoded mask through the DRR scheduler and await the
         worker's response frame. decode_array validates the payload and
         yields shape/dtype for the bucket + routing key; the DECODED mask
@@ -479,10 +503,12 @@ class FleetRouter:
         tr = trace if trace is not None else NULL_TRACE
         mask = protocol.decode_array(item["mask"])
         side = pick_bucket_side(mask.shape, self.config.bucket_sides)
+        op_key = "+".join(stages) if stages else (op or "ychg")
         req = _RouterRequest(
-            payload=item["mask"], skey=routing_key(mask),
-            bucket=(side, str(mask.dtype)), t_submit=time.monotonic(),
-            future=Future(), trace=tr)
+            payload=item["mask"], skey=routing_key(mask, op_key),
+            bucket=(op_key, side, str(mask.dtype)),
+            t_submit=time.monotonic(), future=Future(),
+            op_key=op_key, stages=stages, trace=tr)
         loop = asyncio.get_running_loop()
         # submit on the executor: a "block" park must not stall the loop
         t_gate = time.monotonic()
@@ -514,13 +540,15 @@ class FleetRouter:
 
     async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
                             keep: bool,
-                            trace_id: Optional[str] = None) -> None:
+                            trace_id: Optional[str] = None,
+                            op: Optional[str] = None,
+                            stages: Optional[List[str]] = None) -> None:
         tr = maybe_trace(trace_id, process="router")
         try:
             payload = json.loads(body)
             rid = payload.get("id")
             try:
-                frame = await self._submit(payload, tr)
+                frame = await self._submit(payload, tr, op=op, stages=stages)
             except ServiceOverloaded as e:
                 retry = self._retry_hint_s()
                 await _respond_json(
@@ -543,6 +571,21 @@ class FleetRouter:
             await _respond_json(writer, status, out, keep, extra=extra)
         finally:
             tr.finish()
+
+    async def _http_pipeline(self, body: bytes, writer: asyncio.StreamWriter,
+                             keep: bool,
+                             trace_id: Optional[str] = None) -> None:
+        """``POST /v1/pipeline`` — validate the stage list here (cheap,
+        deterministic), then forward as a pipeline RPC frame to the mask's
+        ring owner; the worker runs the compound request device-resident."""
+        payload = json.loads(body)
+        stages = payload.get("stages")
+        if (not isinstance(stages, list) or not stages
+                or not all(isinstance(s, str) for s in stages)):
+            raise protocol.ProtocolError(
+                "'stages' must be a non-empty list of op names")
+        await self._http_analyze(body, writer, keep, trace_id,
+                                 stages=[str(s) for s in stages])
 
     async def _http_analyze_batch(self, body: bytes,
                                   writer: asyncio.StreamWriter,

@@ -1,7 +1,7 @@
 """One fleet worker process: ``python -m repro.fleet.worker``.
 
-A worker is exactly today's stack — ``YCHGEngine`` (unmeshed; serialized
-cache keys need process-stable components) behind ``YCHGService`` behind
+A worker is exactly today's stack — ``Engine`` (unmeshed; serialized
+cache keys need process-stable components) behind ``Service`` behind
 ``FrontendServer`` — plus a :class:`~repro.fleet.peering.PeeredResultCache`
 so local misses consult siblings before computing. The supervisor spawns
 workers with ephemeral ports (0) and parses the one-line handshake this
@@ -76,10 +76,10 @@ def main(argv=None) -> None:
         enable_compile_cache(args.compile_cache)
 
     from repro import obs
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.fleet.peering import PeeredResultCache
     from repro.frontend import ServerThread
-    from repro.service import ServiceConfig, YCHGService
+    from repro.service import Service, ServiceConfig
 
     if args.trace_dump:
         # per-process suffix: every worker of a supervisor shares the flag
@@ -99,7 +99,7 @@ def main(argv=None) -> None:
     for sig in (signal.SIGTERM, signal.SIGINT):
         signal.signal(sig, lambda *_: stop.set())
 
-    with YCHGService(YCHGEngine(), config, cache=cache) as svc:
+    with Service(Engine(), config, cache=cache) as svc:
         with ServerThread(svc, host=args.host, port=args.port,
                           rpc_port=args.rpc_port) as srv:
             print(ready_line(srv.rpc_port, srv.port), flush=True)

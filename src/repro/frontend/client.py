@@ -183,23 +183,48 @@ class YCHGClient:
         return json.loads(body)
 
     def analyze(self, mask: np.ndarray, id: Any = None,
-                trace_id: Optional[str] = None) -> Dict[str, np.ndarray]:
+                trace_id: Optional[str] = None, *,
+                op: Optional[str] = None) -> Dict[str, np.ndarray]:
         """One mask -> the ``to_host()``-shaped result dict (bit-identical
         to in-process ``service.submit(mask).result().to_host()``).
 
-        ``trace_id`` propagates over the ``X-YCHG-Trace`` header so the
-        server's spans join the caller's trace; the client's own encode +
-        wire spans land in this process's flight recorder under the same
-        id."""
+        ``op`` posts to ``/v1/{op}`` (``/v1/ccl``, ``/v1/denoise``, ...);
+        the default keeps the historical ``/v1/analyze`` route and wire
+        format. ``trace_id`` propagates over the ``X-YCHG-Trace`` header
+        so the server's spans join the caller's trace; the client's own
+        encode + wire spans land in this process's flight recorder under
+        the same id."""
+        path = "/v1/analyze" if op is None else f"/v1/{op}"
+        return self._analyze_path(path, mask, id, trace_id,
+                                  wire_op=op or "ychg")
+
+    def pipeline(self, mask: np.ndarray, stages: Sequence[str],
+                 id: Any = None, trace_id: Optional[str] = None,
+                 ) -> Dict[str, np.ndarray]:
+        """One mask through ``POST /v1/pipeline``; the terminal stage's
+        ``to_host()``-shaped result dict."""
+        stages = [str(s) for s in stages]
+        if not stages:
+            raise ValueError("pipeline needs at least one stage")
+        return self._analyze_path("/v1/pipeline", mask, id, trace_id,
+                                  wire_op=stages[-1], stages=stages)
+
+    def _analyze_path(self, path: str, mask: np.ndarray, id: Any,
+                      trace_id: Optional[str], *, wire_op: str,
+                      stages: Optional[List[str]] = None,
+                      ) -> Dict[str, np.ndarray]:
         tr = maybe_trace(trace_id, process="client")
         try:
             t0 = time.monotonic()
             req = dict(protocol.encode_array(np.asarray(mask)))
-            body = json.dumps({"mask": req, "id": id}).encode()
+            payload_obj: Dict[str, Any] = {"mask": req, "id": id}
+            if stages is not None:
+                payload_obj["stages"] = stages
+            body = json.dumps(payload_obj).encode()
             t1 = time.monotonic()
             tr.add("client.encode", t0, t1, bytes=len(body))
             headers = {TRACE_HEADER: tr.trace_id} if tr.enabled else None
-            resp = self._request("POST", "/v1/analyze", body, headers)
+            resp = self._request("POST", path, body, headers)
             payload = resp.read()
             tr.add("client.wire", t1, time.monotonic(),
                    status=resp.status)
@@ -214,7 +239,8 @@ class YCHGClient:
             if resp.status != 200:
                 raise FrontendError(payload.decode(errors="replace"),
                                     resp.status)
-            return protocol.decode_result(json.loads(payload)["result"])
+            return protocol.decode_result(json.loads(payload)["result"],
+                                          wire_op)
         finally:
             tr.finish()
 
@@ -325,11 +351,27 @@ class AsyncRPCClient:
 
     _call = call   # pre-fleet internal name, kept for callers/tests
 
-    async def analyze(self, mask: np.ndarray) -> Dict[str, np.ndarray]:
-        resp = await self._call(
-            {"op": "analyze", "mask": protocol.encode_array(np.asarray(mask))})
+    async def analyze(self, mask: np.ndarray, *,
+                      op: Optional[str] = None) -> Dict[str, np.ndarray]:
+        frame: Dict[str, Any] = {
+            "op": "analyze", "mask": protocol.encode_array(np.asarray(mask))}
+        if op is not None:
+            frame["opname"] = op
+        resp = await self._call(frame)
+        return self._unwrap(resp, op or "ychg")
+
+    async def pipeline(self, mask: np.ndarray,
+                       stages: Sequence[str]) -> Dict[str, np.ndarray]:
+        stages = [str(s) for s in stages]
+        resp = await self._call({
+            "op": "pipeline", "stages": stages,
+            "mask": protocol.encode_array(np.asarray(mask))})
+        return self._unwrap(resp, stages[-1] if stages else "ychg")
+
+    @staticmethod
+    def _unwrap(resp: Dict[str, Any], wire_op: str) -> Dict[str, np.ndarray]:
         if "result" in resp:
-            return protocol.decode_result(resp["result"])
+            return protocol.decode_result(resp["result"], wire_op)
         status = int(resp.get("status", 500))
         if status == 429:
             raise FrontendOverloaded(resp.get("error", "overloaded"),

@@ -30,6 +30,27 @@ import numpy as np
 RESULT_FIELDS = ("runs", "cut_vertices", "transitions", "births", "deaths",
                  "n_hyperedges", "n_transitions")
 
+# Per-op result fields. yCHG keeps RESULT_FIELDS (its wire format is
+# byte-for-byte what it was before the multi-op refactor); each new op
+# lists its own ``to_host()`` keys in canonical order. A pipeline key
+# ("denoise+ychg") answers with its terminal stage's fields.
+OP_RESULT_FIELDS = {
+    "ychg": RESULT_FIELDS,
+    "ccl": ("labels", "n_components"),
+    "denoise": ("image",),
+}
+
+
+def result_fields(op: str) -> tuple:
+    """The wire fields for an op (or ``"+"``-joined pipeline) key."""
+    terminal = op.rsplit("+", 1)[-1]
+    try:
+        return OP_RESULT_FIELDS[terminal]
+    except KeyError:
+        raise ProtocolError(
+            f"unknown op {op!r} on the wire; known ops: "
+            f"{sorted(OP_RESULT_FIELDS)}") from None
+
 # one RPC frame's maximum payload: far above any bucket-ladder mask or
 # result, far below anything that could balloon a peer's memory
 MAX_FRAME_BYTES = 64 * 1024 * 1024
@@ -88,16 +109,21 @@ def decode_array(d: Dict[str, Any]) -> np.ndarray:
 # ----------------------------------------------------------- result codec
 
 
-def encode_result(result: Any) -> Dict[str, Any]:
-    """A ``YCHGResult`` (or host dict of its fields) as encoded arrays."""
+def encode_result(result: Any, op: str = "ychg") -> Dict[str, Any]:
+    """An op result pytree (or host dict of its fields) as encoded arrays.
+
+    The default ``op="ychg"`` keeps every pre-multi-op call site and wire
+    payload unchanged.
+    """
     host = result if isinstance(result, dict) else result.to_host()
-    return {f: encode_array(np.asarray(host[f])) for f in RESULT_FIELDS}
+    return {f: encode_array(np.asarray(host[f])) for f in result_fields(op)}
 
 
-def decode_result(d: Dict[str, Any]) -> Dict[str, np.ndarray]:
+def decode_result(d: Dict[str, Any],
+                  op: str = "ychg") -> Dict[str, np.ndarray]:
     """Inverse of :func:`encode_result`: the ``to_host()``-shaped dict."""
     try:
-        return {f: decode_array(d[f]) for f in RESULT_FIELDS}
+        return {f: decode_array(d[f]) for f in result_fields(op)}
     except KeyError as e:
         raise ProtocolError(f"result payload missing field {e}") from e
 

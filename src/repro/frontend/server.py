@@ -19,7 +19,15 @@ Endpoints (HTTP/1.1, keep-alive, loopback-friendly):
   ``GET  /healthz``           liveness + resolved backend + queue depth
   ``GET  /metrics``           ``ServiceMetrics`` in Prometheus text format
                               (per-bucket shed counters included)
-  ``POST /v1/analyze``        one mask -> one JSON result
+  ``POST /v1/{op}``           one mask -> one JSON result for any
+                              registered op (``/v1/ychg``, ``/v1/ccl``,
+                              ``/v1/denoise``); an unknown op answers 404
+                              JSON naming the registered ops
+  ``POST /v1/analyze``        kept alias for ``/v1/ychg`` (the pre-multi-op
+                              route, byte-identical responses)
+  ``POST /v1/pipeline``       ``{"mask": ..., "stages": [op, ...]}`` -> the
+                              terminal stage's result, computed
+                              device-resident end to end
   ``POST /v1/analyze_batch``  masks -> chunked NDJSON, one line per result
                               **in completion order** (a slow mask never
                               blocks the lines behind it; shed masks get
@@ -50,6 +58,7 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.engine import registry
+from repro.engine.ops import op_names
 from repro.frontend import protocol
 from repro.obs import PromBuilder, maybe_trace, recorder
 from repro.service import ServiceOverloaded, YCHGService
@@ -155,15 +164,20 @@ class FrontendServer:
 
     # ----------------------------------------------------- service bridging
 
-    async def _submit(self, mask, trace=None) -> Any:
+    async def _submit(self, mask, trace=None, op=None, stages=None) -> Any:
         """submit on the executor (a "block" park never blocks the loop),
         then await the service future on the loop. ``trace`` joins the
         service's stage spans to this request's trace (the frontend stays
-        the finisher)."""
+        the finisher). ``op`` selects a single operator; ``stages`` an
+        ordered pipeline (mutually exclusive with ``op``)."""
         loop = asyncio.get_running_loop()
-        cf = await loop.run_in_executor(
-            self._pool,
-            functools.partial(self.service.submit, mask, trace=trace))
+        if stages is not None:
+            fn = functools.partial(self.service.submit_pipeline, mask,
+                                   stages, trace=trace)
+        else:
+            fn = functools.partial(self.service.submit, mask, op=op,
+                                   trace=trace)
+        cf = await loop.run_in_executor(self._pool, fn)
         return await asyncio.wrap_future(cf)
 
     def _overload_body(self, exc: Exception) -> Tuple[Dict[str, Any], float]:
@@ -238,10 +252,22 @@ class FrontendServer:
                                recorder().to_chrome_json().encode(),
                                "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
+                # kept alias: the pre-multi-op route is exactly /v1/ychg
                 await self._http_analyze(body, writer, keep, trace_id)
             elif method == "POST" and target == "/v1/analyze_batch":
                 await self._http_analyze_batch(body, writer, trace_id)
                 keep = False   # chunked stream ends the exchange
+            elif method == "POST" and target == "/v1/pipeline":
+                await self._http_pipeline(body, writer, keep, trace_id)
+            elif method == "POST" and target.startswith("/v1/"):
+                opname = target[len("/v1/"):]
+                if opname in op_names():
+                    await self._http_analyze(body, writer, keep, trace_id,
+                                             op=opname)
+                else:
+                    await _respond_json(writer, 404, {
+                        "error": f"unknown op {opname!r}",
+                        "ops": list(op_names())}, keep)
             else:
                 await _respond_json(writer, 404, {
                     "error": f"no route for {method} {target}"}, keep)
@@ -259,8 +285,8 @@ class FrontendServer:
         return keep
 
     async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
-                            keep: bool,
-                            trace_id: Optional[str] = None) -> None:
+                            keep: bool, trace_id: Optional[str] = None,
+                            op: Optional[str] = None) -> None:
         tr = maybe_trace(trace_id, process="frontend")
         try:
             t0 = time.monotonic()
@@ -269,7 +295,7 @@ class FrontendServer:
             tr.add("frontend.parse", t0, time.monotonic(),
                    bytes=len(body))
             try:
-                result = await self._submit(mask, tr)
+                result = await self._submit(mask, tr, op=op)
             except ServiceOverloaded as e:
                 out, retry = self._overload_body(e)
                 await _respond_json(
@@ -279,11 +305,46 @@ class FrontendServer:
             await _respond_json(
                 writer, 200,
                 {"id": payload.get("id"),
-                 "result": protocol.encode_result(result)},
+                 "result": protocol.encode_result(
+                     result, op or self.service.engine.op)},
                 keep)
         finally:
             # the frontend created this trace (possibly adopting the
             # client's id), so the frontend finishes it — on every path
+            tr.finish()
+
+    async def _http_pipeline(self, body: bytes, writer: asyncio.StreamWriter,
+                             keep: bool,
+                             trace_id: Optional[str] = None) -> None:
+        """One mask through an ordered op chain; answers with the terminal
+        stage's result fields. Spec errors (unknown op, terminal op mid-
+        chain, empty stage list) come back 400 via the route's ValueError
+        handler."""
+        tr = maybe_trace(trace_id, process="frontend")
+        try:
+            t0 = time.monotonic()
+            payload = json.loads(body)
+            stages = payload.get("stages")
+            if (not isinstance(stages, list) or
+                    not all(isinstance(s, str) for s in stages)):
+                raise protocol.ProtocolError(
+                    "'stages' must be a list of op names")
+            mask = protocol.decode_array(payload["mask"])
+            tr.add("frontend.parse", t0, time.monotonic(), bytes=len(body))
+            try:
+                result = await self._submit(mask, tr, stages=stages)
+            except ServiceOverloaded as e:
+                out, retry = self._overload_body(e)
+                await _respond_json(
+                    writer, 429, out, keep,
+                    extra=[("Retry-After", str(max(1, math.ceil(retry))))])
+                return
+            await _respond_json(
+                writer, 200,
+                {"id": payload.get("id"),
+                 "result": protocol.encode_result(result, stages[-1])},
+                keep)
+        finally:
             tr.finish()
 
     async def _http_analyze_batch(self, body: bytes,
@@ -399,9 +460,10 @@ class FrontendServer:
                     "per-stage request timing (docs/observability.md)")
         b.histogram(
             "ychg_engine_dispatch_seconds",
-            [((("backend", name),), snap) for name, snap in
+            [((("op", op), ("backend", name)), snap)
+             for (op, name), snap in
              sorted(registry.dispatch_seconds().items())],
-            "synchronous engine dispatch cost per backend")
+            "synchronous engine dispatch cost per (op, backend)")
         return b.render()
 
     # -------------------------------------------------------------- RPC side
@@ -416,15 +478,18 @@ class FrontendServer:
         rid = frame.get("id")
         try:
             skey = bytes.fromhex(frame["key"])
-        except (KeyError, TypeError, ValueError) as e:
-            return {"id": rid, "error": f"bad cache_probe key: {e}",
+            fields = protocol.result_fields(
+                str(frame.get("opname", "ychg")))
+        except (KeyError, TypeError, ValueError,
+                protocol.ProtocolError) as e:
+            return {"id": rid, "error": f"bad cache_probe frame: {e}",
                     "status": 400}
         entry = self.service.cache.probe_serialized(skey)
         if entry is None:
             return {"id": rid, "hit": False}
         return {"id": rid, "hit": True, "result": {
             f: protocol.encode_array(np.asarray(getattr(entry, f)))
-            for f in protocol.RESULT_FIELDS}}
+            for f in fields}}
 
     def _set_peers(self, frame: Dict[str, Any]) -> Dict[str, Any]:
         """Point this worker's cache at its siblings ([host, rpc_port]
@@ -460,13 +525,27 @@ class FrontendServer:
             rid = frame.get("id")
             # the RPC frame's "trace" field is the fleet's propagation
             # seam: a router puts its trace id here and this worker's
-            # spans join the router's trace
+            # spans join the router's trace. "opname" selects the
+            # operator (the frame key "op" is already the RPC verb);
+            # "stages" instead runs an ordered pipeline.
             tr = maybe_trace(frame.get("trace") or None, process="worker")
             try:
                 t0 = time.monotonic()
+                opname = frame.get("opname")
+                stages = frame.get("stages")
+                if opname is not None and opname not in op_names():
+                    await send({"id": rid,
+                                "error": f"unknown op {opname!r}",
+                                "ops": list(op_names()), "status": 404})
+                    return
                 mask = protocol.decode_array(frame["mask"])
                 tr.add("frontend.parse", t0, time.monotonic())
-                result = await self._submit(mask, tr)
+                if stages is not None:
+                    result = await self._submit(mask, tr, stages=stages)
+                    wire_op = str(stages[-1])
+                else:
+                    result = await self._submit(mask, tr, op=opname)
+                    wire_op = opname or self.service.engine.op
             except ServiceOverloaded as e:
                 out, _ = self._overload_body(e)
                 out["id"] = rid
@@ -481,7 +560,7 @@ class FrontendServer:
             finally:
                 tr.finish()
             await send({"id": rid,
-                        "result": protocol.encode_result(result)})
+                        "result": protocol.encode_result(result, wire_op)})
 
         try:
             while True:
@@ -493,7 +572,14 @@ class FrontendServer:
                 if frame is None:
                     break
                 op = frame.get("op")
-                if op == "analyze":
+                if op in ("analyze", "pipeline"):
+                    # "pipeline" is "analyze" with a required stages list;
+                    # both demux by id and share the in-flight discipline
+                    if op == "pipeline" and not frame.get("stages"):
+                        await send({"id": frame.get("id"),
+                                    "error": "pipeline needs a non-empty "
+                                             "'stages' list", "status": 400})
+                        continue
                     t = asyncio.ensure_future(run_analyze(frame))
                     tasks.add(t)
                     t.add_done_callback(tasks.discard)

@@ -2,10 +2,10 @@
 the yCHG column scan (step 1) and neighbour diff (step 2).
 
 These kernels are *backends*, not entry points: the canonical public API is
-``repro.engine.YCHGEngine``, where they register as ``"fused"`` (single
+``repro.engine.Engine``, where they register as ``"fused"`` (single
 launch, batched, mesh-capable) and ``"pallas"`` (two-pass) with capability
 flags that drive ``backend="auto"`` dispatch. Call
-``YCHGEngine(YCHGConfig(backend="fused")).analyze_batch(stack)`` rather
+``Engine(YCHGConfig(backend="fused")).analyze_batch(stack)`` rather
 than ``ops.analyze_fused`` directly — the engine keeps results
 device-resident, applies the VMEM streaming threshold from its config, and
 composes with batch sharding (a mesh attached to the engine shard_maps the

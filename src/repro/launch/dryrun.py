@@ -249,10 +249,10 @@ def run_ychg_cells(out_dir: str, max_res: int = 2000) -> int:
     cell. Returns the number of failed cells.
     """
     from repro.configs.ychg_modis import config as ychg_config
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
 
     wl = ychg_config()
-    engine = YCHGEngine(wl.engine.to_engine_config(backend="jax"))
+    engine = Engine(wl.engine.to_engine_config(backend="jax"))
     os.makedirs(out_dir, exist_ok=True)
     n_fail = 0
     for res in [r for r in wl.resolutions if r <= max_res]:

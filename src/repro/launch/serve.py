@@ -56,9 +56,22 @@ def serve_lm(args):
           f"({out.tokens.size / dt:.1f} tok/s)")
 
 
+# one human-readable scalar per op for the workload's per-tile report
+_OP_STAT_NAME = {"ychg": "hyperedges", "ccl": "components",
+                 "denoise": "mean"}
+
+
+def _op_stat(op, out):
+    if op == "ychg":
+        return int(np.asarray(out.n_hyperedges)[0])
+    if op == "ccl":
+        return int(np.asarray(out.n_components).reshape(-1)[0])
+    return round(float(np.asarray(out.image).mean()), 4)
+
+
 def serve_ychg(args):
     """The paper's image-analysis workload behind the production service:
-    requests batch through YCHGService -> YCHGEngine (not the legacy
+    requests batch through YCHGService -> Engine (not the legacy
     core.ychg.analyze_jit call). Three timed passes separate the costs:
     cold (includes backend compile), warm (steady-state compute on fresh
     masks), cached (repeat traffic served from the result cache). With
@@ -66,19 +79,22 @@ def serve_ychg(args):
     (overload_policy="shed") and reports the shed rate — the admission
     control path CI smoke-checks."""
     from repro.data import modis
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.service import ServiceConfig, ServiceOverloaded, YCHGService
+
+    op = args.op
 
     def timed_pass(svc, masks):
         t0 = time.perf_counter()
-        outs = [f.result(timeout=600) for f in [svc.submit(m) for m in masks]]
+        outs = [f.result(timeout=600)
+                for f in [svc.submit(m, op=op) for m in masks]]
         return time.perf_counter() - t0, outs
 
     masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
     fresh = [modis.snowfield(args.res, seed=args.batch + s)
              for s in range(args.batch)]
     px = args.batch * args.res * args.res
-    engine = YCHGEngine()
+    engine = Engine()
     cfg = ServiceConfig(bucket_sides=(args.res,), max_batch=args.batch)
     with YCHGService(engine, cfg) as svc:
         t_cold, outs = timed_pass(svc, masks)       # compiles the bucket shape
@@ -89,15 +105,16 @@ def serve_ychg(args):
     # the cached pass's own hit rate (lifetime m.hit_rate would dilute it
     # with the cold/warm passes' unavoidable misses)
     cached_hit_rate = (m.cache_hits - before_cached.cache_hits) / args.batch
-    edges = [int(np.asarray(o.n_hyperedges)[0]) for o in outs]
-    print(f"yCHG service[{m.backend}]: {args.batch} x {args.res}^2 masks")
+    edges = [_op_stat(op, o) for o in outs]
+    print(f"{op} service[{m.backend}]: {args.batch} x {args.res}^2 masks")
     print(f"  cold  {t_cold * 1e3:8.1f}ms (includes compile)")
     print(f"  warm  {t_warm * 1e3:8.1f}ms ({px / t_warm / 1e6:.0f} Mpx/s)")
     print(f"  cached{t_cached * 1e3:8.1f}ms "
           f"({px / t_cached / 1e6:.0f} Mpx/s, hit rate {cached_hit_rate:.0%})")
     print(f"  p50 {m.p50_latency_ms:.1f}ms p95 {m.p95_latency_ms:.1f}ms over "
           f"{m.completed} requests ({m.completed_from_cache} from cache) "
-          f"in {m.batches} device batches; hyperedges per tile: {edges}")
+          f"in {m.batches} device batches; {_OP_STAT_NAME[op]} per tile: "
+          f"{edges}")
     if args.overload:
         # admission control under a deliberate burst: a bounded queue with
         # overload_policy="shed" fails the excess fast instead of letting
@@ -152,14 +169,14 @@ def _service_config(args, **overrides):
 def serve_listen(args):
     """Serve the ROI service over loopback/network HTTP (+ optional RPC)
     until interrupted — the production front end behind a CLI flag."""
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.frontend import ServerThread
     from repro.service import YCHGService
 
     host, port = _parse_hostport(args.listen)
     rpc_port = (_parse_hostport(args.rpc_listen)[1]
                 if args.rpc_listen else None)
-    with YCHGService(YCHGEngine(), _service_config(args)) as svc:
+    with YCHGService(Engine(), _service_config(args)) as svc:
         with ServerThread(svc, host=host, port=port,
                           rpc_port=rpc_port) as srv:
             extra = (f" (rpc on {host}:{srv.rpc_port})"
@@ -220,13 +237,13 @@ def frontend_smoke(args):
     Exits nonzero on any failure — the frontend-smoke CI job runs this.
     """
     from repro.data import modis
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.frontend import FrontendOverloaded, ServerThread, YCHGClient
     from repro.obs import base_family, parse_prom_text
     from repro.service import YCHGService
 
     masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
-    engine = YCHGEngine()
+    engine = Engine()
     with YCHGService(engine, _service_config(args)) as svc, \
             ServerThread(svc) as srv, \
             YCHGClient("127.0.0.1", srv.port) as client:
@@ -347,6 +364,103 @@ def frontend_smoke(args):
           "per-bucket shed counter moved")
 
 
+def op_smoke(args):
+    """CI end-to-end assert for the multi-op platform over loopback HTTP:
+
+      1. **per-op bit-identity** — for every registered op, one request
+         over ``POST /v1/{op}`` is BIT-IDENTICAL (values, dtypes, shapes)
+         to the op's in-repo reference function on the same input;
+      2. **pipeline == separate requests** — one ``POST /v1/pipeline``
+         compound request (denoise -> ychg, device-resident between
+         stages) equals feeding stage 1's wire output back as stage 2's
+         request, field for field;
+      3. **routing** — an unknown op answers 404 JSON naming the
+         registered ops, and ``/metrics`` exports the dispatch histogram
+         with one ``op=`` label per op served.
+
+    Exits nonzero on any failure — the op-smoke CI job runs this.
+    """
+    import json as _json
+
+    import jax.numpy as jnp
+
+    from repro.data import modis
+    from repro.engine import Engine
+    from repro.engine.ops import get_op, op_names
+    from repro.frontend import FrontendError, ServerThread, YCHGClient
+    from repro.service import ServiceConfig, YCHGService
+
+    rng = np.random.default_rng(11)
+    inputs = {
+        "ychg": modis.snowfield(args.res, seed=0),
+        "ccl": modis.snowfield(args.res, seed=1),
+        "denoise": rng.random((args.res, args.res)).astype(np.float32),
+    }
+    cfg = ServiceConfig(bucket_sides=(args.res,), max_batch=args.batch)
+    with YCHGService(Engine(), cfg) as svc, \
+            ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        client.wait_ready(timeout=120.0)
+        for op in sorted(op_names()):
+            x = inputs[op]
+            got = client.analyze(x, op=op)
+            spec = get_op(op)
+            # masks fill their bucket exactly (res == bucket side), so the
+            # service's crop is the identity and the wire result must equal
+            # the reference, rendered in the single-request (batched=False)
+            # layout the service serves
+            want = spec.from_summary(
+                spec.reference(jnp.asarray(x)[None]), False).to_host()
+            for field, arr in want.items():
+                a, b = np.asarray(arr), got[field]
+                if not (np.array_equal(a, b) and a.dtype == b.dtype
+                        and a.shape == b.shape):
+                    raise SystemExit(
+                        f"op smoke [{op}]: field {field!r} not bit-identical "
+                        f"to the in-repo reference over the wire")
+            print(f"op smoke: /v1/{op} bit-identical to its reference",
+                  flush=True)
+
+        # pipeline leg: the compound request vs its stages as separate
+        # wire requests — the device-resident chain must be bit-exact
+        img = inputs["denoise"]
+        compound = client.pipeline(img, ["denoise", "ychg"])
+        stage1 = client.analyze(img, op="denoise")
+        stage2 = client.analyze(stage1["image"], op="ychg")
+        for field, arr in stage2.items():
+            a, b = np.asarray(arr), compound[field]
+            if not (np.array_equal(a, b) and a.dtype == b.dtype
+                    and a.shape == b.shape):
+                raise SystemExit(
+                    f"op smoke [pipeline]: field {field!r} of the compound "
+                    f"denoise+ychg request differs from separate requests")
+        print("op smoke: /v1/pipeline denoise+ychg == the stages issued as "
+              "separate requests", flush=True)
+
+        # routing leg: unknown op -> 404 JSON naming the registry
+        try:
+            client.analyze(inputs["ychg"], op="warp")
+            raise SystemExit("op smoke: unknown op answered 200")
+        except FrontendError as e:
+            if e.status != 404:
+                raise SystemExit(
+                    f"op smoke: unknown op answered {e.status}, wanted 404")
+            body = _json.loads(str(e))
+            if sorted(body.get("ops", [])) != sorted(op_names()):
+                raise SystemExit(
+                    f"op smoke: 404 body named ops {body.get('ops')}, "
+                    f"wanted {sorted(op_names())}")
+        metrics = client.metrics_text()
+        for op in op_names():
+            needle = f'ychg_engine_dispatch_seconds_count{{op="{op}"'
+            if needle not in metrics:
+                raise SystemExit(
+                    f"op smoke: dispatch histogram missing an op={op!r} "
+                    f"series after serving it")
+        print("op smoke: unknown op answered 404 naming the registry; "
+              "dispatch histogram carries one op= label per op", flush=True)
+
+
 def _worker_args(args):
     """Worker-CLI knobs mirroring this invocation's service knobs."""
     wa = ["--buckets", args.buckets if args.buckets else str(args.res),
@@ -422,7 +536,7 @@ def fleet_smoke(args):
     import asyncio
 
     from repro.data import modis
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.fleet import (
         FleetRouter,
         FleetSupervisor,
@@ -448,7 +562,7 @@ def fleet_smoke(args):
                                  f"not bit-identical through the router")
 
     masks = [modis.snowfield(args.res, seed=s) for s in range(args.batch)]
-    with YCHGService(YCHGEngine(), _service_config(args)) as svc:
+    with YCHGService(Engine(), _service_config(args)) as svc:
         want = [svc.submit(m).result(timeout=600).to_host() for m in masks]
 
     sup = FleetSupervisor(2, worker_args=_worker_args(args))
@@ -574,7 +688,7 @@ def scene_run(args):
     output files come out byte-identical to an uninterrupted run."""
     import signal
 
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.scene import BulkJob, BulkJobConfig, SceneProgress
 
     manifest = _scene_manifest(args)
@@ -582,7 +696,7 @@ def scene_run(args):
                         tile_h=args.tile_h, stack_tiles=args.stack,
                         checkpoint_every=args.checkpoint_every)
     progress = SceneProgress()
-    job = BulkJob(YCHGEngine(), manifest, cfg, progress=progress)
+    job = BulkJob(Engine(), manifest, cfg, progress=progress)
     stop = threading.Event()
     for sig in (signal.SIGTERM, signal.SIGINT):
         signal.signal(sig, lambda *_: stop.set())
@@ -637,7 +751,7 @@ def scene_smoke(args):
     import warnings
 
     from repro.data import scenes
-    from repro.engine import YCHGEngine
+    from repro.engine import Engine
     from repro.frontend import ServerThread, YCHGClient
     from repro.scene import (
         BulkJob,
@@ -651,7 +765,7 @@ def scene_smoke(args):
     )
     from repro.service import ServiceConfig, YCHGService
 
-    engine = YCHGEngine()
+    engine = Engine()
 
     # leg 1: stitch bit-identity, ragged last strip (45 = 3*16 - 3)
     h, w, tile_h = 45, args.res, 16
@@ -776,6 +890,14 @@ def main():
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--res", type=int, default=1024)
+    ap.add_argument("--op", default="ychg",
+                    choices=["ychg", "ccl", "denoise"],
+                    help="ychg workload only: which registered operator "
+                         "the --workload/smoke masks run through")
+    ap.add_argument("--op-smoke", action="store_true",
+                    help="ychg only: multi-op loopback assert (per-op wire "
+                         "bit-identity vs reference, pipeline == separate "
+                         "requests, 404 on unknown op)")
     ap.add_argument("--overload", action="store_true",
                     help="ychg only: add a bounded-queue overload pass and "
                          "fail unless admission control sheds")
@@ -857,6 +979,8 @@ def main():
         fleet_smoke(args)
     elif args.fleet:
         serve_fleet(args)
+    elif args.op_smoke:
+        op_smoke(args)
     elif args.frontend_smoke:
         frontend_smoke(args)
     elif args.listen:

@@ -4,7 +4,7 @@ The offline/bulk counterpart of :mod:`repro.service`: where the service
 micro-batches many small independent masks, this package takes scenes too
 large for one device call, windows them into overlap-free tile rows
 (:class:`GranuleReader`), streams tile stacks through a
-:class:`repro.engine.YCHGEngine` (mesh-aware, double-buffered), and
+:class:`repro.engine.Engine` (mesh-aware, double-buffered), and
 stitches per-tile outputs into a whole-scene result **bit-identical** to
 analysing the unsplit scene (:class:`SceneRunner`). :class:`BulkJob` runs
 a manifest of granules as a resumable batch job: progress is checkpointed

@@ -34,7 +34,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.checkpoint import Checkpointer
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.obs import NULL_TRACE, maybe_trace
 from repro.scene.granule import GranuleReader, GranuleSpec
 from repro.scene.result import write_scene_result
@@ -88,7 +88,7 @@ class BulkJobReport:
 class BulkJob:
     """Run a granule manifest to completion, resumably."""
 
-    def __init__(self, engine: Optional[YCHGEngine],
+    def __init__(self, engine: Optional[Engine],
                  manifest: Sequence[GranuleSpec], config: BulkJobConfig, *,
                  progress: Optional[SceneProgress] = None):
         if not manifest:

@@ -22,7 +22,7 @@ call — dtypes included.
 The runner streams (stack_tiles, tile_h, W) stacks through
 ``engine.analyze_stream`` (strip ingest overlaps device compute); when the
 engine carries a mesh, each stack is shard_mapped across its devices —
-``YCHGEngine._run_meshed`` already pads ragged stacks, so the runner does
+``Engine._run_meshed`` already pads ragged stacks, so the runner does
 not care. Inside each strip, tall tiles past the VMEM budget take the
 kernel's own streamed carry-row variant via the engine's existing
 heuristic. State between stacks is three small host arrays
@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ychg
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.obs import maybe_trace
 from repro.scene.granule import GranuleReader
 from repro.scene.result import SceneResult
@@ -171,11 +171,11 @@ class SceneRunner:
     ``(stack_tiles, tile_h, W)`` device computation.
     """
 
-    def __init__(self, engine: Optional[YCHGEngine] = None, *,
+    def __init__(self, engine: Optional[Engine] = None, *,
                  stack_tiles: int = DEFAULT_STACK_TILES):
         if stack_tiles < 1:
             raise ValueError(f"stack_tiles must be >= 1, got {stack_tiles}")
-        self.engine = engine if engine is not None else YCHGEngine()
+        self.engine = engine if engine is not None else Engine()
         self.stack_tiles = stack_tiles
 
     # -- incremental API (what BulkJob drives) ------------------------------

@@ -1,22 +1,26 @@
-"""`repro.service` — the batching, caching yCHG ROI service.
+"""`repro.service` — the batching, caching multi-op image service.
 
-`repro.engine.YCHGEngine` answers "how do I run the two-step algorithm on
-this array"; this package answers "how do I serve it": single-mask requests
-coalesce through a micro-batching scheduler into shape-bucketed stacks
-padded to a power-of-two **sub-batch ladder** (a lone request pays for one
-image, not ``max_batch``; compiled shapes stay bounded at
-``len(bucket_sides) * (log2(max_batch) + 1)`` per dtype), behind a
-content-addressed LRU result cache (a hit never invokes a backend), over a
-double-buffered dispatch loop (ingest of bucket n+1 overlaps device compute
-of bucket n). ``max_queue_depth`` + ``overload_policy`` add admission
-control: past the bound, ``submit`` blocks (backpressure) or raises
+`repro.engine.Engine` answers "how do I run operator X on this array";
+this package answers "how do I serve it": single-mask requests (for any
+registered op — yCHG first, plus ``ccl``, ``denoise``, and ordered
+``submit_pipeline`` chains) coalesce through a micro-batching scheduler
+into ``(op, side, dtype)``-bucketed stacks padded to a power-of-two
+**sub-batch ladder** (a lone request pays for one image, not
+``max_batch``; compiled shapes stay bounded at ``len(bucket_sides) *
+(log2(max_batch) + 1)`` per (op, dtype)), behind a content-addressed LRU
+result cache whose keys carry the op (a hit never invokes a backend, and
+two ops never alias on one mask), over a double-buffered dispatch loop
+(ingest of bucket n+1 overlaps device compute of bucket n).
+``max_queue_depth`` + ``overload_policy`` add admission control: past the
+bound, ``submit`` blocks (backpressure) or raises
 :class:`ServiceOverloaded` (shed), with shed/blocked counters in
 :class:`ServiceMetrics`. Admission and dispatch are bucket-FAIR:
-``bucket_queue_depth`` bounds each ``(side, dtype)`` bucket separately
+``bucket_queue_depth`` bounds each ``(op, side, dtype)`` bucket separately
 (per-bucket shed counters in ``ServiceMetrics.shed_by_bucket``) and ready
-buckets flush deficit-round-robin, so one hot resolution can neither
-starve nor shed everyone else's traffic. The network edge over this
-package lives in :mod:`repro.frontend`.
+buckets flush deficit-round-robin with per-op quanta
+(``ServiceConfig.op_max_batch``), so one hot resolution — or one hot
+operator — can neither starve nor shed everyone else's traffic. The
+network edge over this package lives in :mod:`repro.frontend`.
 
     from repro.service import ServiceConfig, YCHGService
 
@@ -33,7 +37,12 @@ scheduler's policy logic is additionally unit-tested engine-free in
 ``tests/test_scheduler.py``).
 """
 
-from repro.service.batching import crop_result, pad_stack, pick_bucket_side
+from repro.service.batching import (
+    crop_for,
+    crop_result,
+    pad_stack,
+    pick_bucket_side,
+)
 from repro.service.cache import ResultCache, make_key
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
 from repro.service.scheduler import (
@@ -43,17 +52,19 @@ from repro.service.scheduler import (
     pick_sub_batch,
     sub_batch_ladder,
 )
-from repro.service.service import ServiceConfig, YCHGService
+from repro.service.service import Service, ServiceConfig, YCHGService
 
 __all__ = [
     "MetricsRecorder",
     "ResultCache",
     "Scheduler",
     "SchedulerConfig",
+    "Service",
     "ServiceConfig",
     "ServiceMetrics",
     "ServiceOverloaded",
     "YCHGService",
+    "crop_for",
     "crop_result",
     "make_key",
     "pad_stack",

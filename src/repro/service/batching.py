@@ -8,7 +8,9 @@ rung covering its occupancy (``scheduler.pick_sub_batch``, capped at
 ``{(b, side, side) : b in sub_batch_ladder(max_batch), (side, dtype) seen}``
 — traffic cannot trigger recompiles, only config can.
 
-Why crop-back is bit-exact (this is the invariant the parity suite pins):
+Why crop-back is bit-exact for yCHG (this is the invariant the parity
+suite pins; ccl/denoise make their own padding-inertness arguments in
+their kernel modules and get (H, W) crops below):
 every yCHG output is per-*column* — ``runs[j]`` counts rising edges down
 column j, and the step-2 signals at column j depend only on columns j-1 and
 j. Zero rows appended below a column add no rising edge, so padded rows
@@ -31,11 +33,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.engine.engine import YCHGResult, _from_summary
+from repro.engine.ops import CCLResult, DenoiseResult, split_pipeline_key
 from repro.core.ychg import YCHGSummary
 
-# A bucket is (side, dtype name): masks only stack with their own dtype, so
-# each dtype seen in traffic gets its own ladder of sides.
-Bucket = Tuple[int, str]
+# A bucket is (op key, side, dtype name): masks only stack with their own
+# dtype AND their own operator (a pipeline spec like "denoise+ychg" is its
+# own op key), so each (op, dtype) seen in traffic gets its own ladder of
+# sides.
+Bucket = Tuple[str, int, str]
 
 
 def pick_bucket_side(shape: Tuple[int, int], sides: Sequence[int]) -> int:
@@ -99,3 +104,60 @@ def crop_result(batched: YCHGResult, row: int, width: int) -> YCHGResult:
     out = _crop_row(batched.runs, batched.cut_vertices, batched.transitions,
                     batched.births, batched.deaths, row, width=width)
     return _from_summary(YCHGSummary(*out), batched=False)
+
+
+# ------------------------------------------------------- per-op crop-back
+#
+# yCHG's outputs are per-column, so its crop only needs the native width.
+# ccl/denoise return full (H, W) canvases, so their crops slice both axes.
+# Both are pad-invariant by construction (kernels.ccl / kernels.denoise
+# document the argument), so slicing IS the exact single-image answer —
+# for ccl that includes n_components, because zero padding never starts a
+# component and canonical re-ranking follows native row-major order.
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w"))
+def _crop_ccl(labels, n_components, row, *, h: int, w: int):
+    lab = jax.lax.dynamic_slice_in_dim(labels, row, 1, axis=0)[:, :h, :w]
+    n = jax.lax.dynamic_slice_in_dim(n_components, row, 1, axis=0)
+    return lab, n
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w"))
+def _crop_image(image, row, *, h: int, w: int):
+    return jax.lax.dynamic_slice_in_dim(image, row, 1, axis=0)[:, :h, :w]
+
+
+def _crop_ychg_op(batched: YCHGResult, row: int,
+                  shape: Tuple[int, int]) -> YCHGResult:
+    return crop_result(batched, row, shape[1])
+
+
+def _crop_ccl_op(batched: CCLResult, row: int,
+                 shape: Tuple[int, int]) -> CCLResult:
+    lab, n = _crop_ccl(batched.labels, batched.n_components, row,
+                       h=shape[0], w=shape[1])
+    return CCLResult(labels=lab, n_components=n, batched=False)
+
+
+def _crop_denoise_op(batched: DenoiseResult, row: int,
+                     shape: Tuple[int, int]) -> DenoiseResult:
+    img = _crop_image(batched.image, row, h=shape[0], w=shape[1])
+    return DenoiseResult(image=img, batched=False)
+
+
+_CROPS = {
+    "ychg": _crop_ychg_op,
+    "ccl": _crop_ccl_op,
+    "denoise": _crop_denoise_op,
+}
+
+
+def crop_for(op_key: str):
+    """The crop-back for an op (or pipeline key — its terminal stage).
+
+    Returns ``(batched_result, row, (h, w)) -> B=1 unbatched result``.
+    Raises ``KeyError`` for an op without a registered crop — adding one
+    is part of the new-op checklist in ``docs/ops.md``.
+    """
+    return _CROPS[split_pipeline_key(op_key)[-1]]

@@ -1,8 +1,9 @@
-"""Content-addressed LRU result cache for the yCHG service.
+"""Content-addressed LRU result cache for the image-operator service.
 
 The key is a pure function of everything that determines the answer:
 
-  (blake2b(mask bytes), shape, dtype, resolved backend name, engine config)
+  (blake2b(mask bytes), shape, dtype, resolved backend name, engine config,
+   mesh, op)
 
 Shape and dtype are part of the key because the raw byte string does not
 determine them — the same 32 bytes are a (4, 8) or an (8, 4) mask, and an
@@ -10,12 +11,14 @@ int8 view of a uint8 buffer is a different request even though the bytes
 match. Backend and config are part of the key because the service promises
 results identical to ``engine.analyze`` under *that* engine's policy; two
 services with different policies may share one cache without ever serving
-each other's entries.
+each other's entries. ``op`` is part of the key because the same mask
+under a different operator (or an ordered pipeline of operators, keyed as
+``"denoise+ychg"``) is a different answer entirely.
 
-Values are device-resident ``YCHGResult`` objects (immutable pytrees), so a
-hit returns the exact cached object — no copy, no host round-trip, and
-crucially no backend invocation (``tests/test_service.py`` asserts this via
-the registry call counters).
+Values are device-resident result pytrees (``YCHGResult``, ``CCLResult``,
+...), so a hit returns the exact cached object — no copy, no host
+round-trip, and crucially no backend invocation (``tests/test_service.py``
+asserts this via the registry call counters).
 """
 
 from __future__ import annotations
@@ -28,21 +31,24 @@ from typing import Any, Dict, Hashable, Optional, Tuple
 
 import numpy as np
 
-CacheKey = Tuple[bytes, tuple, str, str, Any, Any]
+CacheKey = Tuple[bytes, tuple, str, str, Any, Any, str]
 
 
 def make_key(mask: np.ndarray, backend: str, config: Hashable,
-             mesh: Optional[Hashable] = None) -> CacheKey:
+             mesh: Optional[Hashable] = None, *,
+             op: str = "ychg") -> CacheKey:
     """Content-address a host mask under a resolved (backend, config) policy.
 
     ``mask`` must be C-contiguous (the service canonicalises on submit);
     ``config`` any hashable policy object (``YCHGConfig`` is frozen);
     ``mesh`` the engine's attached device mesh, if any — a meshed engine's
     results carry a different device layout than an unmeshed one, so the
-    two must never serve each other's entries through a shared cache.
+    two must never serve each other's entries through a shared cache;
+    ``op`` the operator (or ``"+"``-joined pipeline spec) the entry
+    answers for — the same mask under a different op is a different key.
     """
     digest = hashlib.blake2b(mask.tobytes(), digest_size=16).digest()
-    return (digest, mask.shape, str(mask.dtype), backend, config, mesh)
+    return (digest, mask.shape, str(mask.dtype), backend, config, mesh, op)
 
 
 def _canon(obj: Any) -> bytes:
@@ -77,14 +83,19 @@ def serialize_key(key: CacheKey) -> bytes:
     by PYTHONHASHSEED), so it can never cross a process boundary; this
     rendering is what the fleet router consistent-hashes on and what
     sibling caches look each other's entries up by — identical
-    (mask, backend, config) must produce identical bytes in every worker,
-    across restarts (``tests/test_fleet.py`` pins this with a
+    (mask, backend, config, op) must produce identical bytes in every
+    worker, across restarts (``tests/test_fleet.py`` pins this with a
     different-PYTHONHASHSEED subprocess). Components are length-prefixed
-    so no two distinct keys can collide by concatenation.
+    so no two distinct keys can collide by concatenation, and the format
+    is VERSIONED: v2 added the length-prefixed ``op`` component, and the
+    bumped prefix means a v1 worker and a v2 worker in a mixed-version
+    fleet can never alias each other's entries — every v2 key differs
+    from every v1 key in its first component.
     """
-    digest, shape, dtype, backend, config, mesh = key
+    digest, shape, dtype, backend, config, mesh, op = key
     parts = (
-        b"ychg-key-v1",
+        b"ychg-key-v2",
+        _canon(op),
         digest,
         "x".join(str(int(s)) for s in shape).encode(),
         _canon(dtype),

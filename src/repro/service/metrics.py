@@ -59,8 +59,13 @@ _MIN_ACTIVE_S = 1e-3
 
 def bucket_labels(bucket: Any) -> LabelPairs:
     """Service bucket key -> Prometheus label pairs. Buckets are
-    (side, dtype) tuples everywhere in the service; anything else gets a
-    single opaque ``bucket`` label so the renderer never crashes."""
+    (op, side, dtype) tuples everywhere in the multi-op service (the
+    2-tuple (side, dtype) form predates the op dimension and still renders
+    for older recordings); anything else gets a single opaque ``bucket``
+    label so the renderer never crashes."""
+    if isinstance(bucket, tuple) and len(bucket) == 3:
+        return (("op", str(bucket[0])), ("side", str(bucket[1])),
+                ("dtype", str(bucket[2])))
     if isinstance(bucket, tuple) and len(bucket) == 2:
         return (("side", str(bucket[0])), ("dtype", str(bucket[1])))
     if bucket is None:

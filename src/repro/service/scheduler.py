@@ -186,8 +186,14 @@ class Scheduler:
                  dispatch: Callable[[Hashable, List[Any], int], Any],
                  complete: Callable[[Any, List[Any]], None],
                  fail: Callable[[List[Any], Exception], None],
-                 *, autostart: bool = True):
+                 *, autostart: bool = True,
+                 max_batch_for: Optional[Callable[[Hashable], int]] = None):
         self.config = config
+        # per-bucket flush-size override (the multi-op service derives a
+        # bucket's cap from its operator); None = config.max_batch for all.
+        # The DRR quantum and deficit cap follow the same per-bucket value,
+        # so a small-batch op earns proportionally small rounds.
+        self._max_batch_for = max_batch_for
         self._dispatch = dispatch
         self._complete = complete
         self._fail = fail
@@ -400,6 +406,11 @@ class Scheduler:
     def _delay(self) -> float:
         return self.config.max_delay_ms / 1e3
 
+    def _max_batch(self, bucket: Hashable) -> int:
+        if self._max_batch_for is None:
+            return self.config.max_batch
+        return self._max_batch_for(bucket)
+
     def _enqueue_pending(self, item: Any) -> bool:
         """Bank one ingested request in its bucket (activating the bucket
         in the DRR ring if new); True when the bucket is now full."""
@@ -410,7 +421,7 @@ class Scheduler:
                 if item.bucket not in self._rr:
                     self._rr.append(item.bucket)
             reqs.append(item)
-            return len(reqs) >= self.config.max_batch
+            return len(reqs) >= self._max_batch(item.bucket)
 
     def _ready_buckets(self, now: float) -> List[Hashable]:
         """Buckets due for a flush — full, or oldest request aged past the
@@ -418,7 +429,7 @@ class Scheduler:
         delay = self._delay()
         with self._cond:
             ready = {b for b, rs in self._pending.items()
-                     if len(rs) >= self.config.max_batch
+                     if len(rs) >= self._max_batch(b)
                      or now - rs[0].t_submit >= delay}
         for b in ready:
             if b not in self._rr:   # ring self-repair: a bookkeeping bug
@@ -439,14 +450,6 @@ class Scheduler:
         flush-on-full reproduces the old arrival-order policy.
         """
         served = 0
-        quantum = self.config.max_batch
-        # banked deficit is CAPPED at one quantum beyond the largest
-        # possible flush (= max_batch): DRR's fairness guarantee is only as
-        # good as the bank stays bounded — credit accrued while a bucket
-        # sits pending-but-unready must never later pay for a mega-burst
-        # that flushes its whole backlog ahead of every other bucket
-        # (tests/test_scheduler.py pins the no-mega-burst behavior)
-        deficit_cap = quantum + self.config.max_batch
         while True:
             now = time.monotonic()
             ready = self._ready_buckets(now)
@@ -458,15 +461,25 @@ class Scheduler:
                     served += 1
                 continue
             for b in ready:
+                # per-bucket quantum: each bucket's round is worth its own
+                # max_batch in request credits, and the banked deficit is
+                # CAPPED at one quantum beyond the largest possible flush
+                # (= that same max_batch): DRR's fairness guarantee is only
+                # as good as the bank stays bounded — credit accrued while
+                # a bucket sits pending-but-unready must never later pay
+                # for a mega-burst that flushes its whole backlog ahead of
+                # every other bucket (tests/test_scheduler.py pins the
+                # no-mega-burst behavior)
+                quantum = self._max_batch(b)
+                deficit_cap = quantum + quantum
                 self._deficit[b] = min(
                     self._deficit.get(b, 0) + quantum, deficit_cap)
                 while True:
                     with self._cond:
                         rs = self._pending.get(b)
-                        occ = (min(len(rs), self.config.max_batch)
-                               if rs else 0)
+                        occ = min(len(rs), quantum) if rs else 0
                         is_ready = rs is not None and (
-                            len(rs) >= self.config.max_batch
+                            len(rs) >= quantum
                             or now - rs[0].t_submit >= self._delay())
                     if not is_ready or self._deficit.get(b, 0) < occ:
                         break
@@ -505,10 +518,11 @@ class Scheduler:
         most ``inflight_jobs`` outstanding. A flush takes at most
         ``max_batch`` requests — anything beyond stays pending (and keeps
         its age), so no flush ever exceeds the compiled-shape ladder."""
+        max_batch = self._max_batch(bucket)
         with self._cond:
             reqs = self._pending[bucket]
-            requests = reqs[: self.config.max_batch]
-            rest = reqs[self.config.max_batch:]
+            requests = reqs[:max_batch]
+            rest = reqs[max_batch:]
             if rest:
                 self._pending[bucket] = rest
             else:
@@ -518,8 +532,8 @@ class Scheduler:
                     self._rr.remove(bucket)
                 except ValueError:
                     pass
-        batch = (pick_sub_batch(len(requests), self.config.max_batch)
-                 if self.config.sub_batches else self.config.max_batch)
+        batch = (pick_sub_batch(len(requests), max_batch)
+                 if self.config.sub_batches else max_batch)
         try:
             handle = self._dispatch(bucket, requests, batch)
         except Exception as e:   # config/backend errors -> fail this slice

@@ -1,4 +1,4 @@
-"""`YCHGService` — the batching, caching ROI service on top of `YCHGEngine`.
+"""`YCHGService` — the batching, caching multi-op service over `Engine`.
 
 Between "a request arrives" and "the engine runs" sit three layers, each
 independently testable:
@@ -11,8 +11,9 @@ independently testable:
      all run under one lock, so a duplicate either joins the leader or
      hits the cache — there is no window where it can re-dispatch;
   2. a **micro-batching scheduler** (:mod:`repro.service.scheduler`):
-     misses queue into per-``(side, dtype)`` shape buckets and flush when
-     a bucket reaches ``max_batch`` or its oldest request ages past
+     misses queue into per-``(op, side, dtype)`` shape buckets (an op only
+     ever batches with itself) and flush when a bucket reaches its op's
+     ``max_batch`` or its oldest request ages past
      ``max_delay_ms``; stacks are padded to the bucket side AND to the
      power-of-two **sub-batch ladder** rung covering the flush occupancy,
      so a lone request pays for one image, not ``max_batch``, while the
@@ -23,7 +24,7 @@ independently testable:
   3. a **double-buffered dispatch loop**: up to ``inflight_buckets`` bucket
      computations are outstanding at once, so the host->device transfer and
      batching work for bucket n+1 overlap the device compute of bucket n
-     (the same discipline ``YCHGEngine.analyze_stream`` now applies per
+     (the same discipline ``Engine.analyze_stream`` now applies per
      item). Completion blocks on readiness, fans per-request cropped
      results out to futures, and records true submit->ready latency —
      cache hits are counted separately and never enter the latency window.
@@ -45,11 +46,12 @@ import numpy as np
 
 import jax
 
-from repro.engine import YCHGEngine, YCHGResult
+from repro.engine import Engine, YCHGResult
+from repro.engine.ops import PIPELINE_SEP, pipeline_op_key, split_pipeline_key, validate_pipeline
 from repro.obs import NULL_TRACE, maybe_trace
 from repro.service.batching import (
     Bucket,
-    crop_result,
+    crop_for,
     pad_stack,
     pick_bucket_side,
 )
@@ -109,6 +111,16 @@ class ServiceConfig:
     sub_batches       pad flushes to the power-of-two ladder (True) or
                       always to ``max_batch`` (False; kept so benchmarks
                       can compare the two policies on one schedule).
+    op_bucket_sides   per-op overrides of ``bucket_sides``: a mapping (or
+                      sorted pair tuple) ``op key -> ladder``. An op (or
+                      exact pipeline key like "denoise+ychg") without an
+                      entry uses the default ladder. Canonicalised to a
+                      sorted tuple of pairs so two configs with the same
+                      content always compare equal.
+    op_max_batch      per-op overrides of ``max_batch``, same key rules;
+                      drives both the flush size and that op's DRR
+                      quantum, so a small-batch op earns proportionally
+                      small rounds.
     """
 
     bucket_sides: Tuple[int, ...] = (128, 256, 512, 1024)
@@ -122,15 +134,23 @@ class ServiceConfig:
     overload_policy: str = "block"
     sub_batches: bool = True
     fair: bool = True
+    op_bucket_sides: Any = ()
+    op_max_batch: Any = ()
 
     def __post_init__(self):
-        if not self.bucket_sides or list(self.bucket_sides) != sorted(
-            set(self.bucket_sides)
-        ):
-            raise ValueError(
-                f"bucket_sides must be a non-empty ascending ladder, "
-                f"got {self.bucket_sides}"
-            )
+        self._check_ladder(self.bucket_sides)
+        object.__setattr__(self, "op_bucket_sides", tuple(
+            sorted((str(op), tuple(sides))
+                   for op, sides in dict(self.op_bucket_sides).items())))
+        object.__setattr__(self, "op_max_batch", tuple(
+            sorted((str(op), int(mb))
+                   for op, mb in dict(self.op_max_batch).items())))
+        for op, sides in self.op_bucket_sides:
+            self._check_ladder(sides, f"op_bucket_sides[{op!r}]")
+        for op, mb in self.op_max_batch:
+            if mb < 1:
+                raise ValueError(
+                    f"op_max_batch[{op!r}] must be >= 1, got {mb}")
         if self.inflight_buckets < 1:
             raise ValueError(
                 f"inflight_buckets must be >= 1, got {self.inflight_buckets}")
@@ -138,6 +158,20 @@ class ServiceConfig:
         # constructing it here surfaces bad values at ServiceConfig() time
         # with messages that name the right knob
         self.scheduler_config()
+
+    @staticmethod
+    def _check_ladder(sides, name: str = "bucket_sides") -> None:
+        if not sides or list(sides) != sorted(set(sides)):
+            raise ValueError(
+                f"{name} must be a non-empty ascending ladder, got {sides}")
+
+    def bucket_sides_for(self, op_key: str) -> Tuple[int, ...]:
+        """The bucket ladder for an op (or exact pipeline key)."""
+        return dict(self.op_bucket_sides).get(op_key, self.bucket_sides)
+
+    def max_batch_for(self, op_key: str) -> int:
+        """The flush size (and DRR quantum) for an op key."""
+        return dict(self.op_max_batch).get(op_key, self.max_batch)
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(
@@ -172,23 +206,29 @@ class _Request:
 
 
 class YCHGService:
-    """Single-mask request front end over a shared :class:`YCHGEngine`.
+    """Single-mask request front end over a shared op-dispatching
+    :class:`Engine`.
 
     ``submit(mask)`` returns a ``concurrent.futures.Future`` resolving to
     the B=1 device-resident ``YCHGResult`` that ``engine.analyze(mask)``
     would produce — bit-identical, including through bucket padding and
-    result caching. ``analyze(mask)`` is the blocking convenience form.
-    Use as a context manager, or call ``close()`` to drain and stop.
+    result caching; ``submit(mask, op="ccl")`` serves any registered op
+    the same way, and ``submit_pipeline(mask, ["denoise", "ychg"])`` runs
+    an ordered op chain device-resident end to end (no host round trip
+    between stages), bit-identical to issuing the stages as separate
+    requests. ``analyze(mask)`` is the blocking convenience form. Use as
+    a context manager, or call ``close()`` to drain and stop.
 
     Pass ``cache`` to share one :class:`ResultCache` between services;
-    keys include each engine's resolved backend and config, so sharing is
-    always safe (policies never serve each other's entries).
+    keys include each engine's resolved backend, config, and the op key,
+    so sharing is always safe (policies never serve each other's entries,
+    and neither do different ops on the same mask).
     """
 
-    def __init__(self, engine: Optional[YCHGEngine] = None,
+    def __init__(self, engine: Optional[Engine] = None,
                  config: ServiceConfig = ServiceConfig(), *,
                  cache: Optional[ResultCache] = None):
-        self.engine = engine if engine is not None else YCHGEngine()
+        self.engine = engine if engine is not None else Engine()
         self.config = config
         self.cache = cache if cache is not None else ResultCache(
             config.cache_entries)
@@ -202,17 +242,20 @@ class YCHGService:
             dispatch=self._dispatch,
             complete=self._complete,
             fail=self._fail,
+            max_batch_for=lambda bucket: config.max_batch_for(bucket[0]),
         )
 
     # ------------------------------------------------------------ requests
 
-    def submit(self, mask: Any, *,
+    def submit(self, mask: Any, *, op: Optional[str] = None,
                trace: Optional[Any] = None) -> "Future[YCHGResult]":
         """Enqueue one (H, W) mask; the future resolves to a ready result.
 
-        Raises :class:`ServiceOverloaded` when the queue is at
-        ``max_queue_depth`` under ``overload_policy="shed"``; blocks here
-        (not on device work) under ``"block"``.
+        ``op`` selects the operator (default: the engine's own, normally
+        ``"ychg"``); the future resolves to that op's B=1 device-resident
+        result pytree. Raises :class:`ServiceOverloaded` when the queue is
+        at ``max_queue_depth`` under ``overload_policy="shed"``; blocks
+        here (not on device work) under ``"block"``.
 
         ``trace`` joins this request's stage spans to an existing
         :class:`repro.obs.Trace` (the frontend passes the one it opened
@@ -220,6 +263,35 @@ class YCHGService:
         finishing it). Without one, the service opens its own trace and
         finishes it when the request resolves.
         """
+        op_key = op if op is not None else self.engine.op
+        if PIPELINE_SEP in op_key:
+            raise ValueError(
+                f"op {op_key!r} looks like a pipeline spec; use "
+                f"submit_pipeline for ordered op chains")
+        backend = self.engine.resolve_backend(op=op_key)
+        return self._submit_keyed(mask, op_key, backend, trace)
+
+    def submit_pipeline(self, mask: Any, stages, *,
+                        trace: Optional[Any] = None) -> "Future":
+        """Enqueue one mask through an ordered op chain (device-resident).
+
+        ``stages`` is a sequence of op names, e.g. ``["denoise", "ychg"]``;
+        every stage but the last must be chainable (its result has an
+        image-shaped field the next stage ingests). The future resolves to
+        the LAST stage's B=1 result, bit-identical to submitting each
+        stage separately and feeding the cropped output forward — the
+        pipeline just never leaves the device between stages. Cache
+        entries are keyed by the full ``"+"``-joined pipeline key, so a
+        pipeline never aliases its prefix ops.
+        """
+        stages = validate_pipeline(stages)
+        op_key = pipeline_op_key(stages)
+        backend = PIPELINE_SEP.join(
+            self.engine.resolve_backend(op=s) for s in stages)
+        return self._submit_keyed(mask, op_key, backend, trace)
+
+    def _submit_keyed(self, mask: Any, op_key: str, backend: str,
+                      trace: Optional[Any]) -> "Future":
         if self._closed:
             raise RuntimeError("service is closed")
         tr = trace if trace is not None else maybe_trace()
@@ -228,10 +300,10 @@ class YCHGService:
         a = np.ascontiguousarray(np.asarray(mask))
         if a.ndim != 2:
             raise ValueError(f"submit expects an (H, W) mask, got {a.shape}")
-        side = pick_bucket_side(a.shape, self.config.bucket_sides)
-        bucket = (side, str(a.dtype))
-        key = make_key(a, self.engine.resolve_backend(), self.engine.config,
-                       self.engine.mesh)
+        side = pick_bucket_side(a.shape, self.config.bucket_sides_for(op_key))
+        bucket = (op_key, side, str(a.dtype))
+        key = make_key(a, backend, self.engine.config,
+                       self.engine.mesh, op=op_key)
         fut: "Future[YCHGResult]" = Future()
         cached = None
         outcome = "miss"
@@ -338,9 +410,15 @@ class YCHGService:
         self._recorder.record_submit()
         return fut
 
-    def analyze(self, mask: Any, timeout: Optional[float] = None) -> YCHGResult:
-        """Blocking convenience: ``submit(mask).result(timeout)``."""
-        return self.submit(mask).result(timeout)
+    def analyze(self, mask: Any, timeout: Optional[float] = None, *,
+                op: Optional[str] = None) -> YCHGResult:
+        """Blocking convenience: ``submit(mask, op=op).result(timeout)``."""
+        return self.submit(mask, op=op).result(timeout)
+
+    def pipeline(self, mask: Any, stages,
+                 timeout: Optional[float] = None):
+        """Blocking convenience: ``submit_pipeline(...).result(timeout)``."""
+        return self.submit_pipeline(mask, stages).result(timeout)
 
     def attach_scene_progress(self, progress: Any) -> None:
         """Publish a scene/bulk job's progress through ``metrics()``.
@@ -394,7 +472,7 @@ class YCHGService:
     def _dispatch(self, bucket: Bucket, requests: List[_Request],
                   batch_size: int) -> YCHGResult:
         t0 = time.monotonic()
-        side, dtype = bucket
+        op_key, side, dtype = bucket
         for r in requests:
             # queue wait: admitted -> this flush started assembling. The
             # submitter's t_admitted write may not have landed yet (the
@@ -409,7 +487,31 @@ class YCHGService:
         # the host->device transfer of THIS bucket starts here, while the
         # previous bucket's computation is still in flight
         x = jax.device_put(stack)
-        result = self.engine.analyze_batch(x)  # async dispatch
+        if PIPELINE_SEP in op_key:
+            # per-request native (h, w) so each stage's output is re-zeroed
+            # outside the request's canvas — exactly what a fresh pad of
+            # the cropped intermediate would look like, which is what makes
+            # pipeline == sequential bit-exact. Blank pad rows get (0, 0).
+            hw = np.zeros((batch_size, 2), np.int32)
+            for i, r in enumerate(requests):
+                hw[i] = r.mask.shape
+
+            def _stage_span(name: str, s0: float, s1: float) -> None:
+                # per-stage pipeline spans (docs/observability.md): one
+                # ``pipeline.<op>`` span per stage on every rider's trace,
+                # plus a stage histogram keyed by the compound bucket
+                self._recorder.observe_stage(f"pipeline.{name}", bucket,
+                                             max(0.0, s1 - s0))
+                for r in requests:
+                    r.trace.add(f"pipeline.{name}", s0, s1)
+
+            result = self.engine.run_pipeline(
+                x, split_pipeline_key(op_key), valid_hw=hw,
+                on_stage=_stage_span)
+        elif op_key == self.engine.op:
+            result = self.engine.analyze_batch(x)  # async dispatch
+        else:
+            result = self.engine.analyze_batch(x, op=op_key)
         t1 = time.monotonic()
         self._recorder.observe_stage("flush", bucket, t1 - t0)
         for r in requests:
@@ -432,9 +534,10 @@ class YCHGService:
                 t_disp = requests[0].t_dispatch or now
                 self._recorder.observe_stage(
                     "compute", requests[0].bucket, max(0.0, now - t_disp))
+            crop = crop_for(requests[0].bucket[0]) if requests else None
             for row, req in enumerate(requests):
                 tc0 = time.monotonic()
-                out = crop_result(result, row, req.mask.shape[1])
+                out = crop(result, row, req.mask.shape)
                 # atomic with submit's cache-check/coalesce: insert before
                 # retiring the leader, so a duplicate in this instant hits
                 # the cache instead of re-dispatching the computation
@@ -487,6 +590,10 @@ def _fulfil(fut: Future, value: Any) -> None:
         fut.set_result(value)
 
 
+# the canonical name for the multi-op service; YCHGService remains the
+# historical (and still accurate: yCHG-first) spelling of the same class
+Service = YCHGService
+
 # re-exported here so service-level callers see the error next to the knob
 # that produces it
-__all__ = ["ServiceConfig", "ServiceOverloaded", "YCHGService"]
+__all__ = ["Service", "ServiceConfig", "ServiceOverloaded", "YCHGService"]

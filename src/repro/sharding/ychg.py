@@ -1,8 +1,8 @@
 """Batch-mesh helpers for yCHG scene stacks + the deprecated shard_map shim.
 
 The shard_map path now lives inside the engine: it is simply the fused
-backend with a mesh attached (``YCHGEngine(cfg, mesh=mesh)`` — see
-``repro.engine.engine.YCHGEngine._run_meshed``). The engine pads ragged
+backend with a mesh attached (``Engine(cfg, mesh=mesh)`` — see
+``repro.engine.engine.Engine._run_meshed``). The engine pads ragged
 batches with blank images (zero runs, zero hyperedges — inert end to end)
 to a multiple of the mesh size and strips the pad internally, so callers
 never see padded-length results.
@@ -59,7 +59,7 @@ def batch_sharded_analyze(
     block_h: int = 2048,
     interpret: bool | None = None,
 ) -> YCHGSummary:
-    """DEPRECATED: use ``YCHGEngine(cfg, mesh=mesh).analyze_batch(imgs)``.
+    """DEPRECATED: use ``Engine(cfg, mesh=mesh).analyze_batch(imgs)``.
 
     (B, H, W) stack -> YCHGSummary, batch-sharded over the mesh; bit-identical
     to ``core.ychg.analyze`` on the same stack. Kept as a thin shim over the
@@ -67,14 +67,14 @@ def batch_sharded_analyze(
     """
     warnings.warn(
         "repro.sharding.batch_sharded_analyze is deprecated; use "
-        "repro.engine.YCHGEngine(YCHGConfig(backend='fused'), mesh=mesh)"
+        "repro.engine.Engine(YCHGConfig(backend='fused'), mesh=mesh)"
         ".analyze_batch(imgs)",
         DeprecationWarning,
         stacklevel=2,
     )
-    from repro.engine import YCHGConfig, YCHGEngine
+    from repro.engine import Engine, YCHGConfig
 
-    engine = YCHGEngine(
+    engine = Engine(
         YCHGConfig(backend="fused", block_w=block_w, block_h=block_h,
                    mesh_axis=axis_name, interpret=interpret),
         mesh=make_batch_mesh(axis_name) if mesh is None else mesh,

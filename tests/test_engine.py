@@ -1,4 +1,4 @@
-"""YCHGEngine / registry suite.
+"""Engine / registry suite.
 
 Covers the engine acceptance bar:
   * every registered backend is bit-identical to ``core.ychg.analyze`` on
@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.core import serial, ychg
 from repro.engine import (
     YCHGConfig,
-    YCHGEngine,
+    Engine,
     YCHGResult,
     backend_names,
     get_backend,
@@ -88,7 +88,7 @@ def test_register_unregister_roundtrip_and_cache_invalidation():
     earlier) and gone after unregister — the generation counter invalidates
     both the lru_cache and per-engine spec caches."""
     fixed = ychg.analyze(jnp.ones((1, 2, 3), jnp.uint8))
-    eng = YCHGEngine(YCHGConfig(backend="auto"))
+    eng = Engine(YCHGConfig(backend="auto"))
     assert eng.resolve_backend() == "jax"  # prime the instance cache
     registry.register_backend(registry.BackendSpec(
         name="_test_stub", run=lambda x, c: fixed, supports_batch=True,
@@ -105,7 +105,7 @@ def test_register_unregister_roundtrip_and_cache_invalidation():
 
 
 def test_engine_resolves_per_platform():
-    assert YCHGEngine().resolve_backend() == (
+    assert Engine().resolve_backend() == (
         "fused" if jax.default_backend() == "tpu" else "jax"
     )
 
@@ -117,7 +117,7 @@ def test_engine_resolves_per_platform():
 def test_backend_parity_on_corpus(backend):
     """Every registered backend, through the engine, bit-identical to the
     core.ychg oracle on the seeded corpus."""
-    engine = YCHGEngine(YCHGConfig(backend=backend))
+    engine = Engine(YCHGConfig(backend=backend))
     for img in _corpus():
         want = ychg.analyze(jnp.asarray(img))
         got = engine.analyze(img).to_summary()
@@ -128,7 +128,7 @@ def test_backend_parity_on_corpus(backend):
 def test_backend_parity_batched(backend):
     rng = np.random.default_rng(42)
     imgs = (rng.random((5, 21, 34)) < 0.5).astype(np.uint8)
-    engine = YCHGEngine(YCHGConfig(backend=backend))
+    engine = Engine(YCHGConfig(backend=backend))
     assert_bit_identical(engine.analyze_batch(imgs).to_summary(),
                          ychg.analyze(jnp.asarray(imgs)))
 
@@ -137,7 +137,7 @@ def test_single_image_is_b1_view():
     """analyze is the batched path with B=1 — not a separate code path."""
     rng = np.random.default_rng(0)
     img = (rng.random((19, 27)) < 0.5).astype(np.uint8)
-    engine = YCHGEngine()
+    engine = Engine()
     one = engine.analyze(img)
     batch = engine.analyze_batch(img[None])
     assert one.runs.shape == batch.runs.shape == (1, 27)
@@ -151,7 +151,7 @@ def test_single_image_is_b1_view():
 def test_result_is_registered_pytree():
     rng = np.random.default_rng(1)
     imgs = (rng.random((3, 9, 13)) < 0.5).astype(np.uint8)
-    res = YCHGEngine().analyze_batch(imgs)
+    res = Engine().analyze_batch(imgs)
     leaves, treedef = jax.tree_util.tree_flatten(res)
     assert len(leaves) == 7
     rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
@@ -166,7 +166,7 @@ def test_device_backends_trace_under_jit(backend):
     the engine would raise TracerArrayConversionError here."""
     rng = np.random.default_rng(2)
     imgs = jnp.asarray((rng.random((2, 17, 23)) < 0.5).astype(np.uint8))
-    engine = YCHGEngine(YCHGConfig(backend=backend))
+    engine = Engine(YCHGConfig(backend=backend))
     res = jax.jit(engine.analyze_batch)(imgs)
     assert_bit_identical(res.to_summary(), ychg.analyze(imgs))
 
@@ -174,7 +174,7 @@ def test_device_backends_trace_under_jit(backend):
 def test_results_stay_on_device():
     rng = np.random.default_rng(3)
     img = (rng.random((11, 29)) < 0.5).astype(np.uint8)
-    res = YCHGEngine(YCHGConfig(backend="fused")).analyze(jnp.asarray(img))
+    res = Engine(YCHGConfig(backend="fused")).analyze(jnp.asarray(img))
     for leaf in jax.tree_util.tree_leaves(res):
         assert isinstance(leaf, jax.Array)
 
@@ -182,7 +182,7 @@ def test_results_stay_on_device():
 def test_to_host_matches_legacy_dict_form():
     rng = np.random.default_rng(4)
     img = (rng.random((31, 15)) < 0.5).astype(np.uint8)
-    d = YCHGEngine().analyze(img).to_host()
+    d = Engine().analyze(img).to_host()
     s = ychg.analyze(jnp.asarray(img))
     assert set(d) == {"runs", "cut_vertices", "transitions", "births",
                       "deaths", "n_hyperedges", "n_transitions"}
@@ -197,7 +197,7 @@ def test_to_host_matches_legacy_dict_form():
 
 
 def test_analyze_rejects_wrong_rank():
-    engine = YCHGEngine()
+    engine = Engine()
     with pytest.raises(ValueError, match=r"\(H, W\)"):
         engine.analyze(np.zeros((2, 3, 4), np.uint8))
     with pytest.raises(ValueError, match=r"\(B, H, W\)"):
@@ -208,7 +208,7 @@ def test_analyze_stream_mixed_items():
     rng = np.random.default_rng(5)
     img = (rng.random((12, 18)) < 0.5).astype(np.uint8)
     stack = (rng.random((3, 12, 18)) < 0.5).astype(np.uint8)
-    engine = YCHGEngine()
+    engine = Engine()
     outs = list(engine.analyze_stream(iter([img, stack])))
     assert [o.runs.shape for o in outs] == [(1, 18), (3, 18)]
     assert_bit_identical(outs[1].to_summary(), ychg.analyze(jnp.asarray(stack)))
@@ -225,7 +225,7 @@ def test_config_stream_vmem_budget_routes_to_streamed():
     """The engine's streaming threshold reaches the fused kernel dispatch."""
     rng = np.random.default_rng(6)
     imgs = (rng.random((2, 70, 150)) < 0.5).astype(np.uint8)
-    engine = YCHGEngine(YCHGConfig(backend="fused", stream_vmem_budget=1,
+    engine = Engine(YCHGConfig(backend="fused", stream_vmem_budget=1,
                                    block_h=32))
     assert_bit_identical(engine.analyze_batch(imgs).to_summary(),
                          ychg.analyze(jnp.asarray(imgs)))
@@ -233,7 +233,7 @@ def test_config_stream_vmem_budget_routes_to_streamed():
 
 def test_config_dtype_casts_on_ingest():
     img = np.array([[0, 2], [3, 0]], np.int64)
-    res = YCHGEngine(YCHGConfig(dtype="uint8")).analyze(img)
+    res = Engine(YCHGConfig(dtype="uint8")).analyze(img)
     assert_bit_identical(res.to_summary(),
                          ychg.analyze(jnp.asarray(img.astype(np.uint8))))
 
@@ -247,7 +247,7 @@ def test_workload_config_engine_section():
     assert cfg.block_w == wl.block_w and cfg.block_h == wl.block_h
     rng = np.random.default_rng(7)
     img = (rng.random((16, 24)) < 0.5).astype(np.uint8)
-    assert_bit_identical(YCHGEngine(cfg).analyze(img).to_summary(),
+    assert_bit_identical(Engine(cfg).analyze(img).to_summary(),
                          ychg.analyze(jnp.asarray(img)))
 
 
@@ -259,7 +259,7 @@ def test_mesh_path_single_device_parity():
 
     rng = np.random.default_rng(8)
     imgs = (rng.random((5, 33, 40)) < 0.5).astype(np.uint8)
-    engine = YCHGEngine(YCHGConfig(backend="auto"), mesh=make_batch_mesh())
+    engine = Engine(YCHGConfig(backend="auto"), mesh=make_batch_mesh())
     assert engine.resolve_backend() == "fused"
     res = engine.analyze_batch(imgs)
     assert res.batch_size == 5
@@ -270,7 +270,7 @@ def test_mesh_axis_mismatch_raises():
     from repro.sharding import make_batch_mesh
 
     with pytest.raises(ValueError, match="mesh_axis"):
-        YCHGEngine(YCHGConfig(mesh_axis="batch"), mesh=make_batch_mesh("data"))
+        Engine(YCHGConfig(mesh_axis="batch"), mesh=make_batch_mesh("data"))
 
 
 _MESH_SCRIPT = textwrap.dedent("""
@@ -282,14 +282,14 @@ _MESH_SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     from repro.core import ychg
-    from repro.engine import YCHGConfig, YCHGEngine
+    from repro.engine import Engine, YCHGConfig
     from repro.sharding import make_batch_mesh
 
     mesh = make_batch_mesh()
     assert mesh.size == 4, mesh
     rng = np.random.default_rng(0)
     imgs = (rng.random((5, 17, 33)) < 0.5).astype(np.uint8)  # 5 % 4 != 0
-    engine = YCHGEngine(YCHGConfig(backend="fused"), mesh=mesh)
+    engine = Engine(YCHGConfig(backend="fused"), mesh=mesh)
     res = engine.analyze_batch(jnp.asarray(imgs))
     # padding to 8 must be stripped internally: callers see B=5
     assert res.batch_size == 5, res.runs.shape
@@ -369,6 +369,24 @@ def test_analyze_image_unknown_backend_message():
     assert BACKENDS == ALL_BACKENDS
 
 
+def test_ychg_engine_shim_warns_and_agrees():
+    """`YCHGEngine` is a deprecation shim over the op-dispatching
+    `Engine`: construction warns, behaviour (op, results, backend
+    resolution) is exactly ``Engine()``'s."""
+    from repro.engine import YCHGEngine
+
+    rng = np.random.default_rng(12)
+    img = (rng.random((19, 27)) < 0.5).astype(np.uint8)
+    with pytest.warns(DeprecationWarning, match="YCHGEngine is deprecated"):
+        shim = YCHGEngine()
+    eng = Engine()
+    assert isinstance(shim, Engine)
+    assert shim.op == eng.op == "ychg"
+    assert shim.resolve_backend() == eng.resolve_backend()
+    assert_bit_identical(shim.analyze(img).to_summary(),
+                         eng.analyze(img).to_summary())
+
+
 def test_batch_sharded_analyze_shim_warns_and_agrees():
     from repro.sharding import batch_sharded_analyze
 
@@ -384,7 +402,7 @@ def test_ychg_stats_accepts_engine():
 
     rng = np.random.default_rng(11)
     masks = (rng.random((4, 16, 20)) < 0.4).astype(np.uint8)
-    via_engine = ychg_stats(masks, engine=YCHGEngine(YCHGConfig(backend="fused")))
+    via_engine = ychg_stats(masks, engine=Engine(YCHGConfig(backend="fused")))
     via_legacy = ychg_stats(masks, backend="jnp")
     for k in via_legacy:
         np.testing.assert_array_equal(via_engine[k], via_legacy[k], err_msg=k)

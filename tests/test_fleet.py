@@ -26,7 +26,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.engine import YCHGConfig, YCHGEngine
+from repro.engine import Engine, YCHGConfig
 from repro.fleet import (
     FleetRouter,
     HashRing,
@@ -129,8 +129,29 @@ def test_serialize_key_distinguishes_every_component():
     assert serialize_key(make_key(mask, "cpu", cfg2)) != base
     assert serialize_key(
         make_key(_mask((4, 8), seed=2), "cpu", cfg)) != base
+    # different op on the same mask: per-op cache namespaces never alias
+    assert serialize_key(make_key(mask, "cpu", cfg, op="ccl")) != base
     # and the rendering is pure: same inputs, same bytes
     assert serialize_key(make_key(mask, "cpu", YCHGConfig())) == base
+
+
+def test_serialize_key_is_versioned_and_op_prefixed():
+    """The v2 rendering leads with a version tag and a length-prefixed op
+    component, so mixed-version fleet caches can never alias: a v1 key's
+    first length-prefixed part was a 32-byte digest, a v2 key's is the
+    11-byte version tag — differing first components, never equal bytes.
+    The op part is length-prefixed, so ("ab", mask) and ("a", b-ish
+    content) cannot collide by concatenation either."""
+    mask = _mask((4, 8), seed=1)
+    cfg = YCHGConfig()
+    for op in ("ychg", "ccl", "denoise", "denoise+ychg"):
+        skey = serialize_key(make_key(mask, "cpu", cfg, op=op))
+        assert skey.startswith(
+            len(b"ychg-key-v2").to_bytes(4, "big") + b"ychg-key-v2")
+        # the op component follows, length-prefixed
+        off = 4 + len(b"ychg-key-v2")
+        n = int.from_bytes(skey[off:off + 4], "big")
+        assert skey[off + 4:off + 4 + n] == op.encode()
 
 
 _CHILD_SCRIPT = textwrap.dedent("""
@@ -140,20 +161,26 @@ _CHILD_SCRIPT = textwrap.dedent("""
     from repro.service.cache import make_key, serialize_key
     rng = np.random.default_rng(7)
     mask = (rng.random((32, 48)) < 0.5).astype(np.uint8)
-    key = make_key(mask, "cpu", YCHGConfig())
-    sys.stdout.write(serialize_key(key).hex())
+    for op in ("ychg", "ccl", "denoise+ychg"):
+        key = make_key(mask, "cpu", YCHGConfig(), op=op)
+        sys.stdout.write(serialize_key(key).hex() + "\\n")
 """)
 
 
 def test_serialized_key_is_stable_across_processes():
     """The satellite bar: the serialized key must be byte-identical in
     processes with different hash seeds — tuple keys are not (hash()
-    randomisation), which is exactly why routing serializes first."""
+    randomisation), which is exactly why routing serializes first. Since
+    the v2 op component, every op's key (pipeline keys included) holds
+    the same bar."""
     import os
 
     rng = np.random.default_rng(7)
     mask = (rng.random((32, 48)) < 0.5).astype(np.uint8)
-    want = serialize_key(make_key(mask, "cpu", YCHGConfig())).hex()
+    want = "".join(
+        serialize_key(make_key(mask, "cpu", YCHGConfig(), op=op)).hex() + "\n"
+        for op in ("ychg", "ccl", "denoise+ychg"))
+    assert len(set(want.split())) == 3   # op-distinct, never aliased
     for seed in ("0", "1"):
         env = dict(os.environ, PYTHONHASHSEED=seed)
         out = subprocess.run(
@@ -174,12 +201,12 @@ def test_peer_probe_adopts_siblings_entry_without_recompute():
     mask = _mask((24, 24), seed=30)
     cfg = ServiceConfig(bucket_sides=(32,), max_batch=2, max_delay_ms=1.0)
     cache_a = PeeredResultCache(64)
-    svc_a = YCHGService(YCHGEngine(), cfg, cache=cache_a)
+    svc_a = YCHGService(Engine(), cfg, cache=cache_a)
     with svc_a, ServerThread(svc_a, rpc_port=0) as srv_a:
         want = svc_a.submit(mask).result(timeout=TIMEOUT).to_host()
         cache_b = PeeredResultCache(64)
         cache_b.set_peers([("127.0.0.1", srv_a.rpc_port)])
-        svc_b = YCHGService(YCHGEngine(), cfg, cache=cache_b)
+        svc_b = YCHGService(Engine(), cfg, cache=cache_b)
         with svc_b:
             got = svc_b.submit(mask).result(timeout=TIMEOUT).to_host()
             m = svc_b.metrics()
@@ -202,7 +229,7 @@ def test_peer_probe_miss_and_dead_peer_fall_back_to_compute():
     mask = _mask((24, 24), seed=31)
     cfg = ServiceConfig(bucket_sides=(32,), max_batch=2, max_delay_ms=1.0)
     empty_cache = PeeredResultCache(64)
-    svc_empty = YCHGService(YCHGEngine(), cfg, cache=empty_cache)
+    svc_empty = YCHGService(Engine(), cfg, cache=empty_cache)
     with svc_empty, ServerThread(svc_empty, rpc_port=0) as srv_empty:
         # a dead port: bind-then-close guarantees nothing listens there
         s = socket.create_server(("127.0.0.1", 0))
@@ -211,7 +238,7 @@ def test_peer_probe_miss_and_dead_peer_fall_back_to_compute():
         cache = PeeredResultCache(64, probe_timeout_s=0.1)
         cache.set_peers([("127.0.0.1", dead_port),
                          ("127.0.0.1", srv_empty.rpc_port)])
-        svc = YCHGService(YCHGEngine(), cfg, cache=cache)
+        svc = YCHGService(Engine(), cfg, cache=cache)
         with svc:
             out = svc.submit(mask).result(timeout=TIMEOUT)
             m = svc.metrics()
@@ -229,7 +256,7 @@ def test_cache_probe_rpc_verb_is_local_only():
     mask = _mask((16, 16), seed=32)
     cfg = ServiceConfig(bucket_sides=(16,), max_batch=1, max_delay_ms=1.0)
     cache = PeeredResultCache(64)
-    svc = YCHGService(YCHGEngine(), cfg, cache=cache)
+    svc = YCHGService(Engine(), cfg, cache=cache)
     with svc, ServerThread(svc, rpc_port=0) as srv:
         from repro.fleet.peering import probe_peer
 
@@ -258,7 +285,7 @@ def _two_worker_fleet(cfg=None, engines=None):
         bucket_sides=(32,), max_batch=4, max_delay_ms=1.0)
     links, closers = [], []
     for i in range(2):
-        engine = engines[i] if engines else YCHGEngine()
+        engine = engines[i] if engines else Engine()
         cache = PeeredResultCache(64)
         svc = YCHGService(engine, cfg, cache=cache)
         srv = ServerThread(svc, rpc_port=0)
@@ -281,7 +308,7 @@ def test_router_path_is_bit_identical_and_uses_both_workers():
     try:
         cfg = ServiceConfig(bucket_sides=(32,), max_batch=4,
                             max_delay_ms=1.0)
-        with YCHGService(YCHGEngine(), cfg) as ref:
+        with YCHGService(Engine(), cfg) as ref:
             want = [ref.submit(m).result(timeout=TIMEOUT).to_host()
                     for m in masks]
         router = FleetRouter(links, RouterConfig(bucket_sides=(32,),
@@ -307,7 +334,7 @@ def test_router_path_is_bit_identical_and_uses_both_workers():
 
 
 def test_router_reroutes_to_survivor_when_a_worker_dies():
-    masks = [_mask((28, 28), seed=50 + i) for i in range(6)]
+    masks = [_mask((28, 28), seed=50 + i) for i in range(9)]
     links, closers = _two_worker_fleet()
     try:
         ring = HashRing(["w0", "w1"])
@@ -316,7 +343,7 @@ def test_router_reroutes_to_survivor_when_a_worker_dies():
                            if ring.node_for(routing_key(m)) == "w1")
         cfg = ServiceConfig(bucket_sides=(32,), max_batch=4,
                             max_delay_ms=1.0)
-        with YCHGService(YCHGEngine(), cfg) as ref:
+        with YCHGService(Engine(), cfg) as ref:
             want = ref.submit(victim_mask).result(timeout=TIMEOUT).to_host()
         router = FleetRouter(links, RouterConfig(bucket_sides=(32,),
                                                  max_batch=4))
@@ -433,6 +460,7 @@ def test_rollup_sums_worker_histograms_exactly():
 
     masks = [_mask((28, 28), seed=70 + i) for i in range(6)]
     links, closers = _two_worker_fleet()
+    n_requests = len(masks) + 2
     try:
         router = FleetRouter(links, RouterConfig(bucket_sides=(32,),
                                                  max_batch=4))
@@ -440,6 +468,10 @@ def test_rollup_sums_worker_histograms_exactly():
                 YCHGClient("127.0.0.1", rt.port) as client:
             items = {it.id: it for it in client.analyze_batch(masks)}
             assert all(it.ok for it in items.values())
+            # a mixed-op recording: the rollup must stay exact arithmetic
+            # when series carry distinct op label sets
+            client.analyze(_mask((28, 28), seed=80), op="ccl")
+            client.analyze(_mask((28, 28), seed=81), op="ccl")
             worker_pages = []
             for link in links:
                 with YCHGClient("127.0.0.1", link.http_port) as wc:
@@ -464,8 +496,12 @@ def test_rollup_sums_worker_histograms_exactly():
                   if n.endswith("_bucket") and dict(labels)["le"] == "+Inf")
         counts = sum(v for (n, _), v in got.items()
                      if n.endswith("_count"))
-        assert inf == counts == len(masks)
+        assert inf == counts == n_requests
+        # both ops' label sets survive the rollup distinctly
+        ops_seen = {dict(labels).get("op") for (n, labels) in got
+                    if n.endswith("_count")}
+        assert {"ychg", "ccl"} <= ops_seen
         # the plain-counter legacy rollup behaviour still holds alongside
-        assert page.get("ychg_completed_total") == len(masks)
+        assert page.get("ychg_completed_total") == n_requests
     finally:
         _close_fleet(closers)

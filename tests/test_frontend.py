@@ -18,7 +18,7 @@ import json
 import numpy as np
 import pytest
 
-from repro.engine import YCHGEngine
+from repro.engine import Engine
 from repro.frontend import (
     AsyncRPCClient,
     FrontendError,
@@ -96,7 +96,7 @@ def test_array_codec_rejects_non_positive_dims():
 
 
 def test_result_codec_roundtrip_matches_to_host():
-    result = YCHGEngine().analyze(_mask((9, 13), seed=3))
+    result = Engine().analyze(_mask((9, 13), seed=3))
     want = result.to_host()
     got = protocol.decode_result(
         json.loads(json.dumps(protocol.encode_result(result))))
@@ -177,7 +177,8 @@ def test_http_overload_maps_shed_to_429_with_retry_after():
             assert exc_info.value.status == 429
             text = client.metrics_text()
             assert "ychg_shed_total 1" in text
-            assert 'ychg_shed_bucket_total{side="16",dtype="uint8"} 1' in text
+            assert ('ychg_shed_bucket_total'
+                    '{op="ychg",side="16",dtype="uint8"} 1') in text
             assert "ychg_backend_info" in text
     finally:
         svc.close()                             # drains the admitted holder
@@ -400,3 +401,102 @@ def test_rpc_unknown_op_is_an_error_response():
         resp = asyncio.run(go())
         assert resp["id"] == 9 and resp["status"] == 400
         assert "unknown op" in resp["error"]
+
+
+# --------------------------------------------------------- multi-op routes
+
+
+def _float_img(shape, seed=0):
+    return np.random.default_rng(seed).random(shape).astype(np.float32)
+
+
+def test_http_per_op_routes_bit_identical_to_in_process_submit():
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0))
+    mask = _mask((24, 30), seed=70)
+    img = _float_img((24, 30), seed=71)
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        for op, x in (("ccl", mask), ("denoise", img)):
+            got = client.analyze(x, op=op)
+            want = svc.submit(x, op=op).result(timeout=TIMEOUT).to_host()
+            _assert_host_equal(got, want)
+        # /v1/ychg and the historical /v1/analyze alias answer identically
+        _assert_host_equal(client.analyze(mask, op="ychg"),
+                           client.analyze(mask))
+
+
+def test_http_unknown_op_is_404_json_naming_registered_ops():
+    from repro.engine.ops import op_names
+
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        with pytest.raises(FrontendError) as ei:
+            client.analyze(_mask((8, 8)), op="warp")
+        assert ei.value.status == 404
+        body = json.loads(str(ei.value))
+        assert "warp" in body["error"]
+        assert sorted(body["ops"]) == sorted(op_names())
+
+
+def test_http_pipeline_equals_separate_wire_requests():
+    """POST /v1/pipeline (device-resident compound) against feeding stage
+    1's wire output back as stage 2's request — bit-identical."""
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0))
+    img = _float_img((26, 20), seed=72)
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        compound = client.pipeline(img, ["denoise", "ychg"])
+        stage1 = client.analyze(img, op="denoise")
+        want = client.analyze(stage1["image"], op="ychg")
+        _assert_host_equal(compound, want)
+
+
+def test_http_pipeline_bad_stage_specs_are_400_or_404():
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=1, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        for stages in ([], ["denoise", 7], "denoise"):
+            with pytest.raises((FrontendError, ValueError)) as ei:
+                client.pipeline(_float_img((8, 8)), stages)  # type: ignore
+            if isinstance(ei.value, FrontendError):
+                assert ei.value.status == 400
+        with pytest.raises(FrontendError) as ei:
+            client.pipeline(_float_img((8, 8)), ["denoise", "warp"])
+        assert ei.value.status == 400
+        # an interior stage with no chain output cannot feed the next one
+        with pytest.raises(FrontendError) as ei:
+            client.pipeline(_float_img((8, 8)), ["ychg", "ccl"])
+        assert ei.value.status == 400
+
+
+def test_rpc_opname_and_pipeline_verbs_bit_identical():
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0))
+    mask = _mask((18, 22), seed=73)
+    img = _float_img((18, 22), seed=74)
+    with svc, ServerThread(svc, rpc_port=0) as srv:
+        async def go():
+            client = await AsyncRPCClient(
+                "127.0.0.1", srv.rpc_port).connect()
+            try:
+                ccl = await client.analyze(mask, op="ccl")
+                piped = await client.pipeline(img, ["denoise", "ychg"])
+                with pytest.raises(FrontendError) as ei:
+                    await client.analyze(mask, op="warp")
+                assert ei.value.status == 404
+            finally:
+                await client.aclose()
+            return ccl, piped
+
+        ccl, piped = asyncio.run(go())
+        _assert_host_equal(
+            ccl, svc.submit(mask, op="ccl").result(timeout=TIMEOUT).to_host())
+        _assert_host_equal(
+            piped,
+            svc.pipeline(img, ["denoise", "ychg"],
+                         timeout=TIMEOUT).to_host())

@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.data import scenes
-from repro.engine import YCHGConfig, YCHGEngine
+from repro.engine import Engine, YCHGConfig
 from repro.scene import (
     BulkJob,
     BulkJobConfig,
@@ -151,7 +151,7 @@ def test_stitched_scene_bit_identical_to_whole_scene(h, w, tile_h, stack):
     """The tentpole bar: streaming + seam stitching reproduces the
     whole-scene analysis exactly, every field, dtypes included."""
     mask = scenes.scene(h, w, seed=h * 100 + w, cell=8)
-    engine = YCHGEngine()
+    engine = Engine()
     reader = GranuleReader.from_array(mask, tile_h)
     got = SceneRunner(engine, stack_tiles=stack).analyze_scene(reader)
     _assert_host_identical(got.to_host(), engine.analyze(mask).to_host(),
@@ -163,18 +163,18 @@ def test_stitched_scene_bit_identical_under_mesh():
     from repro.sharding import make_batch_mesh
 
     mask = scenes.scene(40, 16, seed=11, cell=8)
-    engine = YCHGEngine(YCHGConfig(backend="auto"), mesh=make_batch_mesh())
+    engine = Engine(YCHGConfig(backend="auto"), mesh=make_batch_mesh())
     reader = GranuleReader.from_array(mask, 8)
     got = SceneRunner(engine, stack_tiles=3).analyze_scene(reader)
     _assert_host_identical(got.to_host(),
-                           YCHGEngine().analyze(mask).to_host())
+                           Engine().analyze(mask).to_host())
 
 
 def test_stitch_tile_runs_matches_scene_runs():
     """Per-tile runs analysed independently (the online/NDJSON replay
     path) stitch to the same run vector the streaming runner produces."""
     mask = scenes.scene(29, 14, seed=6, cell=4)
-    engine = YCHGEngine()
+    engine = Engine()
     reader = GranuleReader.from_array(mask, 6)
     tiles = [reader.read_tile(t) for t in range(reader.n_tiles)]
     tile_runs = [np.asarray(engine.analyze(t).to_host()["runs"])
@@ -231,7 +231,7 @@ def _job(tmp_path, tag, manifest, progress=None, **cfg):
                  ckpt_dir=os.path.join(tmp_path, tag, "ckpt"),
                  tile_h=8, stack_tiles=1, checkpoint_every=1)
     knobs.update(cfg)
-    return BulkJob(YCHGEngine(), manifest, BulkJobConfig(**knobs),
+    return BulkJob(Engine(), manifest, BulkJobConfig(**knobs),
                    progress=progress)
 
 
@@ -245,7 +245,7 @@ def test_bulk_job_outputs_match_direct_analysis(tmp_path):
     job = _job(tmp_path, "direct", manifest)
     report = job.run()
     assert report.completed and report.granules_done == 2
-    engine = YCHGEngine()
+    engine = Engine()
     for spec in manifest:
         got = read_scene_result(job.output_path(spec))
         whole = scenes.scene(spec.height, spec.width, seed=spec.seed,
@@ -323,10 +323,10 @@ def test_bulk_job_rejects_bad_manifests(tmp_path):
     cfg = BulkJobConfig(out_dir=str(tmp_path / "o"),
                         ckpt_dir=str(tmp_path / "c"))
     with pytest.raises(ValueError, match="empty"):
-        BulkJob(YCHGEngine(), [], cfg)
+        BulkJob(Engine(), [], cfg)
     spec = synthetic_manifest(1, 8, 8)[0]
     with pytest.raises(ValueError, match="duplicate"):
-        BulkJob(YCHGEngine(), [spec, spec], cfg)
+        BulkJob(Engine(), [spec, spec], cfg)
 
 
 def test_bulk_job_detects_manifest_width_change(tmp_path):
@@ -349,7 +349,7 @@ def test_online_tiles_agree_with_offline_scene():
     from repro.service import ServiceConfig, YCHGService
 
     mask = scenes.scene(20, 16, seed=80, cell=8)
-    engine = YCHGEngine()
+    engine = Engine()
     reader = GranuleReader.from_array(mask, 8)
     tiles = [reader.read_tile(t) for t in range(reader.n_tiles)]
     offline = SceneRunner(engine).analyze_scene(reader)

@@ -20,7 +20,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import ychg
-from repro.engine import YCHGConfig, YCHGEngine, registry
+from repro.engine import Engine, YCHGConfig, registry
 from repro.service import (
     ResultCache,
     ServiceConfig,
@@ -76,7 +76,7 @@ def test_service_parity_matches_plain_analyze_batch():
     engine.analyze_batch over the same masks (same shape, so the comparison
     is a direct stack)."""
     masks = [_mask((48, 64), seed=s) for s in range(6)]
-    engine = YCHGEngine()
+    engine = Engine()
     want = engine.analyze_batch(np.stack(masks))
     with YCHGService(engine, ServiceConfig(
             bucket_sides=(64,), max_batch=3, max_delay_ms=1.0)) as svc:
@@ -119,7 +119,7 @@ def test_cache_hit_skips_backend():
     """Satellite: a hit must not invoke the backend — asserted via the
     registry call counter the engine bumps on every dispatch."""
     mask = _mask((40, 40), seed=20)
-    engine = YCHGEngine()
+    engine = Engine()
     backend = engine.resolve_backend()
     with YCHGService(engine, ServiceConfig(
             bucket_sides=(64,), max_batch=1, max_delay_ms=1.0)) as svc:
@@ -142,7 +142,7 @@ def test_cache_same_bytes_different_shape_or_dtype_misses():
         payload.reshape(4, 8).view(np.int8),  # same bytes, different dtype
     ]
     assert variants[0].tobytes() == variants[1].tobytes() == variants[2].tobytes()
-    engine = YCHGEngine()
+    engine = Engine()
     backend = engine.resolve_backend()
     with YCHGService(engine, ServiceConfig(
             bucket_sides=(16,), max_batch=1, max_delay_ms=1.0)) as svc:
@@ -159,9 +159,9 @@ def test_cache_different_engine_config_misses_in_shared_cache():
     mask = _mask((24, 24), seed=21)
     shared = ResultCache(64)
     cfg = ServiceConfig(bucket_sides=(32,), max_batch=1, max_delay_ms=1.0)
-    with YCHGService(YCHGEngine(YCHGConfig(backend="jax")), cfg,
+    with YCHGService(Engine(YCHGConfig(backend="jax")), cfg,
                      cache=shared) as a, \
-         YCHGService(YCHGEngine(YCHGConfig(backend="fused")), cfg,
+         YCHGService(Engine(YCHGConfig(backend="fused")), cfg,
                      cache=shared) as b:
         ra = a.analyze(mask, timeout=TIMEOUT)
         n_fused = registry.call_count("fused")
@@ -316,7 +316,7 @@ def test_analyze_stream_bad_item_still_delivers_prior_results():
     """The one-item lookahead must not swallow a computed result when the
     NEXT item is invalid: the valid result is yielded first, then the
     ValueError surfaces on the following pull (the pre-lookahead contract)."""
-    engine = YCHGEngine()
+    engine = Engine()
     good = _mask((6, 7), seed=73)
     gen = engine.analyze_stream([good, np.zeros((2, 2, 2, 2), np.uint8)])
     first = next(gen)
@@ -383,7 +383,7 @@ def test_duplicate_in_completion_window_never_redispatches():
     the pre-fix code popped the leader BEFORE the cache insert, so the
     duplicate saw neither and re-dispatched the whole computation."""
     mask = _mask((24, 24), seed=80)
-    engine = YCHGEngine()
+    engine = Engine()
     backend = engine.resolve_backend()
     cache = _WindowCache()
     svc = YCHGService(engine, ServiceConfig(
@@ -497,14 +497,14 @@ def test_per_bucket_bound_sheds_flood_not_minority():
         minority_futs = [svc.submit(m) for m in minority]
         met = svc.metrics()
         assert met.shed == 4 and met.blocked == 0
-        assert met.shed_by_bucket == (((16, "uint8"), 4),)
+        assert met.shed_by_bucket == ((("ychg", 16, "uint8"), 4),)
     finally:
         svc.close()   # drains everything admitted
     for mask, fut in zip(flood[:2] + minority, admitted + minority_futs):
         _assert_result_matches_analyze(fut.result(timeout=TIMEOUT), mask)
 
 
-class _GatedEngine(YCHGEngine):
+class _GatedEngine(Engine):
     """Holds every dispatch at the analyze_batch door until released —
     pins "the queue is full because work is genuinely in flight"."""
 
@@ -608,7 +608,7 @@ def test_analyze_stream_order_and_parity_through_lookahead():
     rng = np.random.default_rng(60)
     items = [(rng.random((10 + i, 14)) < 0.5).astype(np.uint8)
              for i in range(7)]
-    engine = YCHGEngine()
+    engine = Engine()
     outs = list(engine.analyze_stream(iter(items)))
     assert len(outs) == len(items)
     for item, out in zip(items, outs):
@@ -616,7 +616,7 @@ def test_analyze_stream_order_and_parity_through_lookahead():
 
 
 def test_analyze_stream_empty_and_singleton():
-    engine = YCHGEngine()
+    engine = Engine()
     assert list(engine.analyze_stream(iter([]))) == []
     img = _mask((9, 9), seed=61)
     (only,) = engine.analyze_stream([img])
@@ -624,7 +624,7 @@ def test_analyze_stream_empty_and_singleton():
 
 
 def test_analyze_stream_bad_rank_raises():
-    engine = YCHGEngine()
+    engine = Engine()
     with pytest.raises(ValueError, match="stream items"):
         list(engine.analyze_stream([np.zeros((2, 2, 2, 2), np.uint8)]))
 
@@ -632,7 +632,7 @@ def test_analyze_stream_bad_rank_raises():
 def test_analyze_stream_raising_iterator_still_delivers_prior_results():
     """A source iterator that raises (e.g. a failing loader) must not
     swallow the previous item's computed result either."""
-    engine = YCHGEngine()
+    engine = Engine()
     good = _mask((6, 7), seed=74)
 
     def loader():
@@ -651,7 +651,7 @@ def test_analyze_stream_raising_iterator_still_delivers_prior_results():
 def test_registry_call_counters():
     registry.reset_call_counts()
     assert registry.call_count() == 0
-    engine = YCHGEngine(YCHGConfig(backend="jax"))
+    engine = Engine(YCHGConfig(backend="jax"))
     engine.analyze(np.zeros((4, 4), np.uint8))
     assert registry.call_count("jax") == 1
     assert registry.call_count() == 1
