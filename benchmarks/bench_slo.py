@@ -1,0 +1,285 @@
+"""Traffic-class SLO benchmark: priorities, deadlines, tenant quotas.
+
+Three scenario rows, written to ``BENCH_slo.json`` and gated in CI by
+``check_bench_regression.py --slo`` (the slo-smoke job):
+
+  **traffic_classes** — the tentpole scenario. A baseline leg measures
+  interactive-only closed-loop p95 latency on an idle service; the
+  overload leg then floods the service with a batch-class backlog
+  offered at ``OFFERED_MULTIPLE``x the batch bucket's admission bound
+  (plus a standard-class side stream) and re-measures the SAME
+  interactive traffic through the congested service. Strict class
+  priority must keep the interactive p95 flat — the row records the
+  overload/baseline ratio — while the batch flood sheds against its own
+  allowance (``batch_sheds > 0``, hard) and the interactive class sheds
+  nothing (``interactive_sheds == 0``, hard). The two legs use disjoint
+  mask pools and every mask is unique, so the cache never serves a
+  timed request.
+
+  **deadline_shed** — requests submitted with a deadline the admission
+  estimator can prove unmeetable are shed at the door with a typed
+  error and an honest ``Retry-After``. ``deadline_ms=0`` probes are
+  already dead on arrival and shed deterministically (the gate's
+  ``min_deadline_sheds`` bar); small-positive-deadline probes against
+  the live backlog are recorded as measured (they shed only once the
+  drain-rate estimator is warm — a cold estimator never sheds).
+
+  **tenant_quota** — per-tenant token buckets: a tenant with a
+  starvation-rate quota spends its burst and is then shed with
+  ``Retry-After`` equal to the (clamped) time until its next token,
+  while a second tenant and un-tenanted traffic on the same service
+  admit freely. Pure token algebra: deterministic on any box.
+
+  **Honesty about cores**: the p95 ratio compares two same-box
+  measurements, but on a core-starved box both legs are noise-dominated
+  — the row records ``cores`` and the ratio bar is asserted by the gate
+  only when ``cores >= 4``; smaller boxes carry a ``cpu_limited`` note
+  instead of a fake pass. Shed counts and quota algebra are asserted
+  everywhere — they are policy, not speed.
+
+Run:  PYTHONPATH=src python benchmarks/bench_slo.py [--out BENCH_slo.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from concurrent.futures import Future
+from typing import List
+
+import jax
+
+from repro.data import modis
+from repro.engine import Engine
+from repro.service import (
+    DeadlineExceeded,
+    Service,
+    ServiceConfig,
+    ServiceOverloaded,
+    TenantQuotaExceeded,
+)
+
+INTERACTIVE_RES = 64       # interactive/standard bucket
+BATCH_RES = 128            # the flooded batch bucket (its own bound)
+MAX_BATCH = 8
+BUCKET_BOUND = 32          # per-bucket admission bound
+OFFERED_MULTIPLE = 3       # batch flood = 3x its bucket's bound
+N_INTERACTIVE = 16
+N_STANDARD = 8
+
+
+def _masks(res: int, n: int, seed0: int) -> List:
+    return [modis.snowfield(res, seed=seed0 + i) for i in range(n)]
+
+
+def _p95_ms(latencies_s: List[float]) -> float:
+    xs = sorted(latencies_s)
+    return round(xs[int(0.95 * (len(xs) - 1))] * 1e3, 2)
+
+
+def _closed_loop_ms(svc: Service, masks: List, klass: str) -> List[float]:
+    """Submit one at a time, awaiting each result: per-request wall
+    latency through admission, queue, dispatch, and device."""
+    out = []
+    for m in masks:
+        t0 = time.perf_counter()
+        svc.submit(m, klass=klass).result()
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def run_traffic_classes(svc: Service) -> dict:
+    cores = os.cpu_count() or 1
+    # warm both buckets' ladder rungs outside all timing: sequential
+    # submits compile rung 1; the concurrent burst compiles the larger
+    # rungs the overload flood will use
+    for m in _masks(INTERACTIVE_RES, 4, seed0=9000):
+        svc.submit(m, klass="interactive").result()
+    warm_futs = [svc.submit(m, klass="batch")
+                 for m in _masks(BATCH_RES, 2 * MAX_BATCH, seed0=9100)]
+    for f in warm_futs:
+        f.result()
+
+    # ---- baseline leg: interactive alone on an idle service
+    base_lat = _closed_loop_ms(
+        svc, _masks(INTERACTIVE_RES, N_INTERACTIVE, seed0=3000),
+        "interactive")
+    p95_baseline = _p95_ms(base_lat)
+
+    # ---- overload leg: flood batch at OFFERED_MULTIPLE x its bound,
+    # add a standard-class side stream, re-measure interactive
+    offered_batch = OFFERED_MULTIPLE * BUCKET_BOUND
+    batch_futs: List[Future] = []
+    batch_shed_client = 0
+    for m in _masks(BATCH_RES, offered_batch, seed0=4000):
+        try:
+            batch_futs.append(svc.submit(m, klass="batch"))
+        except ServiceOverloaded:
+            batch_shed_client += 1
+    std_futs = [svc.submit(m, klass="standard")
+                for m in _masks(INTERACTIVE_RES, N_STANDARD, seed0=5000)]
+    over_lat = _closed_loop_ms(
+        svc, _masks(INTERACTIVE_RES, N_INTERACTIVE, seed0=6000),
+        "interactive")
+    p95_overload = _p95_ms(over_lat)
+    for f in batch_futs + std_futs:
+        f.result()
+
+    m = svc.metrics()
+    shed_by_class = dict(m.shed_by_class)
+    batch_sheds = shed_by_class.get("batch", 0)
+    interactive_sheds = shed_by_class.get("interactive", 0)
+    assert batch_sheds > 0, (
+        f"batch flood of {offered_batch} against bound {BUCKET_BOUND} "
+        f"shed nothing — admission control is not engaging")
+    assert interactive_sheds == 0, (
+        f"{interactive_sheds} interactive sheds — the protected class "
+        f"was collateral damage of the batch flood")
+    assert batch_shed_client == batch_sheds, (
+        f"client saw {batch_shed_client} sheds, service counted "
+        f"{batch_sheds}")
+    ratio = round(p95_overload / p95_baseline, 2) if p95_baseline else None
+    row = {
+        "scenario": "traffic_classes",
+        "cores": cores,
+        "classes": ["interactive", "standard", "batch"],
+        "offered_multiple": OFFERED_MULTIPLE,
+        "bucket_bound": BUCKET_BOUND,
+        "offered_batch": offered_batch,
+        "n_interactive": N_INTERACTIVE,
+        "n_standard": N_STANDARD,
+        "interactive_p95_ms_baseline": p95_baseline,
+        "interactive_p95_ms_overload": p95_overload,
+        "interactive_p95_ratio": ratio,
+        "batch_sheds": batch_sheds,
+        "interactive_sheds": interactive_sheds,
+        "standard_sheds": shed_by_class.get("standard", 0),
+    }
+    if cores < 4:
+        row["note"] = (
+            f"cpu_limited: {cores} core(s) — both legs noise-dominated, "
+            "so the p95 ratio bar is asserted only on >= 4 cores; ratio "
+            "recorded as measured")
+    return row
+
+
+def run_deadline_shed(svc: Service) -> dict:
+    """Probe the deadline gate against whatever backlog the overload leg
+    left behind. ``deadline_ms=0`` probes shed deterministically (dead
+    on arrival); positive-deadline probes shed only when the warm
+    estimator predicts a miss, and are recorded as measured."""
+    dead_probes, dead_sheds, retry_after = 4, 0, None
+    for m in _masks(INTERACTIVE_RES, dead_probes, seed0=7000):
+        try:
+            svc.submit(m, klass="batch", deadline_ms=0.0).result()
+        except DeadlineExceeded as e:
+            dead_sheds += 1
+            retry_after = e.retry_after_s
+    tight_probes, tight_sheds = 4, 0
+    for m in _masks(INTERACTIVE_RES, tight_probes, seed0=7100):
+        try:
+            svc.submit(m, klass="batch", deadline_ms=1.0).result()
+        except DeadlineExceeded:
+            tight_sheds += 1
+    assert dead_sheds == dead_probes, (
+        f"only {dead_sheds}/{dead_probes} dead-on-arrival probes shed")
+    return {
+        "scenario": "deadline_shed",
+        "dead_probes": dead_probes,
+        "dead_sheds": dead_sheds,
+        "retry_after_s": retry_after,
+        "tight_deadline_ms": 1.0,
+        "tight_probes": tight_probes,
+        "tight_sheds_measured": tight_sheds,
+        "deadline_sheds_total": svc.metrics().shed_deadline,
+    }
+
+
+def run_tenant_quota(engine: Engine) -> dict:
+    """Token-bucket algebra over a real service: deterministic on any
+    box (the starved tenant's refill over the bench's lifetime is
+    negligible by construction)."""
+    cfg = ServiceConfig(bucket_sides=(INTERACTIVE_RES,),
+                        max_batch=MAX_BATCH, max_delay_ms=2.0,
+                        tenant_rate=0.001, tenant_burst=4)
+    offered, retry_after = 10, None
+    with Service(engine, cfg) as svc:
+        admitted: List[Future] = []
+        sheds = 0
+        for m in _masks(INTERACTIVE_RES, offered, seed0=8000):
+            try:
+                admitted.append(svc.submit(m, tenant="acme"))
+            except TenantQuotaExceeded as e:
+                sheds += 1
+                retry_after = e.retry_after_s
+        other = [svc.submit(m, tenant="beta")
+                 for m in _masks(INTERACTIVE_RES, 4, seed0=8100)]
+        free = [svc.submit(m)
+                for m in _masks(INTERACTIVE_RES, 4, seed0=8200)]
+        for f in admitted + other + free:
+            f.result()
+        m = svc.metrics()
+        shed_by_tenant = dict(m.shed_by_tenant)
+    assert sheds == offered - cfg.tenant_burst, (
+        f"tenant burst {cfg.tenant_burst} of {offered} offered should "
+        f"shed {offered - cfg.tenant_burst}, shed {sheds}")
+    assert shed_by_tenant.get("beta", 0) == 0, (
+        "the under-quota tenant was shed")
+    return {
+        "scenario": "tenant_quota",
+        "tenant_rate": cfg.tenant_rate,
+        "tenant_burst": cfg.tenant_burst,
+        "offered": offered,
+        "admitted": cfg.tenant_burst,
+        "quota_sheds": sheds,
+        "other_tenant_sheds": shed_by_tenant.get("beta", 0),
+        "retry_after_s": retry_after,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_slo.json")
+    args = ap.parse_args()
+
+    engine = Engine()
+    cfg = ServiceConfig(
+        bucket_sides=(INTERACTIVE_RES, BATCH_RES), max_batch=MAX_BATCH,
+        max_delay_ms=2.0, bucket_queue_depth=BUCKET_BOUND,
+        overload_policy="shed")
+    rows = []
+    with Service(engine, cfg) as svc:
+        rows.append(run_traffic_classes(svc))
+        print(json.dumps(rows[-1]), flush=True)
+        rows.append(run_deadline_shed(svc))
+        print(json.dumps(rows[-1]), flush=True)
+    rows.append(run_tenant_quota(engine))
+    print(json.dumps(rows[-1]), flush=True)
+
+    report = {
+        "bench": "traffic_slo",
+        "platform": jax.default_backend(),
+        "backend": engine.resolve_backend(),
+        "note": (
+            "traffic_classes floods a batch-class bucket at "
+            f"{OFFERED_MULTIPLE}x its admission bound and holds the "
+            "interactive closed-loop p95 to its idle-service baseline "
+            "(ratio asserted by the gate only on >= 4 cores; sheds "
+            "asserted everywhere: batch > 0, interactive == 0). "
+            "deadline_shed pins dead-on-arrival sheds and records "
+            "warm-estimator sheds as measured. tenant_quota is "
+            "deterministic token algebra: burst admitted, the rest shed "
+            "with a clamped honest Retry-After, other tenants untouched."
+        ),
+        "scenarios": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(rows)} scenarios)")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,10 +44,30 @@ compose-by-hand sequential arm — the device-resident chain removes a
 host round trip and must never be slower. As everywhere, a
 ``cpu_limited`` note waives only the ratio bar, never bit-identity.
 
+A sixth family gates the traffic-SLO archive: ``--slo BENCH_slo.json``
+(standalone-capable, run by the slo-smoke CI job) requires the
+``traffic_classes`` row to show a working admission policy — batch-class
+sheds at ``min_batch_sheds`` or more, ZERO interactive sheds (hard, no
+escape hatch: the protected class must never be collateral damage) and,
+on boxes with ``cores >= 4``, an overload/baseline interactive p95 ratio
+at most ``max_interactive_p95_ratio`` (a ``cpu_limited`` note waives
+only the ratio bar). The ``deadline_shed`` and ``tenant_quota`` rows
+must each record at least ``min_deadline_sheds`` / ``min_quota_sheds``
+sheds with a positive Retry-After, and the under-quota tenant must have
+shed nothing.
+
 ``--simulate-regression`` degrades the fresh numbers before comparison
-(speedups halved-and-halved-again, pad fractions inflated) so CI can
-prove the gate actually trips — the bench-gate job runs that first and
-requires a nonzero exit, then runs the real comparison.
+(speedups halved-and-halved-again, pad fractions inflated; the SLO
+archive's sheds zeroed and its p95 ratio blown out) so CI can prove the
+gate actually trips — the bench-gate and slo-smoke jobs run that first
+and require a nonzero exit, then run the real comparison.
+
+Every REQUESTED section is load-bearing: a section file that is
+missing, unreadable, not JSON, not a JSON object, or empty of the
+scenarios the gate checks is itself a failure and exits nonzero — a
+gate that silently passes on a malformed archive is worse than no gate
+(tests/test_bench_gate.py pins this, including the empty-baseline case
+that used to pass silently).
 
 Run:  PYTHONPATH=src python benchmarks/check_bench_regression.py \\
           --baseline BENCH_service.json --fresh /tmp/fresh_quick.json
@@ -69,7 +89,31 @@ DEFAULT_GATE = {
     "min_scene_stitch_ratio": 0.5,
     "max_checkpoint_overhead": 0.5,
     "min_ops_pipeline_ratio": 1.0,
+    # traffic-SLO bars: the p95 ratio is wide on purpose (CI boxes are
+    # noisy; the gate catches "priority stopped protecting interactive",
+    # not jitter), the shed bars are exact policy
+    "max_interactive_p95_ratio": 10.0,
+    "min_batch_sheds": 1,
+    "min_deadline_sheds": 1,
+    "min_quota_sheds": 1,
 }
+
+
+def load_report(path: str, what: str) -> "tuple[Dict[str, Any], List[str]]":
+    """Read one requested section's JSON report; a file that is missing,
+    unreadable, not JSON, or not a JSON object is a FAILURE of that
+    section (never a silent pass, never a bare traceback)."""
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except OSError as e:
+        return {}, [f"{what}: cannot read {path}: {e}"]
+    except ValueError as e:
+        return {}, [f"{what}: {path} is not valid JSON: {e}"]
+    if not isinstance(report, dict):
+        return {}, [f"{what}: {path} is not a JSON object "
+                    f"(got {type(report).__name__})"]
+    return report, []
 
 
 def load_quick_rows(report: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
@@ -106,6 +150,11 @@ def check(baseline: Dict[str, Dict[str, Any]],
           fresh: Dict[str, Dict[str, Any]],
           gate: Dict[str, Any]) -> List[str]:
     failures: List[str] = []
+    if not baseline:
+        # the pre-fix gate compared zero scenarios and printed "passed"
+        failures.append(
+            "baseline has no scenarios to gate — an empty archive is a "
+            "broken recording, not a pass")
     ratio = gate["min_speedup_ratio"]
     pad_tol = gate["max_pad_fraction_increase"]
     pad_gap = gate["min_low_occupancy_pad_gap"]
@@ -248,6 +297,99 @@ def check_ops(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
     return failures
 
 
+def check_slo(report: Dict[str, Any], gate: Dict[str, Any]) -> List[str]:
+    """Hard invariants of the committed traffic-SLO archive. Shed counts
+    and quota algebra are policy, asserted on any box; only the p95
+    ratio bar is waivable, by a ``cpu_limited`` note on the row."""
+    failures: List[str] = []
+    rows = {row["scenario"]: row
+            for row in report.get("scenarios", [])
+            if isinstance(row, dict) and "scenario" in row}
+
+    tc = rows.get("traffic_classes")
+    if tc is None:
+        failures.append("slo archive has no traffic_classes scenario")
+    else:
+        if tc.get("batch_sheds", 0) < gate["min_batch_sheds"]:
+            failures.append(
+                f"traffic_classes: batch_sheds {tc.get('batch_sheds')} < "
+                f"{gate['min_batch_sheds']} — the overload flood was not "
+                f"shed, admission control is not engaging")
+        if tc.get("interactive_sheds") != 0:
+            failures.append(
+                f"traffic_classes: interactive_sheds "
+                f"{tc.get('interactive_sheds')} != 0 — the protected "
+                f"class was collateral damage of the batch flood")
+        cores = tc.get("cores", 0)
+        ratio = tc.get("interactive_p95_ratio")
+        ceil = gate["max_interactive_p95_ratio"]
+        if cores >= 4:
+            if ratio is None or ratio > ceil:
+                failures.append(
+                    f"traffic_classes: interactive p95 ratio {ratio} > "
+                    f"{ceil} on {cores} cores — class priority stopped "
+                    f"protecting interactive latency under overload")
+        elif "cpu_limited" not in tc.get("note", ""):
+            failures.append(
+                f"traffic_classes: recorded on {cores} core(s) without "
+                f"the cpu_limited note — re-record with bench_slo.py")
+
+    dl = rows.get("deadline_shed")
+    if dl is None:
+        failures.append("slo archive has no deadline_shed scenario")
+    else:
+        if dl.get("dead_sheds", 0) < gate["min_deadline_sheds"]:
+            failures.append(
+                f"deadline_shed: dead_sheds {dl.get('dead_sheds')} < "
+                f"{gate['min_deadline_sheds']} — dead-on-arrival requests "
+                f"were admitted instead of shed")
+        if not (dl.get("retry_after_s") or 0) > 0:
+            failures.append(
+                f"deadline_shed: retry_after_s "
+                f"{dl.get('retry_after_s')} — a deadline shed must quote "
+                f"a positive Retry-After")
+
+    tq = rows.get("tenant_quota")
+    if tq is None:
+        failures.append("slo archive has no tenant_quota scenario")
+    else:
+        if tq.get("quota_sheds", 0) < gate["min_quota_sheds"]:
+            failures.append(
+                f"tenant_quota: quota_sheds {tq.get('quota_sheds')} < "
+                f"{gate['min_quota_sheds']} — the over-quota tenant was "
+                f"never shed")
+        if tq.get("other_tenant_sheds") != 0:
+            failures.append(
+                f"tenant_quota: other_tenant_sheds "
+                f"{tq.get('other_tenant_sheds')} != 0 — one tenant's "
+                f"quota punished another tenant")
+        if not (tq.get("retry_after_s") or 0) > 0:
+            failures.append(
+                f"tenant_quota: retry_after_s {tq.get('retry_after_s')} "
+                f"— a quota shed must quote a positive Retry-After")
+    return failures
+
+
+def simulate_slo_regression(report: Dict[str, Any]) -> None:
+    """Degrade the SLO archive enough to trip every check family: sheds
+    zeroed (admission 'stopped engaging'), the p95 ratio blown out, the
+    Retry-After quotes dropped."""
+    for row in report.get("scenarios", []):
+        if not isinstance(row, dict):
+            continue
+        if row.get("scenario") == "traffic_classes":
+            row["batch_sheds"] = 0
+            row["interactive_sheds"] = 5
+            row["interactive_p95_ratio"] = 99.0
+            row.pop("note", None)
+        elif row.get("scenario") == "deadline_shed":
+            row["dead_sheds"] = 0
+            row["retry_after_s"] = None
+        elif row.get("scenario") == "tenant_quota":
+            row["quota_sheds"] = 0
+            row["retry_after_s"] = None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_service.json")
@@ -262,55 +404,61 @@ def main() -> None:
     ap.add_argument("--ops", default=None,
                     help="BENCH_ops.json to check invariants of (may "
                          "run standalone, without --fresh)")
+    ap.add_argument("--slo", default=None,
+                    help="BENCH_slo.json to check invariants of (may "
+                         "run standalone, without --fresh)")
     ap.add_argument("--simulate-regression", action="store_true",
                     help="degrade the fresh numbers first; the gate MUST "
                          "exit nonzero (CI self-test)")
     args = ap.parse_args()
     if (args.fresh is None and args.fleet is None and args.scene is None
-            and args.ops is None):
+            and args.ops is None and args.slo is None):
         ap.error("nothing to do: pass --fresh, --fleet, --scene, "
-                 "and/or --ops")
-    with open(args.baseline) as f:
-        baseline_report = json.load(f)
-    gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
+                 "--ops, and/or --slo")
     failures: List[str] = []
+    baseline_report, baseline_failures = load_report(
+        args.baseline, "baseline")
+    # the baseline is load-bearing only for --fresh (the standalone
+    # archive gates read only its 'gate' overrides): a broken baseline
+    # fails the run exactly when a fresh comparison needs it
     if args.fresh is not None:
-        with open(args.fresh) as f:
-            fresh_report = json.load(f)
-        baseline = load_quick_rows(baseline_report)
-        fresh = load_quick_rows(fresh_report)
-        if args.simulate_regression:
-            simulate_regression(fresh)
-            print("simulate-regression: fresh numbers degraded before check")
-        failures += check(baseline, fresh, gate)
-        print(f"gate: {len(baseline)} scenarios, thresholds {gate}")
-        for name in baseline:
-            row = fresh.get(name, {})
-            print(f"  {name}: speedup {row.get('speedup', '-')} "
-                  f"(baseline {baseline[name].get('speedup', '-')}), "
-                  f"pad {row.get('pad_fraction', '-')} "
-                  f"(baseline {baseline[name].get('pad_fraction', '-')})")
-    if args.fleet is not None:
-        with open(args.fleet) as f:
-            fleet_report = json.load(f)
-        fleet_failures = check_fleet(fleet_report, gate)
-        failures += fleet_failures
-        print(f"fleet gate: {args.fleet} "
-              f"{'FAILED' if fleet_failures else 'ok'}")
-    if args.scene is not None:
-        with open(args.scene) as f:
-            scene_report = json.load(f)
-        scene_failures = check_scene(scene_report, gate)
-        failures += scene_failures
-        print(f"scene gate: {args.scene} "
-              f"{'FAILED' if scene_failures else 'ok'}")
-    if args.ops is not None:
-        with open(args.ops) as f:
-            ops_report = json.load(f)
-        ops_failures = check_ops(ops_report, gate)
-        failures += ops_failures
-        print(f"ops gate: {args.ops} "
-              f"{'FAILED' if ops_failures else 'ok'}")
+        failures += baseline_failures
+    gate = {**DEFAULT_GATE, **baseline_report.get("gate", {})}
+    if args.fresh is not None and not baseline_failures:
+        fresh_report, fresh_failures = load_report(args.fresh, "fresh")
+        failures += fresh_failures
+        if not fresh_failures:
+            baseline = load_quick_rows(baseline_report)
+            fresh = load_quick_rows(fresh_report)
+            if args.simulate_regression:
+                simulate_regression(fresh)
+                print("simulate-regression: fresh numbers degraded "
+                      "before check")
+            failures += check(baseline, fresh, gate)
+            print(f"gate: {len(baseline)} scenarios, thresholds {gate}")
+            for name in baseline:
+                row = fresh.get(name, {})
+                print(f"  {name}: speedup {row.get('speedup', '-')} "
+                      f"(baseline {baseline[name].get('speedup', '-')}), "
+                      f"pad {row.get('pad_fraction', '-')} "
+                      f"(baseline {baseline[name].get('pad_fraction', '-')})")
+    for flag, what, checker in (
+            (args.fleet, "fleet", check_fleet),
+            (args.scene, "scene", check_scene),
+            (args.ops, "ops", check_ops),
+            (args.slo, "slo", check_slo)):
+        if flag is None:
+            continue
+        report, section_failures = load_report(flag, what)
+        if not section_failures:
+            if what == "slo" and args.simulate_regression:
+                simulate_slo_regression(report)
+                print("simulate-regression: slo archive degraded "
+                      "before check")
+            section_failures = checker(report, gate)
+        failures += section_failures
+        print(f"{what} gate: {flag} "
+              f"{'FAILED' if section_failures else 'ok'}")
     if failures:
         print("\nPERF REGRESSION:")
         for f_ in failures:

@@ -51,6 +51,9 @@ from repro.fleet.worker import parse_ready_line
 from repro.frontend import protocol
 from repro.frontend.client import AsyncRPCClient, FrontendError
 from repro.frontend.server import (
+    CLASS_HEADER,
+    DEADLINE_HEADER,
+    TENANT_HEADER,
     TRACE_HEADER,
     _chunk,
     _DrainRate,
@@ -102,6 +105,13 @@ class RouterConfig:
     forward_timeout_s: float = 300.0
     health_interval_s: float = 1.0
     replicas: int = 64
+    # traffic classes + tenant quotas (docs/traffic.md): the router is
+    # the fleet's admission edge, so quota and deadline sheds happen HERE,
+    # before any worker sees a byte of the request
+    classes: Tuple[str, ...] = ("interactive", "standard", "batch")
+    default_class: str = "standard"
+    tenant_rate: float = 0.0
+    tenant_burst: float = 0.0
 
     def scheduler_config(self) -> SchedulerConfig:
         return SchedulerConfig(
@@ -113,6 +123,10 @@ class RouterConfig:
             overload_policy=self.overload_policy,
             sub_batches=True,
             fair=True,
+            classes=self.classes,
+            default_class=self.default_class,
+            tenant_rate=self.tenant_rate,
+            tenant_burst=self.tenant_burst,
         )
 
 
@@ -146,6 +160,11 @@ class _RouterRequest:
     stages: Optional[List[str]] = None
     served_by: Optional[str] = None
     trace: Any = NULL_TRACE   # the HTTP handler's trace; spans join it
+    # traffic-shaping fields the scheduler reads at admission; never part
+    # of skey/bucket/payload, so a classed forward stays bit-identical
+    klass: Optional[str] = None
+    deadline_ms: Optional[float] = None
+    tenant: Optional[str] = None
 
 
 def routing_key(mask: np.ndarray, op: str = "ychg") -> bytes:
@@ -297,6 +316,12 @@ class FleetRouter:
             # the RPC frame field mirroring the HTTP X-YCHG-Trace header:
             # the worker's spans join this router-side trace id
             call_frame["trace"] = req.trace.trace_id
+        # the class rides to the worker so its own scheduler honours the
+        # priority; deadline/tenant do NOT — both were already enforced at
+        # this edge, and re-charging a tenant token per hop would double-
+        # bill the quota
+        if req.klass is not None:
+            call_frame["klass"] = req.klass
         last_exc: Optional[Exception] = None
         first = True
         for name in self._ring.preference(req.skey):
@@ -445,8 +470,14 @@ class FleetRouter:
     async def _route(self, method: str, target: str, body: bytes,
                      writer: asyncio.StreamWriter, keep: bool,
                      headers: Optional[Dict[str, str]] = None) -> bool:
-        trace_id = (headers or {}).get(TRACE_HEADER) or None
+        h = headers or {}
+        trace_id = h.get(TRACE_HEADER) or None
         try:
+            # decoded inside the try: a malformed class/deadline/tenant is
+            # a 400 at the fleet edge, same as at the single-process edge
+            traffic = protocol.decode_traffic(
+                klass=h.get(CLASS_HEADER), deadline_ms=h.get(DEADLINE_HEADER),
+                tenant=h.get(TENANT_HEADER))
             if method == "GET" and target == "/healthz":
                 await _respond_json(writer, 200, {
                     "status": "ok",
@@ -464,17 +495,20 @@ class FleetRouter:
                                "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
                 # historical alias for /v1/ychg
-                await self._http_analyze(body, writer, keep, trace_id)
+                await self._http_analyze(body, writer, keep, trace_id,
+                                         traffic=traffic)
             elif method == "POST" and target == "/v1/analyze_batch":
-                await self._http_analyze_batch(body, writer, trace_id)
+                await self._http_analyze_batch(body, writer, trace_id,
+                                               traffic=traffic)
                 keep = False
             elif method == "POST" and target == "/v1/pipeline":
-                await self._http_pipeline(body, writer, keep, trace_id)
+                await self._http_pipeline(body, writer, keep, trace_id,
+                                          traffic=traffic)
             elif method == "POST" and target.startswith("/v1/"):
                 opname = target[len("/v1/"):]
                 if opname in op_names():
                     await self._http_analyze(body, writer, keep, trace_id,
-                                             op=opname)
+                                             op=opname, traffic=traffic)
                 else:
                     await _respond_json(writer, 404, {
                         "error": f"unknown op {opname!r}",
@@ -495,12 +529,18 @@ class FleetRouter:
 
     async def _submit(self, item: Dict[str, Any],
                       trace: Any = None, op: Optional[str] = None,
-                      stages: Optional[List[str]] = None) -> Dict[str, Any]:
+                      stages: Optional[List[str]] = None,
+                      traffic: Optional[Dict[str, Any]] = None,
+                      ) -> Dict[str, Any]:
         """Admit one encoded mask through the DRR scheduler and await the
         worker's response frame. decode_array validates the payload and
         yields shape/dtype for the bucket + routing key; the DECODED mask
-        goes no further — the worker gets the client's original bytes."""
+        goes no further — the worker gets the client's original bytes.
+        ``traffic`` (klass/deadline_ms/tenant) rides the request into the
+        scheduler, where quota and deadline admission run BEFORE any
+        worker is touched."""
         tr = trace if trace is not None else NULL_TRACE
+        traffic = traffic or {}
         mask = protocol.decode_array(item["mask"])
         side = pick_bucket_side(mask.shape, self.config.bucket_sides)
         op_key = "+".join(stages) if stages else (op or "ychg")
@@ -508,7 +548,10 @@ class FleetRouter:
             payload=item["mask"], skey=routing_key(mask, op_key),
             bucket=(op_key, side, str(mask.dtype)),
             t_submit=time.monotonic(), future=Future(),
-            op_key=op_key, stages=stages, trace=tr)
+            op_key=op_key, stages=stages, trace=tr,
+            klass=traffic.get("klass"),
+            deadline_ms=traffic.get("deadline_ms"),
+            tenant=traffic.get("tenant"))
         loop = asyncio.get_running_loop()
         # submit on the executor: a "block" park must not stall the loop
         t_gate = time.monotonic()
@@ -527,6 +570,20 @@ class FleetRouter:
         self._drain.observe(self.completed_total)
         return self._drain.retry_after_s(self._scheduler.backlog())
 
+    def _shed_response(self, e: ServiceOverloaded) -> Dict[str, Any]:
+        """The 429 body for a router-side shed. Quota/deadline sheds carry
+        their own exact Retry-After on the exception; a plain overload
+        shed falls back to the drain-rate estimate. ``kind`` names the
+        check that tripped, same contract as the single-process edge."""
+        retry = getattr(e, "retry_after_s", None)
+        if retry is None:
+            retry = self._retry_hint_s()
+        kind = {"DeadlineExceeded": "deadline",
+                "TenantQuotaExceeded": "quota"}.get(
+                    type(e).__name__, "overload")
+        return {"error": str(e), "status": 429, "kind": kind,
+                "retry_after_s": round(retry, 3)}
+
     def _frame_to_response(self, frame: Dict[str, Any],
                            rid: Any) -> Tuple[int, Dict[str, Any]]:
         """A worker response frame -> (status, body), ids rewritten to the
@@ -542,20 +599,20 @@ class FleetRouter:
                             keep: bool,
                             trace_id: Optional[str] = None,
                             op: Optional[str] = None,
-                            stages: Optional[List[str]] = None) -> None:
+                            stages: Optional[List[str]] = None,
+                            traffic: Optional[Dict[str, Any]] = None) -> None:
         tr = maybe_trace(trace_id, process="router")
         try:
             payload = json.loads(body)
             rid = payload.get("id")
             try:
-                frame = await self._submit(payload, tr, op=op, stages=stages)
+                frame = await self._submit(payload, tr, op=op, stages=stages,
+                                           traffic=traffic)
             except ServiceOverloaded as e:
-                retry = self._retry_hint_s()
+                out = self._shed_response(e)
+                retry = out["retry_after_s"]
                 await _respond_json(
-                    writer, 429,
-                    {"error": str(e), "status": 429,
-                     "retry_after_s": round(retry, 3)},
-                    keep,
+                    writer, 429, out, keep,
                     extra=[("Retry-After", str(max(1, math.ceil(retry))))])
                 return
             except FrontendError as e:
@@ -574,7 +631,8 @@ class FleetRouter:
 
     async def _http_pipeline(self, body: bytes, writer: asyncio.StreamWriter,
                              keep: bool,
-                             trace_id: Optional[str] = None) -> None:
+                             trace_id: Optional[str] = None,
+                             traffic: Optional[Dict[str, Any]] = None) -> None:
         """``POST /v1/pipeline`` — validate the stage list here (cheap,
         deterministic), then forward as a pipeline RPC frame to the mask's
         ring owner; the worker runs the compound request device-resident."""
@@ -585,11 +643,14 @@ class FleetRouter:
             raise protocol.ProtocolError(
                 "'stages' must be a non-empty list of op names")
         await self._http_analyze(body, writer, keep, trace_id,
-                                 stages=[str(s) for s in stages])
+                                 stages=[str(s) for s in stages],
+                                 traffic=traffic)
 
     async def _http_analyze_batch(self, body: bytes,
                                   writer: asyncio.StreamWriter,
-                                  trace_id: Optional[str] = None) -> None:
+                                  trace_id: Optional[str] = None,
+                                  traffic: Optional[Dict[str, Any]] = None,
+                                  ) -> None:
         """Chunked NDJSON in COMPLETION order, same contract as the
         single-process front end."""
         tr = maybe_trace(trace_id, process="router")
@@ -601,10 +662,10 @@ class FleetRouter:
         async def run_one(i: int, item: Dict[str, Any]) -> Dict[str, Any]:
             rid = item.get("id", i)
             try:
-                frame = await self._submit({"mask": item}, tr)
+                frame = await self._submit({"mask": item}, tr,
+                                           traffic=traffic)
             except ServiceOverloaded as e:
-                return {"id": rid, "error": str(e), "status": 429,
-                        "retry_after_s": round(self._retry_hint_s(), 3)}
+                return dict(self._shed_response(e), id=rid)
             except protocol.ProtocolError as e:
                 return {"id": rid, "error": str(e), "status": 400}
             except FrontendError as e:
@@ -716,6 +777,25 @@ class FleetRouter:
                   "requests no live worker could serve")
         b.counter("ychg_fleet_completed_total", self.completed_total,
                   "requests answered through the router")
+        b.counter("ychg_fleet_shed_deadline_total",
+                  self._scheduler.shed_deadline,
+                  "requests shed at the router edge: deadline unmeetable")
+        b.counter("ychg_fleet_shed_quota_total", self._scheduler.shed_quota,
+                  "requests shed at the router edge: tenant over quota")
+        shed_by_class = self._scheduler.shed_by_class
+        if shed_by_class:
+            b.header("ychg_fleet_shed_class_total", "counter",
+                     "router-edge sheds by traffic class")
+            for klass, n in sorted(shed_by_class.items()):
+                b.sample("ychg_fleet_shed_class_total",
+                         (("class", klass),), n)
+        shed_by_tenant = self._scheduler.shed_by_tenant
+        if shed_by_tenant:
+            b.header("ychg_fleet_shed_tenant_total", "counter",
+                     "router-edge sheds by tenant")
+            for tenant, n in sorted(shed_by_tenant.items()):
+                b.sample("ychg_fleet_shed_tenant_total",
+                         (("tenant", tenant),), n)
         b.gauge("ychg_fleet_queue_depth", self._scheduler.backlog(),
                 "router-side admitted-but-unforwarded requests")
         b.gauge("ychg_fleet_drain_rate_rps", round(self._drain.rate(), 3),

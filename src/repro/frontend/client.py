@@ -34,6 +34,34 @@ from repro.obs import maybe_trace
 TRACE_HEADER = "X-YCHG-Trace"
 
 
+def _traffic_headers(klass: Optional[str], deadline_ms: Optional[float],
+                     tenant: Optional[str]) -> Dict[str, str]:
+    """The traffic-shaping headers for one request (docs/traffic.md);
+    absent kwargs send nothing, so an unshaped request is byte-for-byte
+    the pre-traffic-classes wire request."""
+    headers: Dict[str, str] = {}
+    if klass is not None:
+        headers[protocol.TRAFFIC_CLASS_HEADER] = str(klass)
+    if deadline_ms is not None:
+        headers[protocol.TRAFFIC_DEADLINE_HEADER] = repr(float(deadline_ms))
+    if tenant is not None:
+        headers[protocol.TRAFFIC_TENANT_HEADER] = str(tenant)
+    return headers
+
+
+def _put_traffic_fields(frame: Dict[str, Any], klass: Optional[str],
+                        deadline_ms: Optional[float],
+                        tenant: Optional[str]) -> None:
+    """RPC-frame twin of :func:`_traffic_headers`: set only the fields
+    given, so an unshaped frame is byte-for-byte the pre-traffic frame."""
+    if klass is not None:
+        frame["klass"] = str(klass)
+    if deadline_ms is not None:
+        frame["deadline_ms"] = float(deadline_ms)
+    if tenant is not None:
+        frame["tenant"] = str(tenant)
+
+
 class FrontendError(RuntimeError):
     """A non-2xx response from the front end (with its HTTP status)."""
 
@@ -48,11 +76,19 @@ class FrontendOverloaded(FrontendError):
     ``retry_after_s`` is the server's estimate of how long the current
     backlog needs to drain (the ``Retry-After`` header, float precision
     from the JSON body when present).
+
+    ``kind`` distinguishes what shed the request: ``"overload"`` (an
+    admission bound), ``"deadline"`` (predicted delay past the request's
+    ``deadline_ms``), or ``"quota"`` (tenant token bucket empty) — the
+    body's ``kind`` field, defaulting to ``"overload"`` for older
+    servers.
     """
 
-    def __init__(self, message: str, retry_after_s: float = 1.0):
+    def __init__(self, message: str, retry_after_s: float = 1.0,
+                 kind: str = "overload"):
         super().__init__(message, status=429)
         self.retry_after_s = retry_after_s
+        self.kind = kind
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,7 +220,9 @@ class YCHGClient:
 
     def analyze(self, mask: np.ndarray, id: Any = None,
                 trace_id: Optional[str] = None, *,
-                op: Optional[str] = None) -> Dict[str, np.ndarray]:
+                op: Optional[str] = None, klass: Optional[str] = None,
+                deadline_ms: Optional[float] = None,
+                tenant: Optional[str] = None) -> Dict[str, np.ndarray]:
         """One mask -> the ``to_host()``-shaped result dict (bit-identical
         to in-process ``service.submit(mask).result().to_host()``).
 
@@ -193,25 +231,35 @@ class YCHGClient:
         format. ``trace_id`` propagates over the ``X-YCHG-Trace`` header
         so the server's spans join the caller's trace; the client's own
         encode + wire spans land in this process's flight recorder under
-        the same id."""
+        the same id. ``klass`` / ``deadline_ms`` / ``tenant`` ride the
+        traffic-shaping headers (docs/traffic.md); a shed comes back as
+        :class:`FrontendOverloaded` with ``kind`` naming the check that
+        tripped."""
         path = "/v1/analyze" if op is None else f"/v1/{op}"
         return self._analyze_path(path, mask, id, trace_id,
-                                  wire_op=op or "ychg")
+                                  wire_op=op or "ychg",
+                                  traffic=_traffic_headers(
+                                      klass, deadline_ms, tenant))
 
     def pipeline(self, mask: np.ndarray, stages: Sequence[str],
-                 id: Any = None, trace_id: Optional[str] = None,
-                 ) -> Dict[str, np.ndarray]:
+                 id: Any = None, trace_id: Optional[str] = None, *,
+                 klass: Optional[str] = None,
+                 deadline_ms: Optional[float] = None,
+                 tenant: Optional[str] = None) -> Dict[str, np.ndarray]:
         """One mask through ``POST /v1/pipeline``; the terminal stage's
         ``to_host()``-shaped result dict."""
         stages = [str(s) for s in stages]
         if not stages:
             raise ValueError("pipeline needs at least one stage")
         return self._analyze_path("/v1/pipeline", mask, id, trace_id,
-                                  wire_op=stages[-1], stages=stages)
+                                  wire_op=stages[-1], stages=stages,
+                                  traffic=_traffic_headers(
+                                      klass, deadline_ms, tenant))
 
     def _analyze_path(self, path: str, mask: np.ndarray, id: Any,
                       trace_id: Optional[str], *, wire_op: str,
                       stages: Optional[List[str]] = None,
+                      traffic: Optional[Dict[str, str]] = None,
                       ) -> Dict[str, np.ndarray]:
         tr = maybe_trace(trace_id, process="client")
         try:
@@ -223,8 +271,10 @@ class YCHGClient:
             body = json.dumps(payload_obj).encode()
             t1 = time.monotonic()
             tr.add("client.encode", t0, t1, bytes=len(body))
-            headers = {TRACE_HEADER: tr.trace_id} if tr.enabled else None
-            resp = self._request("POST", path, body, headers)
+            headers = dict(traffic) if traffic else {}
+            if tr.enabled:
+                headers[TRACE_HEADER] = tr.trace_id
+            resp = self._request("POST", path, body, headers or None)
             payload = resp.read()
             tr.add("client.wire", t1, time.monotonic(),
                    status=resp.status)
@@ -235,7 +285,8 @@ class YCHGClient:
                     obj = {}
                 raise FrontendOverloaded(
                     obj.get("error", "overloaded"),
-                    retry_after_s=_retry_after_s(obj, resp.headers))
+                    retry_after_s=_retry_after_s(obj, resp.headers),
+                    kind=obj.get("kind", "overload"))
             if resp.status != 200:
                 raise FrontendError(payload.decode(errors="replace"),
                                     resp.status)
@@ -246,8 +297,10 @@ class YCHGClient:
 
     def analyze_batch(self, masks: Sequence[np.ndarray],
                       ids: Optional[Iterable[Any]] = None,
-                      trace_id: Optional[str] = None,
-                      ) -> Iterator[BatchItem]:
+                      trace_id: Optional[str] = None, *,
+                      klass: Optional[str] = None,
+                      deadline_ms: Optional[float] = None,
+                      tenant: Optional[str] = None) -> Iterator[BatchItem]:
         """Submit a batch; yield :class:`BatchItem` per mask **in the
         server's completion order**, as the lines arrive off the wire."""
         id_list: List[Any] = (list(ids) if ids is not None
@@ -267,8 +320,11 @@ class YCHGClient:
             t1 = time.monotonic()
             tr.add("client.encode", t0, t1, bytes=len(body),
                    masks=len(items))
-            headers = {TRACE_HEADER: tr.trace_id} if tr.enabled else None
-            resp = self._request("POST", "/v1/analyze_batch", body, headers)
+            headers = _traffic_headers(klass, deadline_ms, tenant)
+            if tr.enabled:
+                headers[TRACE_HEADER] = tr.trace_id
+            resp = self._request("POST", "/v1/analyze_batch", body,
+                                 headers or None)
             if resp.status != 200:
                 payload = resp.read()
                 raise FrontendError(payload.decode(errors="replace"),
@@ -352,20 +408,27 @@ class AsyncRPCClient:
     _call = call   # pre-fleet internal name, kept for callers/tests
 
     async def analyze(self, mask: np.ndarray, *,
-                      op: Optional[str] = None) -> Dict[str, np.ndarray]:
+                      op: Optional[str] = None, klass: Optional[str] = None,
+                      deadline_ms: Optional[float] = None,
+                      tenant: Optional[str] = None) -> Dict[str, np.ndarray]:
         frame: Dict[str, Any] = {
             "op": "analyze", "mask": protocol.encode_array(np.asarray(mask))}
         if op is not None:
             frame["opname"] = op
+        _put_traffic_fields(frame, klass, deadline_ms, tenant)
         resp = await self._call(frame)
         return self._unwrap(resp, op or "ychg")
 
-    async def pipeline(self, mask: np.ndarray,
-                       stages: Sequence[str]) -> Dict[str, np.ndarray]:
+    async def pipeline(self, mask: np.ndarray, stages: Sequence[str], *,
+                       klass: Optional[str] = None,
+                       deadline_ms: Optional[float] = None,
+                       tenant: Optional[str] = None) -> Dict[str, np.ndarray]:
         stages = [str(s) for s in stages]
-        resp = await self._call({
+        frame: Dict[str, Any] = {
             "op": "pipeline", "stages": stages,
-            "mask": protocol.encode_array(np.asarray(mask))})
+            "mask": protocol.encode_array(np.asarray(mask))}
+        _put_traffic_fields(frame, klass, deadline_ms, tenant)
+        resp = await self._call(frame)
         return self._unwrap(resp, stages[-1] if stages else "ychg")
 
     @staticmethod
@@ -375,7 +438,8 @@ class AsyncRPCClient:
         status = int(resp.get("status", 500))
         if status == 429:
             raise FrontendOverloaded(resp.get("error", "overloaded"),
-                                     retry_after_s=_retry_after_s(resp, {}))
+                                     retry_after_s=_retry_after_s(resp, {}),
+                                     kind=resp.get("kind", "overload"))
         raise FrontendError(resp.get("error", "rpc error"), status)
 
     async def health(self) -> Dict[str, Any]:

@@ -55,6 +55,44 @@ def result_fields(op: str) -> tuple:
 # result, far below anything that could balloon a peer's memory
 MAX_FRAME_BYTES = 64 * 1024 * 1024
 
+# Traffic-shaping contract (docs/traffic.md): one name per transport.
+# HTTP requests carry these headers; RPC frames carry the matching
+# optional fields "klass", "deadline_ms", "tenant". None of the three
+# ever changes a payload, cache key, or routing key — a classed result
+# is bit-identical to an unclassed one.
+TRAFFIC_CLASS_HEADER = "X-YCHG-Class"
+TRAFFIC_DEADLINE_HEADER = "X-YCHG-Deadline-Ms"
+TRAFFIC_TENANT_HEADER = "X-YCHG-Tenant"
+
+
+def decode_traffic(klass: Any = None, deadline_ms: Any = None,
+                   tenant: Any = None) -> Dict[str, Any]:
+    """Validate the three optional traffic-shaping fields off the wire.
+
+    Accepts raw header strings or RPC frame JSON values; returns the
+    ``Service.submit`` kwargs dict (``klass`` / ``deadline_ms`` /
+    ``tenant``, absent fields as None). Malformed values raise
+    :class:`ProtocolError` — a bad deadline is a 400-class client error,
+    never a 500.
+    """
+    out: Dict[str, Any] = {"klass": None, "deadline_ms": None,
+                           "tenant": None}
+    if klass is not None:
+        if not isinstance(klass, str) or not klass.strip():
+            raise ProtocolError(f"malformed traffic class {klass!r}")
+        out["klass"] = klass.strip()
+    if deadline_ms is not None:
+        try:
+            out["deadline_ms"] = float(deadline_ms)
+        except (TypeError, ValueError) as e:
+            raise ProtocolError(
+                f"malformed deadline_ms {deadline_ms!r}: {e}") from e
+    if tenant is not None:
+        if not isinstance(tenant, str) or not tenant.strip():
+            raise ProtocolError(f"malformed tenant {tenant!r}")
+        out["tenant"] = tenant.strip()
+    return out
+
 
 class ProtocolError(ValueError):
     """A malformed wire payload (bad JSON shape, dtype, length, frame)."""

@@ -68,6 +68,13 @@ from repro.service.metrics import bucket_labels
 # its trace id here and this process's spans join that trace
 TRACE_HEADER = "x-ychg-trace"
 
+# traffic-shaping headers (docs/traffic.md), lowercased to match
+# _parse_head's header normalisation; the canonical spellings live in
+# repro.frontend.protocol next to the matching RPC frame fields
+CLASS_HEADER = protocol.TRAFFIC_CLASS_HEADER.lower()
+DEADLINE_HEADER = protocol.TRAFFIC_DEADLINE_HEADER.lower()
+TENANT_HEADER = protocol.TRAFFIC_TENANT_HEADER.lower()
+
 # executor width: how many clients may sit inside service.submit at once
 # (under "block" each parked worker IS one unit of propagated backpressure)
 DEFAULT_SUBMIT_WORKERS = 32
@@ -164,27 +171,40 @@ class FrontendServer:
 
     # ----------------------------------------------------- service bridging
 
-    async def _submit(self, mask, trace=None, op=None, stages=None) -> Any:
+    async def _submit(self, mask, trace=None, op=None, stages=None,
+                      traffic=None) -> Any:
         """submit on the executor (a "block" park never blocks the loop),
         then await the service future on the loop. ``trace`` joins the
         service's stage spans to this request's trace (the frontend stays
         the finisher). ``op`` selects a single operator; ``stages`` an
-        ordered pipeline (mutually exclusive with ``op``)."""
+        ordered pipeline (mutually exclusive with ``op``). ``traffic`` is
+        the validated klass/deadline_ms/tenant kwargs dict from
+        :func:`protocol.decode_traffic`."""
         loop = asyncio.get_running_loop()
+        traffic = traffic or {}
         if stages is not None:
             fn = functools.partial(self.service.submit_pipeline, mask,
-                                   stages, trace=trace)
+                                   stages, trace=trace, **traffic)
         else:
             fn = functools.partial(self.service.submit, mask, op=op,
-                                   trace=trace)
+                                   trace=trace, **traffic)
         cf = await loop.run_in_executor(self._pool, fn)
         return await asyncio.wrap_future(cf)
 
     def _overload_body(self, exc: Exception) -> Tuple[Dict[str, Any], float]:
+        """429 body + Retry-After for any admission shed. Deadline and
+        quota sheds carry their own exact retry_after_s (the scheduler
+        computed it at the shed); plain overload falls back to the
+        frontend's drain-rate estimate over the current backlog."""
         m = self.service.metrics()
         self._drain.observe(m.completed)
-        retry = self._drain.retry_after_s(m.queue_depth)
-        return ({"error": str(exc), "status": 429,
+        retry = getattr(exc, "retry_after_s", None)
+        if retry is None:
+            retry = self._drain.retry_after_s(m.queue_depth)
+        kind = {"DeadlineExceeded": "deadline",
+                "TenantQuotaExceeded": "quota"}.get(
+                    type(exc).__name__, "overload")
+        return ({"error": str(exc), "status": 429, "kind": kind,
                  "retry_after_s": round(retry, 3)}, retry)
 
     # ------------------------------------------------------------- HTTP side
@@ -235,8 +255,16 @@ class FrontendServer:
                      writer: asyncio.StreamWriter, keep: bool,
                      headers: Optional[Dict[str, str]] = None) -> bool:
         """Dispatch one request; returns whether to keep the connection."""
-        trace_id = (headers or {}).get(TRACE_HEADER) or None
+        h = headers or {}
+        trace_id = h.get(TRACE_HEADER) or None
         try:
+            # validated once per request: a malformed class/deadline/tenant
+            # header is a 400 via the ProtocolError handler below, never
+            # a silently-dropped field
+            traffic = protocol.decode_traffic(
+                klass=h.get(CLASS_HEADER),
+                deadline_ms=h.get(DEADLINE_HEADER),
+                tenant=h.get(TENANT_HEADER))
             if method == "GET" and target == "/healthz":
                 m = self.service.metrics()
                 await _respond_json(writer, 200, {
@@ -253,17 +281,20 @@ class FrontendServer:
                                "application/json", keep)
             elif method == "POST" and target == "/v1/analyze":
                 # kept alias: the pre-multi-op route is exactly /v1/ychg
-                await self._http_analyze(body, writer, keep, trace_id)
+                await self._http_analyze(body, writer, keep, trace_id,
+                                         traffic=traffic)
             elif method == "POST" and target == "/v1/analyze_batch":
-                await self._http_analyze_batch(body, writer, trace_id)
+                await self._http_analyze_batch(body, writer, trace_id,
+                                               traffic=traffic)
                 keep = False   # chunked stream ends the exchange
             elif method == "POST" and target == "/v1/pipeline":
-                await self._http_pipeline(body, writer, keep, trace_id)
+                await self._http_pipeline(body, writer, keep, trace_id,
+                                          traffic=traffic)
             elif method == "POST" and target.startswith("/v1/"):
                 opname = target[len("/v1/"):]
                 if opname in op_names():
                     await self._http_analyze(body, writer, keep, trace_id,
-                                             op=opname)
+                                             op=opname, traffic=traffic)
                 else:
                     await _respond_json(writer, 404, {
                         "error": f"unknown op {opname!r}",
@@ -286,7 +317,8 @@ class FrontendServer:
 
     async def _http_analyze(self, body: bytes, writer: asyncio.StreamWriter,
                             keep: bool, trace_id: Optional[str] = None,
-                            op: Optional[str] = None) -> None:
+                            op: Optional[str] = None,
+                            traffic: Optional[Dict[str, Any]] = None) -> None:
         tr = maybe_trace(trace_id, process="frontend")
         try:
             t0 = time.monotonic()
@@ -295,7 +327,7 @@ class FrontendServer:
             tr.add("frontend.parse", t0, time.monotonic(),
                    bytes=len(body))
             try:
-                result = await self._submit(mask, tr, op=op)
+                result = await self._submit(mask, tr, op=op, traffic=traffic)
             except ServiceOverloaded as e:
                 out, retry = self._overload_body(e)
                 await _respond_json(
@@ -315,7 +347,8 @@ class FrontendServer:
 
     async def _http_pipeline(self, body: bytes, writer: asyncio.StreamWriter,
                              keep: bool,
-                             trace_id: Optional[str] = None) -> None:
+                             trace_id: Optional[str] = None,
+                             traffic: Optional[Dict[str, Any]] = None) -> None:
         """One mask through an ordered op chain; answers with the terminal
         stage's result fields. Spec errors (unknown op, terminal op mid-
         chain, empty stage list) come back 400 via the route's ValueError
@@ -332,7 +365,8 @@ class FrontendServer:
             mask = protocol.decode_array(payload["mask"])
             tr.add("frontend.parse", t0, time.monotonic(), bytes=len(body))
             try:
-                result = await self._submit(mask, tr, stages=stages)
+                result = await self._submit(mask, tr, stages=stages,
+                                            traffic=traffic)
             except ServiceOverloaded as e:
                 out, retry = self._overload_body(e)
                 await _respond_json(
@@ -349,7 +383,9 @@ class FrontendServer:
 
     async def _http_analyze_batch(self, body: bytes,
                                   writer: asyncio.StreamWriter,
-                                  trace_id: Optional[str] = None) -> None:
+                                  trace_id: Optional[str] = None,
+                                  traffic: Optional[Dict[str, Any]] = None,
+                                  ) -> None:
         """Chunked NDJSON, one line per mask in COMPLETION order."""
         tr = maybe_trace(trace_id, process="frontend")
         t0 = time.monotonic()
@@ -364,7 +400,7 @@ class FrontendServer:
             rid = item.get("id", i)
             try:
                 mask = protocol.decode_array(item)
-                result = await self._submit(mask, tr)
+                result = await self._submit(mask, tr, traffic=traffic)
             except ServiceOverloaded as e:
                 out, _ = self._overload_body(e)
                 out["id"] = rid
@@ -422,6 +458,21 @@ class FrontendServer:
                  "sheds attributed to the rejected request's bucket")
         for bucket, count in m.shed_by_bucket:
             b.sample("ychg_shed_bucket_total", bucket_labels(bucket), count)
+        # traffic-shaping attribution (docs/traffic.md): every shed lands
+        # in the class counter; quota sheds additionally name the tenant
+        b.counter("ychg_shed_deadline_total", m.shed_deadline,
+                  "submits shed because the predicted delay exceeded "
+                  "their deadline")
+        b.counter("ychg_shed_quota_total", m.shed_quota,
+                  "submits shed by a tenant token bucket")
+        b.header("ychg_shed_class_total", "counter",
+                 "sheds attributed to the rejected request's traffic class")
+        for klass, count in m.shed_by_class:
+            b.sample("ychg_shed_class_total", (("class", klass),), count)
+        b.header("ychg_shed_tenant_total", "counter",
+                 "quota sheds attributed to the over-quota tenant")
+        for tenant, count in m.shed_by_tenant:
+            b.sample("ychg_shed_tenant_total", (("tenant", tenant),), count)
         b.gauge("ychg_queue_depth", m.queue_depth,
                 "requests waiting + pending-in-bucket")
         b.gauge("ychg_hit_rate", m.hit_rate, "cache hit rate")
@@ -538,13 +589,21 @@ class FrontendServer:
                                 "error": f"unknown op {opname!r}",
                                 "ops": list(op_names()), "status": 404})
                     return
+                # the frame fields mirror the HTTP headers one to one
+                # (protocol.decode_traffic is the shared validator)
+                traffic = protocol.decode_traffic(
+                    klass=frame.get("klass"),
+                    deadline_ms=frame.get("deadline_ms"),
+                    tenant=frame.get("tenant"))
                 mask = protocol.decode_array(frame["mask"])
                 tr.add("frontend.parse", t0, time.monotonic())
                 if stages is not None:
-                    result = await self._submit(mask, tr, stages=stages)
+                    result = await self._submit(mask, tr, stages=stages,
+                                                traffic=traffic)
                     wire_op = str(stages[-1])
                 else:
-                    result = await self._submit(mask, tr, op=opname)
+                    result = await self._submit(mask, tr, op=opname,
+                                                traffic=traffic)
                     wire_op = opname or self.service.engine.op
             except ServiceOverloaded as e:
                 out, _ = self._overload_body(e)

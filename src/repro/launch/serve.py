@@ -22,6 +22,8 @@ Usage:
       --out results/ --ckpt ckpt/               # resumable bulk job
   PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
       --scene-smoke                             # CI scene assert
+  PYTHONPATH=src python -m repro.launch.serve --workload ychg \\
+      --res 64 --batch 4 --slo-smoke            # CI traffic-class assert
 """
 
 from __future__ import annotations
@@ -459,6 +461,191 @@ def op_smoke(args):
                     f"series after serving it")
         print("op smoke: unknown op answered 404 naming the registry; "
               "dispatch histogram carries one op= label per op", flush=True)
+
+
+def slo_smoke(args):
+    """CI end-to-end assert for traffic classes over loopback HTTP
+    (docs/traffic.md): the class/deadline/tenant headers must reach the
+    scheduler and change admission, visibly in the wire answer and on
+    ``/metrics``.
+
+      1. **priority preemption** — against a parked batch-class backlog,
+         an interactive-class wire request overtakes the backlog: its
+         completion timestamp precedes the last batch completion and
+         batch requests are still pending when it returns. A
+         deterministic sub-leg (one admission slot, held) then sheds a
+         batch-class wire request and asserts the 429 carries
+         ``kind="overload"`` and ``ychg_shed_class_total{class="batch"}``
+         moves.
+      2. **deadline shed** — with the drain-rate estimator white-box
+         seeded to exactly 2 requests/s, a wire request with
+         ``X-YCHG-Deadline-Ms: 100`` sheds at admission with
+         ``kind="deadline"`` and the honest Retry-After
+         ``predicted 0.5s - deadline 0.1s = 0.4s``; a dead-on-arrival
+         ``deadline_ms=0`` probe sheds with the clamp floor (0.05s).
+      3. **tenant quota** — a two-token burst tenant admits 2 of 4 wire
+         requests and sheds the rest with ``kind="quota"`` and the
+         30s-clamped Retry-After, while another tenant admits freely;
+         ``ychg_shed_tenant_total{tenant="acme"}`` counts exactly the
+         sheds.
+
+    Exits nonzero on any failure — the slo-smoke CI job runs this.
+    """
+    from repro.data import modis
+    from repro.engine import Engine
+    from repro.frontend import FrontendOverloaded, ServerThread, YCHGClient
+    from repro.service import ServiceConfig, YCHGService
+
+    res, batch_res = args.res, 2 * args.res
+    engine = Engine()
+
+    def expect_shed(client, kind, **kw):
+        try:
+            client.analyze(modis.snowfield(res, seed=kw.pop("seed")), **kw)
+        except FrontendOverloaded as e:
+            if e.kind != kind:
+                raise SystemExit(f"slo smoke: shed carried kind={e.kind!r}, "
+                                 f"wanted {kind!r}")
+            return e
+        raise SystemExit(f"slo smoke: expected a {kind} 429, got a result")
+
+    def counter(text, needle):
+        for line in text.splitlines():
+            if line.startswith(needle):
+                return float(line.rsplit(" ", 1)[1])
+        return 0.0
+
+    # ---- leg 1: priority preemption against a live batch backlog
+    cfg = ServiceConfig(bucket_sides=(res, batch_res),
+                        max_batch=args.batch, max_delay_ms=2.0)
+    with YCHGService(engine, cfg) as svc, \
+            ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        client.wait_ready(timeout=120.0)
+        # warm ONLY the interactive bucket: the batch backlog's first
+        # flush then includes the batch bucket's compile, so the backlog
+        # is reliably still pending when the interactive request lands
+        client.analyze(modis.snowfield(res, seed=100), klass="interactive")
+        done_at = {}
+        batch_futs = [svc.submit(modis.snowfield(batch_res, seed=200 + i),
+                                 klass="batch")
+                      for i in range(4 * args.batch)]
+        for i, f in enumerate(batch_futs):
+            f.add_done_callback(
+                lambda _f, i=i: done_at.setdefault(i, time.perf_counter()))
+        client.analyze(modis.snowfield(res, seed=300), klass="interactive")
+        t_interactive = time.perf_counter()
+        pending = sum(1 for f in batch_futs if not f.done())
+        for f in batch_futs:
+            f.result(timeout=600)
+        deadline = time.perf_counter() + 30.0
+        while (len(done_at) < len(batch_futs)
+               and time.perf_counter() < deadline):
+            time.sleep(0.001)   # done-callbacks can lag result() briefly
+        if pending == 0 or t_interactive >= max(done_at.values()):
+            raise SystemExit(
+                f"slo smoke [priority]: interactive request did not "
+                f"overtake the batch backlog ({pending} of "
+                f"{len(batch_futs)} batch requests pending at its "
+                f"completion)")
+        print(f"slo smoke: interactive wire request overtook the "
+              f"batch-class backlog ({pending}/{len(batch_futs)} batch "
+              f"requests still pending at its completion)", flush=True)
+
+    # leg 1b: deterministic class-labelled shed — ONE admission slot,
+    # held by a parked submit, so the batch-class wire request sheds
+    ocfg = ServiceConfig(bucket_sides=(res,), max_batch=args.batch,
+                         max_delay_ms=10_000.0, max_queue_depth=1,
+                         bucket_queue_depth=1, overload_policy="shed")
+    with YCHGService(engine, ocfg) as osvc:
+        holder = osvc.submit(modis.snowfield(res, seed=400))
+        with ServerThread(osvc) as srv, \
+                YCHGClient("127.0.0.1", srv.port) as client:
+            e = expect_shed(client, "overload", seed=401, klass="batch")
+            if not e.retry_after_s > 0:
+                raise SystemExit("slo smoke [priority]: overload 429 "
+                                 "carried no positive retry_after_s")
+            shed = counter(client.metrics_text(),
+                           'ychg_shed_class_total{class="batch"}')
+        holder.result(timeout=600)
+    if shed != 1:
+        raise SystemExit(f"slo smoke [priority]: shed_class_total for the "
+                         f"batch class is {shed}, wanted 1")
+    print('slo smoke: wire shed counted under '
+          'ychg_shed_class_total{class="batch"}', flush=True)
+
+    # ---- leg 2: deadline shed with an honest Retry-After. Seed the
+    # drain-rate estimator white-box to exactly 2 req/s on an idle
+    # service (depth 0): predicted wait is (0+1)/2 = 0.5s, so a 100ms
+    # deadline sheds with retry_after = 0.5 - 0.1 = 0.4s exactly.
+    with YCHGService(engine, ServiceConfig(
+            bucket_sides=(res,), max_batch=args.batch)) as svc, \
+            ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        # cold estimator first: deadline_ms=0 is dead on arrival even
+        # without evidence, and its zero lateness clamps to the floor
+        dead = expect_shed(client, "deadline", seed=501, deadline_ms=0.0)
+        if abs(dead.retry_after_s - 0.05) > 1e-9:
+            raise SystemExit(
+                f"slo smoke [deadline]: dead-on-arrival retry_after_s "
+                f"{dead.retry_after_s} != the 0.05s clamp floor")
+        est = svc._scheduler._drain_rate
+        est.observe(0, now=0.0)
+        est.observe(20, now=10.0)
+        e = expect_shed(client, "deadline", seed=500, deadline_ms=100.0)
+        if abs(e.retry_after_s - 0.4) > 1e-9:
+            raise SystemExit(
+                f"slo smoke [deadline]: retry_after_s {e.retry_after_s} "
+                f"!= the honest lateness 0.4s (predicted 0.5s - "
+                f"deadline 0.1s)")
+        sheds = counter(client.metrics_text(), "ychg_shed_deadline_total")
+        if sheds != 2:
+            raise SystemExit(f"slo smoke [deadline]: "
+                             f"ychg_shed_deadline_total {sheds}, wanted 2")
+    print("slo smoke: 100ms deadline shed at admission with the honest "
+          "0.4s Retry-After; dead-on-arrival probe shed at the clamp "
+          "floor", flush=True)
+
+    # ---- leg 3: tenant token buckets over the wire. burst=2 at a
+    # starvation refill rate: 2 of 4 "acme" requests admit, 2 shed with
+    # the 30s-clamped Retry-After; "beta" admits freely.
+    tcfg = ServiceConfig(bucket_sides=(res,), max_batch=args.batch,
+                         max_delay_ms=2.0, tenant_rate=0.001,
+                         tenant_burst=2)
+    with YCHGService(engine, tcfg) as svc, \
+            ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        admitted, sheds = 0, 0
+        for i in range(4):
+            try:
+                client.analyze(modis.snowfield(res, seed=600 + i),
+                               tenant="acme")
+                admitted += 1
+            except FrontendOverloaded as e:
+                if e.kind != "quota":
+                    raise SystemExit(f"slo smoke [quota]: shed carried "
+                                     f"kind={e.kind!r}, wanted 'quota'")
+                if e.retry_after_s != 30.0:
+                    raise SystemExit(
+                        f"slo smoke [quota]: retry_after_s "
+                        f"{e.retry_after_s} != the 30s clamp for a "
+                        f"starvation-rate refill")
+                sheds += 1
+        client.analyze(modis.snowfield(res, seed=700), tenant="beta")
+        metrics = client.metrics_text()
+        if (admitted, sheds) != (2, 2):
+            raise SystemExit(f"slo smoke [quota]: burst 2 of 4 offered "
+                             f"should admit 2 and shed 2, got "
+                             f"({admitted}, {sheds})")
+        by_tenant = counter(metrics, 'ychg_shed_tenant_total{tenant="acme"}')
+        if by_tenant != sheds or counter(
+                metrics, "ychg_shed_quota_total") != sheds:
+            raise SystemExit(
+                f"slo smoke [quota]: /metrics counted {by_tenant} acme "
+                f"sheds, client saw {sheds}")
+    print("slo smoke: tenant quota admitted the burst, shed the rest "
+          "with kind=quota and the clamped Retry-After; counters tie "
+          "out per tenant", flush=True)
 
 
 def _worker_args(args):
@@ -938,6 +1125,10 @@ def main():
                     help="ychg only: scene subsystem end-to-end assert "
                          "(stitch bit-identity, kill->resume "
                          "byte-identity, online/offline agreement)")
+    ap.add_argument("--slo-smoke", action="store_true",
+                    help="ychg only: traffic-class loopback assert "
+                         "(priority preemption, deadline shed with an "
+                         "honest Retry-After, tenant-quota 429s)")
     scn = ap.add_argument_group("scene", "knobs for the 'scene' subcommand")
     scn.add_argument("--scene-height", type=int, default=2048)
     scn.add_argument("--scene-width", type=int, default=1024)
@@ -971,18 +1162,33 @@ def main():
         else:
             print("compile cache: unsupported by this jax build, "
                   "continuing without", flush=True)
+    def smoke(tag, fn):
+        """Run a CI smoke leg; on ANY failure dump the flight recorder
+        first (with --trace-dump, CI uploads it as a debugging artifact)
+        and re-raise so the job still exits nonzero."""
+        try:
+            fn(args)
+        except BaseException:
+            path = obs.auto_dump(f"{tag}-failure")
+            if path:
+                print(f"{tag}: flight recorder dumped to {path}",
+                      flush=True)
+            raise
+
     if args.command == "scene":
         scene_run(args)
     elif args.scene_smoke:
-        scene_smoke(args)
+        smoke("scene-smoke", scene_smoke)
     elif args.fleet_smoke:
-        fleet_smoke(args)
+        smoke("fleet-smoke", fleet_smoke)
     elif args.fleet:
         serve_fleet(args)
     elif args.op_smoke:
-        op_smoke(args)
+        smoke("op-smoke", op_smoke)
     elif args.frontend_smoke:
-        frontend_smoke(args)
+        smoke("frontend-smoke", frontend_smoke)
+    elif args.slo_smoke:
+        smoke("slo-smoke", slo_smoke)
     elif args.listen:
         serve_listen(args)
     elif args.connect:

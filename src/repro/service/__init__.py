@@ -46,19 +46,27 @@ from repro.service.batching import (
 from repro.service.cache import ResultCache, make_key
 from repro.service.metrics import MetricsRecorder, ServiceMetrics
 from repro.service.scheduler import (
+    DeadlineExceeded,
+    DrainRate,
     Scheduler,
     SchedulerConfig,
     ServiceOverloaded,
+    TenantQuotaExceeded,
+    TokenBucket,
     pick_sub_batch,
     sub_batch_ladder,
 )
 from repro.service.service import Service, ServiceConfig, YCHGService
 
 __all__ = [
+    "DeadlineExceeded",
+    "DrainRate",
     "MetricsRecorder",
     "ResultCache",
     "Scheduler",
     "SchedulerConfig",
+    "TenantQuotaExceeded",
+    "TokenBucket",
     "Service",
     "ServiceConfig",
     "ServiceMetrics",

@@ -100,6 +100,13 @@ class ServiceMetrics:
     shed_by_bucket: Tuple[Tuple[Any, int], ...] = ()
     peer_hits: int = 0        # local misses served by a sibling's cache
     peer_misses: int = 0      # outbound probes no sibling could answer
+    # traffic-class/tenant attribution (docs/traffic.md): every shed also
+    # lands in shed_by_class; quota sheds additionally in shed_by_tenant;
+    # shed_deadline/shed_quota split the total by the check that tripped
+    shed_by_class: Tuple[Tuple[str, int], ...] = ()
+    shed_by_tenant: Tuple[Tuple[str, int], ...] = ()
+    shed_deadline: int = 0    # DeadlineExceeded sheds at admission
+    shed_quota: int = 0       # TenantQuotaExceeded sheds at admission
     # scene/bulk workload attached via service.attach_scene_progress():
     # granule-scale streaming progress (repro.scene), all zero when no
     # scene job is publishing through this service
@@ -140,7 +147,8 @@ class MetricsRecorder:
         self.coalesced = 0
         self.batches = 0
         self._latency_hists: Dict[Any, Histogram] = {}
-        self._stage_hists: Dict[Tuple[str, Any], Histogram] = {}
+        self._stage_hists: Dict[Tuple[str, Any, Optional[str]],
+                                Histogram] = {}
         self._shapes: set = set()
         self._real_px = 0
         self._dispatched_px = 0
@@ -222,9 +230,16 @@ class MetricsRecorder:
             self._t_last = now
 
     def observe_stage(self, stage: str, bucket: Any,
-                      seconds: float) -> None:
-        """One stage timing sample (see STAGES for the taxonomy)."""
-        key = (stage, bucket)
+                      seconds: float, klass: Optional[str] = None) -> None:
+        """One stage timing sample (see STAGES for the taxonomy).
+
+        ``klass`` adds a ``class`` label to the series — the service
+        passes it for the class-differentiated stages (``queue_wait``:
+        the one a lower priority class actually pays) so an SLO dashboard
+        reads per-class wait straight off ``ychg_stage_seconds``.
+        Tenants deliberately get NO histogram label (unbounded
+        cardinality); per-tenant visibility is the shed counters."""
+        key = (stage, bucket, klass)
         with self._lock:
             hist = self._stage_hists.get(key)
             if hist is None:
@@ -236,6 +251,9 @@ class MetricsRecorder:
                  cache_misses: int, backend: str, shed: int = 0,
                  blocked: int = 0,
                  shed_by_bucket: Tuple[Tuple[Any, int], ...] = (),
+                 shed_by_class: Tuple[Tuple[str, int], ...] = (),
+                 shed_by_tenant: Tuple[Tuple[str, int], ...] = (),
+                 shed_deadline: int = 0, shed_quota: int = 0,
                  peer_hits: int = 0, peer_misses: int = 0,
                  scene_tiles_done: int = 0, scene_tiles_total: int = 0,
                  scene_resumes: int = 0, scene_stitch_time_s: float = 0.0,
@@ -246,9 +264,10 @@ class MetricsRecorder:
                 for bucket, hist in sorted(
                     self._latency_hists.items(), key=lambda kv: str(kv[0])))
             stage_hists = tuple(
-                ((("stage", stage),) + bucket_labels(bucket),
+                ((("stage", stage),) + bucket_labels(bucket)
+                 + ((("class", klass),) if klass is not None else ()),
                  hist.snapshot())
-                for (stage, bucket), hist in sorted(
+                for (stage, bucket, klass), hist in sorted(
                     self._stage_hists.items(), key=lambda kv: str(kv[0])))
             merged = empty_snapshot(DEFAULT_LATENCY_BOUNDS)
             for _labels, snap in latency_hists:
@@ -279,6 +298,10 @@ class MetricsRecorder:
                 ),
                 backend=backend,
                 shed_by_bucket=shed_by_bucket,
+                shed_by_class=shed_by_class,
+                shed_by_tenant=shed_by_tenant,
+                shed_deadline=shed_deadline,
+                shed_quota=shed_quota,
                 peer_hits=peer_hits,
                 peer_misses=peer_misses,
                 scene_tiles_done=scene_tiles_done,

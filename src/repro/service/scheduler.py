@@ -54,6 +54,37 @@ mechanisms fix that:
     accrued across rounds can never pay for a peer-starving mega-burst.
     ``fair=False`` keeps the legacy arrival-order flushes so benchmarks
     can measure exactly what fairness buys (``benchmarks/bench_frontend``).
+
+**Traffic classes.** Real traffic is not one crowd: an interactive caller
+and an overnight backfill should not compete as equals. ``classes`` names
+the priority classes in strict order (first = highest); a request opts in
+with a ``.klass`` attribute (default ``default_class``). Scheduling is
+**strict priority across classes, DRR within a class**: the dispatch flows
+are ``(class, bucket)`` pairs, and ``_serve_ready`` only serves the
+highest class that has a ready flow — a lower class dispatches exactly
+when no higher class could. Within one class the per-bucket DRR above is
+unchanged, so the fairness work of PR 5/6 composes instead of being
+replaced. Admission bounds stay class-blind (depth is depth), but every
+shed is attributed to its class for the metrics.
+
+**Deadlines.** A request may carry ``.deadline_ms`` — a completion budget,
+not a hint. At admission the scheduler predicts this request's completion
+delay from the :class:`DrainRate` estimator (the same rolling
+completions-per-second window behind the frontend's 429 ``Retry-After``)
+as ``(depth + 1) / rate`` and shes with the typed
+:class:`DeadlineExceeded` — carrying an honest ``retry_after_s`` — when
+the prediction already exceeds the budget. Work that is already dead is
+never enqueued; the queue never carries a corpse. A cold estimator (no
+completions observed yet) admits: shedding needs evidence.
+
+**Tenant quotas.** A request may carry ``.tenant`` — an identity string.
+With ``tenant_rate > 0``, each tenant draws from its own
+:class:`TokenBucket` (``tenant_rate`` tokens/s, ``tenant_burst`` burst);
+an empty bucket sheds with :class:`TenantQuotaExceeded` and the exact
+time until the next token as ``retry_after_s``. Quota and deadline sheds
+are **always** sheds, even under ``overload_policy="block"`` — parking a
+request that is over quota (or already dead) would grant it the very
+capacity the policy denies it.
 """
 
 from __future__ import annotations
@@ -73,6 +104,93 @@ class ServiceOverloaded(RuntimeError):
     ``overload_policy="shed"``. Typed so producers can catch exactly the
     overload case (retry later, degrade, load-shed upstream) without
     swallowing real errors."""
+
+
+class DeadlineExceeded(ServiceOverloaded):
+    """Submit shed at admission: the drain-rate estimator predicts this
+    request would complete after its ``deadline_ms`` budget, so enqueueing
+    it would only burn capacity on work that is already dead. Subclasses
+    :class:`ServiceOverloaded` so every existing 429 mapping applies;
+    ``retry_after_s`` is the honest wait for the backlog the prediction
+    blamed."""
+
+    def __init__(self, msg: str, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
+class TenantQuotaExceeded(ServiceOverloaded):
+    """Submit shed at admission: the request's tenant token bucket is
+    empty. ``retry_after_s`` is the exact time until the bucket refills
+    one token at ``tenant_rate`` — not an estimate."""
+
+    def __init__(self, msg: str, retry_after_s: float):
+        super().__init__(msg)
+        self.retry_after_s = retry_after_s
+
+
+class DrainRate:
+    """Rolling completions-per-second estimator with injectable clocks.
+
+    The scheduler feeds it one sample per retirement
+    (``observe(completed_total)``); ``rate()`` is the slope across the
+    window, ``None`` until two samples with forward progress exist — a
+    cold estimator must never justify a shed. Tests pass explicit ``now``
+    values so the arithmetic is pinned with synthetic timestamps, never
+    wall clocks (the tests/README.md timing policy)."""
+
+    def __init__(self, window: int = 32):
+        self._samples: "Deque[Tuple[float, int]]" = deque(maxlen=window)
+
+    def observe(self, completed_total: int,
+                now: Optional[float] = None) -> None:
+        self._samples.append(
+            (time.monotonic() if now is None else now, completed_total))
+
+    def rate(self) -> Optional[float]:
+        if len(self._samples) < 2:
+            return None
+        t0, c0 = self._samples[0]
+        t1, c1 = self._samples[-1]
+        if t1 <= t0 or c1 <= c0:
+            return None
+        return (c1 - c0) / (t1 - t0)
+
+
+class TokenBucket:
+    """Per-tenant rate limiter: ``rate`` tokens/s up to ``burst`` banked.
+
+    ``take(now)`` refills by elapsed time, then either spends one token
+    (returns ``0.0``: admitted) or returns the seconds until one token
+    exists (shed, and the honest ``Retry-After``). The clock is an
+    argument, not ``time.monotonic()``, so the refill algebra is testable
+    with exact synthetic timestamps."""
+
+    def __init__(self, rate: float, burst: float):
+        if rate <= 0:
+            raise ValueError(f"rate must be > 0, got {rate}")
+        if burst < 1:
+            raise ValueError(f"burst must be >= 1, got {burst}")
+        self.rate = rate
+        self.burst = burst
+        self._tokens = burst
+        self._last: Optional[float] = None
+
+    def take(self, now: float) -> float:
+        if self._last is not None:
+            self._tokens = min(
+                self.burst, self._tokens + (now - self._last) * self.rate)
+        self._last = now
+        if self._tokens >= 1.0:
+            self._tokens -= 1.0
+            return 0.0
+        return (1.0 - self._tokens) / self.rate
+
+
+def _clamp_retry(seconds: float) -> float:
+    """An honest but bounded Retry-After: never 0 (a tight retry loop),
+    never absurd (same clamp as the frontend's 429 estimator)."""
+    return min(30.0, max(0.05, seconds))
 
 
 def pick_sub_batch(occupancy: int, max_batch: int) -> int:
@@ -129,6 +247,17 @@ class SchedulerConfig:
                      default: one max_batch-worth of requests per bucket
                      per round) or in arrival order (False, the legacy
                      policy, kept for apples-to-apples benchmarking).
+    classes          priority classes in STRICT order, highest first. A
+                     request selects one with ``.klass``; dispatch flows
+                     are (class, bucket) pairs — strict priority across
+                     classes, DRR fairness within one. A single-class
+                     config is exactly the pre-class scheduler.
+    default_class    the class of a request with no ``.klass`` (must be
+                     a member of ``classes``).
+    tenant_rate      per-tenant token-bucket refill, requests/second;
+                     0.0 disables quotas entirely.
+    tenant_burst     per-tenant banked-token cap; 0.0 means
+                     ``max(1, tenant_rate)``.
     """
 
     max_batch: int = 8
@@ -139,8 +268,27 @@ class SchedulerConfig:
     overload_policy: str = "block"
     sub_batches: bool = True
     fair: bool = True
+    classes: Tuple[str, ...] = ("interactive", "standard", "batch")
+    default_class: str = "standard"
+    tenant_rate: float = 0.0
+    tenant_burst: float = 0.0
 
     def __post_init__(self):
+        object.__setattr__(self, "classes", tuple(self.classes))
+        if not self.classes or len(set(self.classes)) != len(self.classes):
+            raise ValueError(
+                f"classes must be a non-empty tuple of unique names, "
+                f"got {self.classes!r}")
+        if self.default_class not in self.classes:
+            raise ValueError(
+                f"default_class {self.default_class!r} not in "
+                f"classes {self.classes!r}")
+        if self.tenant_rate < 0:
+            raise ValueError(
+                f"tenant_rate must be >= 0, got {self.tenant_rate}")
+        if self.tenant_burst < 0:
+            raise ValueError(
+                f"tenant_burst must be >= 0, got {self.tenant_burst}")
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.inflight_jobs < 1:
@@ -198,19 +346,29 @@ class Scheduler:
         self._complete = complete
         self._fail = fail
         self._q: "queue.Queue" = queue.Queue()
-        self._pending: Dict[Hashable, List[Any]] = {}
+        # dispatch flows are (class_index, bucket) pairs: strict priority
+        # across the first element, DRR across the second
+        self._pending: Dict[Tuple[int, Hashable], List[Any]] = {}
         self._inflight: "Deque[_Job]" = deque()   # scheduler thread only
-        # DRR state, scheduler thread only: _rr is the ring of buckets with
-        # pending requests (activation order), _deficit the per-bucket
+        # DRR state, scheduler thread only: _rr is the ring of flows with
+        # pending requests (activation order), _deficit the per-flow
         # request credits banked across rounds
-        self._rr: "Deque[Hashable]" = deque()
-        self._deficit: Dict[Hashable, int] = {}
+        self._rr: "Deque[Tuple[int, Hashable]]" = deque()
+        self._deficit: Dict[Tuple[int, Hashable], int] = {}
+        self._class_index = {k: i for i, k in enumerate(config.classes)}
         self._cond = threading.Condition()
         self._depth = 0       # admitted and not yet retired
         self._depth_by_bucket: Dict[Hashable, int] = {}
         self._shed = 0
         self._shed_by_bucket: Dict[Hashable, int] = {}
+        self._shed_by_class: Dict[str, int] = {}
+        self._shed_by_tenant: Dict[str, int] = {}
+        self._shed_deadline = 0
+        self._shed_quota = 0
         self._blocked = 0
+        self._completed = 0   # retired requests, feeds the drain estimator
+        self._drain_rate = DrainRate()
+        self._tenants: Dict[str, TokenBucket] = {}
         self._closed = False
         self._started = False
         self._thread = threading.Thread(
@@ -234,15 +392,49 @@ class Scheduler:
         (``tests/test_scheduler.py::test_blocked_producers_never_deadlock_close``).
         """
         bucket = getattr(request, "bucket", None)
+        klass = self.class_of(request)
+        if klass not in self._class_index:
+            raise ValueError(
+                f"unknown traffic class {klass!r} "
+                f"(classes: {self.config.classes!r})")
+        tenant = getattr(request, "tenant", None)
+        deadline_ms = getattr(request, "deadline_ms", None)
         with self._cond:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            # quota and deadline are ALWAYS shed-at-admission (never
+            # block): parking an over-quota or already-dead request
+            # would grant it the capacity the check denies it
+            if tenant is not None and self.config.tenant_rate > 0:
+                wait_s = self._tenant_bucket(tenant).take(time.monotonic())
+                if wait_s > 0.0:
+                    self._count_shed(bucket, klass, tenant=tenant)
+                    self._shed_quota += 1
+                    raise TenantQuotaExceeded(
+                        f"tenant {tenant!r} over quota "
+                        f"(tenant_rate={self.config.tenant_rate}/s): next "
+                        f"token in {wait_s:.3f}s",
+                        retry_after_s=_clamp_retry(wait_s))
+            if deadline_ms is not None:
+                predicted_s = self.predicted_wait_s()
+                dead = deadline_ms <= 0 or (
+                    predicted_s is not None
+                    and predicted_s * 1e3 > deadline_ms)
+                if dead:
+                    late_s = (predicted_s if predicted_s is not None
+                              else 0.0) - max(deadline_ms, 0.0) / 1e3
+                    self._count_shed(bucket, klass)
+                    self._shed_deadline += 1
+                    raise DeadlineExceeded(
+                        f"deadline {deadline_ms}ms unmeetable: predicted "
+                        f"completion delay "
+                        f"{0.0 if predicted_s is None else predicted_s:.3f}s "
+                        f"behind {self._depth} admitted request(s)",
+                        retry_after_s=_clamp_retry(late_s))
             over = self._over_bound(bucket)
             if over is not None:
                 if self.config.overload_policy == "shed":
-                    self._shed += 1
-                    self._shed_by_bucket[bucket] = (
-                        self._shed_by_bucket.get(bucket, 0) + 1)
+                    self._count_shed(bucket, klass)
                     raise ServiceOverloaded(over)
                 self._blocked += 1
                 while (self._over_bound(bucket) is not None
@@ -277,6 +469,54 @@ class Scheduler:
                     f"'{self.config.overload_policy}')")
         return None
 
+    def class_of(self, request: Any) -> str:
+        """The request's traffic class (``default_class`` when unset)."""
+        k = getattr(request, "klass", None)
+        return self.config.default_class if k is None else k
+
+    def _flow_of(self, request: Any) -> Tuple[int, Hashable]:
+        """The dispatch flow a request belongs to: (class rank, bucket).
+        Class validated at submit; an unknown class here (a request that
+        bypassed submit) falls back to the default class rather than
+        wedging the loop."""
+        ci = self._class_index.get(
+            self.class_of(request),
+            self._class_index[self.config.default_class])
+        return (ci, getattr(request, "bucket", None))
+
+    def _tenant_bucket(self, tenant: str) -> TokenBucket:
+        """This tenant's token bucket, created on first sight. Caller
+        holds the lock."""
+        tb = self._tenants.get(tenant)
+        if tb is None:
+            burst = self.config.tenant_burst or max(
+                1.0, self.config.tenant_rate)
+            tb = TokenBucket(self.config.tenant_rate, burst)
+            self._tenants[tenant] = tb
+        return tb
+
+    def _count_shed(self, bucket: Hashable, klass: str,
+                    tenant: Optional[str] = None) -> None:
+        """Attribute one shed to its bucket, class, and (when the quota
+        tripped) tenant. Caller holds the lock."""
+        self._shed += 1
+        self._shed_by_bucket[bucket] = self._shed_by_bucket.get(bucket, 0) + 1
+        self._shed_by_class[klass] = self._shed_by_class.get(klass, 0) + 1
+        if tenant is not None:
+            self._shed_by_tenant[tenant] = (
+                self._shed_by_tenant.get(tenant, 0) + 1)
+
+    def predicted_wait_s(self) -> Optional[float]:
+        """Predicted completion delay for a request admitted NOW — the
+        admitted-but-unretired depth (plus this request) over the drain
+        rate. ``None`` while the estimator is cold (no shed without
+        evidence). Caller may hold the lock (reads one int + the
+        estimator, which only the completion path mutates)."""
+        rate = self._drain_rate.rate()
+        if rate is None or rate <= 0:
+            return None
+        return (self._depth + 1) / rate
+
     # ------------------------------------------------------------- introspection
 
     @property
@@ -298,6 +538,38 @@ class Scheduler:
         bucket_queue_depth bounds)."""
         with self._cond:
             return dict(self._depth_by_bucket)
+
+    @property
+    def shed_by_class(self) -> Dict[str, int]:
+        """Sheds attributed to the rejected request's traffic class
+        (every shed carries a class, whichever check tripped)."""
+        with self._cond:
+            return dict(self._shed_by_class)
+
+    @property
+    def shed_by_tenant(self) -> Dict[str, int]:
+        """Quota sheds attributed to the over-quota tenant."""
+        with self._cond:
+            return dict(self._shed_by_tenant)
+
+    @property
+    def shed_deadline(self) -> int:
+        """Submits shed because the predicted delay exceeded their
+        deadline (DeadlineExceeded)."""
+        with self._cond:
+            return self._shed_deadline
+
+    @property
+    def shed_quota(self) -> int:
+        """Submits shed by a tenant token bucket (TenantQuotaExceeded)."""
+        with self._cond:
+            return self._shed_quota
+
+    @property
+    def completed_total(self) -> int:
+        """Requests retired (completed or failed after dispatch)."""
+        with self._cond:
+            return self._completed
 
     @property
     def blocked(self) -> int:
@@ -358,11 +630,19 @@ class Scheduler:
             raise
 
     def _run_loop(self) -> None:
+        served_last = False
         while True:
             with self._cond:
                 oldest = (min(rs[0].t_submit for rs in self._pending.values())
                           if self._pending else None)
-            if oldest is not None:
+            if served_last:
+                # the last round flushed something, so more flows may be
+                # ready NOW (full, or aged): poll the queue without
+                # sleeping — this poll between rounds is what lets a
+                # higher-class arrival preempt a lower class's backlog at
+                # flush granularity
+                timeout = 0.0
+            elif oldest is not None:
                 timeout = max(0.0, oldest + self._delay() - time.monotonic())
             elif self._inflight:
                 timeout = 0.0   # work outstanding: poll, don't sleep
@@ -382,12 +662,12 @@ class Scheduler:
                 if item is _SHUTDOWN:
                     shutdown = True
                     break
-                full = self._enqueue_pending(item)
-                # legacy (fair=False) flushes a bucket the moment it fills,
+                full_flow = self._enqueue_pending(item)
+                # legacy (fair=False) flushes a flow the moment it fills,
                 # i.e. strictly in arrival order; fair mode banks the whole
                 # drain first so _serve_ready can interleave buckets
-                if full and not self.config.fair:
-                    self._flush(item.bucket)
+                if full_flow is not None and not self.config.fair:
+                    self._flush(full_flow)
                 try:
                     item = self._q.get_nowait()
                 except queue.Empty:
@@ -395,6 +675,7 @@ class Scheduler:
             if shutdown:
                 break
             served = self._serve_ready()
+            served_last = served > 0
             # idle: retire ONE job, then loop back to poll the queue, so a
             # request arriving mid-drain is bucketed after at most one
             # completion instead of waiting behind every outstanding job
@@ -411,86 +692,105 @@ class Scheduler:
             return self.config.max_batch
         return self._max_batch_for(bucket)
 
-    def _enqueue_pending(self, item: Any) -> bool:
-        """Bank one ingested request in its bucket (activating the bucket
-        in the DRR ring if new); True when the bucket is now full."""
+    def _enqueue_pending(
+            self, item: Any) -> Optional[Tuple[int, Hashable]]:
+        """Bank one ingested request in its (class, bucket) flow
+        (activating the flow in the DRR ring if new); returns the flow
+        when it is now full, else None."""
+        flow = self._flow_of(item)
         with self._cond:
-            reqs = self._pending.get(item.bucket)
+            reqs = self._pending.get(flow)
             if reqs is None:
-                self._pending[item.bucket] = reqs = []
-                if item.bucket not in self._rr:
-                    self._rr.append(item.bucket)
+                self._pending[flow] = reqs = []
+                if flow not in self._rr:
+                    self._rr.append(flow)
             reqs.append(item)
-            return len(reqs) >= self._max_batch(item.bucket)
+            if len(reqs) >= self._max_batch(flow[1]):
+                return flow
+            return None
 
-    def _ready_buckets(self, now: float) -> List[Hashable]:
-        """Buckets due for a flush — full, or oldest request aged past the
-        delay window — in ring (activation) order."""
+    def _ready_flows(self, now: float) -> List[Tuple[int, Hashable]]:
+        """Flows due for a flush — full, or oldest request aged past the
+        delay window — restricted to the HIGHEST priority class with any
+        ready flow (strict priority), in ring (activation) order within
+        it. A lower class is served exactly when no higher class is
+        ready."""
         delay = self._delay()
         with self._cond:
-            ready = {b for b, rs in self._pending.items()
-                     if len(rs) >= self._max_batch(b)
+            ready = {f for f, rs in self._pending.items()
+                     if len(rs) >= self._max_batch(f[1])
                      or now - rs[0].t_submit >= delay}
-        for b in ready:
-            if b not in self._rr:   # ring self-repair: a bookkeeping bug
-                self._rr.append(b)  # may cost fairness, never liveness
-        return [b for b in self._rr if b in ready]
+        if not ready:
+            return []
+        for f in ready:
+            if f not in self._rr:   # ring self-repair: a bookkeeping bug
+                self._rr.append(f)  # may cost fairness, never liveness
+        best = min(ci for ci, _ in ready)
+        return [f for f in self._rr if f in ready and f[0] == best]
 
     def _serve_ready(self) -> int:
-        """Flush every ready bucket; returns the number of flushes.
+        """Serve ONE round over the ready flows; returns flushes made.
+
+        ``_ready_flows`` restricts the round to the highest priority
+        class with work ready, and the run loop polls the ingest queue
+        between rounds — so an arrival in a higher class preempts a
+        lower class's NEXT flush (never an in-progress batch: preemption
+        granularity is one flush), even mid-backlog.
 
         Fair mode is textbook deficit round robin in request units: each
-        outer round visits every ready bucket once in ring order, banks a
-        quantum of ``max_batch`` credits, and flushes while the deficit
-        covers the next flush's occupancy — so a bucket with a deep
-        backlog dispatches ~one full batch per round, interleaved with
-        every other bucket, and an emptied bucket forfeits its credit
-        (no hoarding). Legacy mode flushes ready buckets in ring order
-        with no quantum, which together with the ingest-time
-        flush-on-full reproduces the old arrival-order policy.
+        round visits every ready flow of the serving class once in ring
+        order, banks a quantum of ``max_batch`` credits, and flushes
+        while the deficit covers the next flush's occupancy — so a bucket
+        with a deep backlog dispatches ~one full batch per round,
+        interleaved with every other bucket of its class, and an emptied
+        flow forfeits its credit (no hoarding). Legacy mode flushes ready
+        flows in ring order with no quantum, which together with the
+        ingest-time flush-on-full reproduces the old arrival-order
+        policy.
         """
         served = 0
-        while True:
-            now = time.monotonic()
-            ready = self._ready_buckets(now)
-            if not ready:
-                return served
-            if not self.config.fair:
-                for b in ready:
-                    self._flush(b)
-                    served += 1
-                continue
+        now = time.monotonic()
+        ready = self._ready_flows(now)
+        if not ready:
+            return served
+        if not self.config.fair:
             for b in ready:
-                # per-bucket quantum: each bucket's round is worth its own
-                # max_batch in request credits, and the banked deficit is
-                # CAPPED at one quantum beyond the largest possible flush
-                # (= that same max_batch): DRR's fairness guarantee is only
-                # as good as the bank stays bounded — credit accrued while
-                # a bucket sits pending-but-unready must never later pay
-                # for a mega-burst that flushes its whole backlog ahead of
-                # every other bucket (tests/test_scheduler.py pins the
-                # no-mega-burst behavior)
-                quantum = self._max_batch(b)
-                deficit_cap = quantum + quantum
-                self._deficit[b] = min(
-                    self._deficit.get(b, 0) + quantum, deficit_cap)
-                while True:
-                    with self._cond:
-                        rs = self._pending.get(b)
-                        occ = min(len(rs), quantum) if rs else 0
-                        is_ready = rs is not None and (
-                            len(rs) >= quantum
-                            or now - rs[0].t_submit >= self._delay())
-                    if not is_ready or self._deficit.get(b, 0) < occ:
-                        break
-                    self._deficit[b] -= occ
-                    self._flush(b)
-                    served += 1
+                self._flush(b)
+                served += 1
+            return served
+        for b in ready:
+            # per-bucket quantum: each bucket's round is worth its own
+            # max_batch in request credits, and the banked deficit is
+            # CAPPED at one quantum beyond the largest possible flush
+            # (= that same max_batch): DRR's fairness guarantee is only
+            # as good as the bank stays bounded — credit accrued while
+            # a bucket sits pending-but-unready must never later pay
+            # for a mega-burst that flushes its whole backlog ahead of
+            # every other bucket (tests/test_scheduler.py pins the
+            # no-mega-burst behavior)
+            quantum = self._max_batch(b[1])
+            deficit_cap = quantum + quantum
+            self._deficit[b] = min(
+                self._deficit.get(b, 0) + quantum, deficit_cap)
+            while True:
+                with self._cond:
+                    rs = self._pending.get(b)
+                    occ = min(len(rs), quantum) if rs else 0
+                    is_ready = rs is not None and (
+                        len(rs) >= quantum
+                        or now - rs[0].t_submit >= self._delay())
+                if not is_ready or self._deficit.get(b, 0) < occ:
+                    break
+                self._deficit[b] -= occ
+                self._flush(b)
+                served += 1
+        return served
 
     def _drain(self) -> None:
         """Shutdown drain: ingest everything still admitted, then flush
-        bucket by bucket in ring order (each flush capped at ``max_batch``)
-        until nothing is pending, and retire every in-flight job."""
+        flow by flow — class priority first, ring order within a class,
+        each flush capped at ``max_batch`` — until nothing is pending,
+        and retire every in-flight job."""
         while True:
             try:
                 item = self._q.get_nowait()
@@ -501,35 +801,41 @@ class Scheduler:
             self._enqueue_pending(item)
         while True:
             with self._cond:
-                # ring order, with a direct-listing fallback so a ring
-                # bookkeeping bug could only ever cost fairness, not the
-                # drain's termination
-                buckets = ([b for b in self._rr if b in self._pending]
-                           or list(self._pending))
-            if not buckets:
+                # class priority, then ring order, with a direct-listing
+                # fallback so a ring bookkeeping bug could only ever cost
+                # fairness, not the drain's termination
+                ring = {f: i for i, f in enumerate(self._rr)}
+                flows = sorted(self._pending,
+                               key=lambda f: (f[0], ring.get(f, len(ring))))
+            if not flows:
                 break
-            for bucket in buckets:
-                self._flush(bucket)
+            for flow in flows:
+                self._flush(flow)
         while self._inflight:
             self._retire_one()
 
-    def _flush(self, bucket: Hashable) -> None:
-        """Dispatch one batch from a bucket at its sub-batch size; keep at
+    def _flush(self, flow: Tuple[int, Hashable]) -> None:
+        """Dispatch one batch from a flow at its sub-batch size; keep at
         most ``inflight_jobs`` outstanding. A flush takes at most
         ``max_batch`` requests — anything beyond stays pending (and keeps
-        its age), so no flush ever exceeds the compiled-shape ladder."""
+        its age), so no flush ever exceeds the compiled-shape ladder.
+        The dispatch callback still receives the plain bucket: the class
+        is a scheduling concern, not a batching one, and a flush is
+        always single-class (flows never mix classes) so padding and
+        compiled shapes are untouched."""
+        bucket = flow[1]
         max_batch = self._max_batch(bucket)
         with self._cond:
-            reqs = self._pending[bucket]
+            reqs = self._pending[flow]
             requests = reqs[:max_batch]
             rest = reqs[max_batch:]
             if rest:
-                self._pending[bucket] = rest
+                self._pending[flow] = rest
             else:
-                del self._pending[bucket]
-                self._deficit.pop(bucket, None)
+                del self._pending[flow]
+                self._deficit.pop(flow, None)
                 try:
-                    self._rr.remove(bucket)
+                    self._rr.remove(flow)
                 except ValueError:
                     pass
         batch = (pick_sub_batch(len(requests), max_batch)
@@ -560,6 +866,11 @@ class Scheduler:
         per slice) and wake any producers parked at a bound."""
         with self._cond:
             self._depth -= len(requests)
+            self._completed += len(requests)
+            # one drain-rate sample per retirement: the rolling slope of
+            # (monotonic, completed_total) is what deadline admission
+            # divides depth by
+            self._drain_rate.observe(self._completed)
             if requests:
                 b = getattr(requests[0], "bucket", None)
                 left = self._depth_by_bucket.get(b, 0) - len(requests)

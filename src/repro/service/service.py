@@ -121,6 +121,15 @@ class ServiceConfig:
                       drives both the flush size and that op's DRR
                       quantum, so a small-batch op earns proportionally
                       small rounds.
+    classes           traffic classes in strict priority order, highest
+                      first; ``submit(..., klass=...)`` selects one.
+                      Strict priority across classes, DRR within
+                      (docs/traffic.md).
+    default_class     the class of a request submitted without ``klass``.
+    tenant_rate       per-tenant token-bucket refill (requests/s);
+                      0.0 disables tenant quotas.
+    tenant_burst      per-tenant banked-token cap; 0.0 means
+                      ``max(1, tenant_rate)``.
     """
 
     bucket_sides: Tuple[int, ...] = (128, 256, 512, 1024)
@@ -136,8 +145,13 @@ class ServiceConfig:
     fair: bool = True
     op_bucket_sides: Any = ()
     op_max_batch: Any = ()
+    classes: Tuple[str, ...] = ("interactive", "standard", "batch")
+    default_class: str = "standard"
+    tenant_rate: float = 0.0
+    tenant_burst: float = 0.0
 
     def __post_init__(self):
+        object.__setattr__(self, "classes", tuple(self.classes))
         self._check_ladder(self.bucket_sides)
         object.__setattr__(self, "op_bucket_sides", tuple(
             sorted((str(op), tuple(sides))
@@ -183,6 +197,10 @@ class ServiceConfig:
             overload_policy=self.overload_policy,
             sub_batches=self.sub_batches,
             fair=self.fair,
+            classes=self.classes,
+            default_class=self.default_class,
+            tenant_rate=self.tenant_rate,
+            tenant_burst=self.tenant_burst,
         )
 
 
@@ -203,6 +221,13 @@ class _Request:
     t_gate: float = 0.0
     t_admitted: float = 0.0
     t_dispatch: float = 0.0
+    # traffic shaping (docs/traffic.md): the scheduler reads these three
+    # at admission. None klass means config.default_class; none of them
+    # ever enters the cache key, the bucket, or the payload — identical
+    # masks are one cache entry whatever class/tenant asked
+    klass: Optional[str] = None
+    deadline_ms: Optional[float] = None
+    tenant: Optional[str] = None
 
 
 class YCHGService:
@@ -248,7 +273,9 @@ class YCHGService:
     # ------------------------------------------------------------ requests
 
     def submit(self, mask: Any, *, op: Optional[str] = None,
-               trace: Optional[Any] = None) -> "Future[YCHGResult]":
+               trace: Optional[Any] = None, klass: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               tenant: Optional[str] = None) -> "Future[YCHGResult]":
         """Enqueue one (H, W) mask; the future resolves to a ready result.
 
         ``op`` selects the operator (default: the engine's own, normally
@@ -256,6 +283,20 @@ class YCHGService:
         result pytree. Raises :class:`ServiceOverloaded` when the queue is
         at ``max_queue_depth`` under ``overload_policy="shed"``; blocks
         here (not on device work) under ``"block"``.
+
+        Traffic shaping (docs/traffic.md): ``klass`` picks a priority
+        class from ``config.classes`` (default ``config.default_class``;
+        unknown classes raise ``ValueError``); ``deadline_ms`` is a
+        completion budget — admission sheds with
+        :class:`repro.service.scheduler.DeadlineExceeded` when the
+        predicted queue delay already exceeds it; ``tenant`` is the quota
+        identity — an over-quota tenant sheds with
+        :class:`repro.service.scheduler.TenantQuotaExceeded`. All three
+        ride OUTSIDE the cache key and payload, so results stay
+        bit-identical whatever class asked, and a cache hit or a
+        coalesce onto an in-flight leader is served without consuming
+        quota or deadline checks (a hit costs ~nothing to serve; only
+        admission to compute is shaped).
 
         ``trace`` joins this request's stage spans to an existing
         :class:`repro.obs.Trace` (the frontend passes the one it opened
@@ -269,10 +310,15 @@ class YCHGService:
                 f"op {op_key!r} looks like a pipeline spec; use "
                 f"submit_pipeline for ordered op chains")
         backend = self.engine.resolve_backend(op=op_key)
-        return self._submit_keyed(mask, op_key, backend, trace)
+        return self._submit_keyed(mask, op_key, backend, trace,
+                                  klass=klass, deadline_ms=deadline_ms,
+                                  tenant=tenant)
 
     def submit_pipeline(self, mask: Any, stages, *,
-                        trace: Optional[Any] = None) -> "Future":
+                        trace: Optional[Any] = None,
+                        klass: Optional[str] = None,
+                        deadline_ms: Optional[float] = None,
+                        tenant: Optional[str] = None) -> "Future":
         """Enqueue one mask through an ordered op chain (device-resident).
 
         ``stages`` is a sequence of op names, e.g. ``["denoise", "ychg"]``;
@@ -288,10 +334,19 @@ class YCHGService:
         op_key = pipeline_op_key(stages)
         backend = PIPELINE_SEP.join(
             self.engine.resolve_backend(op=s) for s in stages)
-        return self._submit_keyed(mask, op_key, backend, trace)
+        return self._submit_keyed(mask, op_key, backend, trace,
+                                  klass=klass, deadline_ms=deadline_ms,
+                                  tenant=tenant)
 
     def _submit_keyed(self, mask: Any, op_key: str, backend: str,
-                      trace: Optional[Any]) -> "Future":
+                      trace: Optional[Any], *,
+                      klass: Optional[str] = None,
+                      deadline_ms: Optional[float] = None,
+                      tenant: Optional[str] = None) -> "Future":
+        if klass is not None and klass not in self.config.classes:
+            raise ValueError(
+                f"unknown traffic class {klass!r} "
+                f"(classes: {self.config.classes!r})")
         if self._closed:
             raise RuntimeError("service is closed")
         tr = trace if trace is not None else maybe_trace()
@@ -329,7 +384,8 @@ class YCHGService:
                 else:
                     req = _Request(mask=a, key=key, bucket=bucket,
                                    t_submit=time.monotonic(), futures=[fut],
-                                   trace=tr, own_trace=own)
+                                   trace=tr, own_trace=own, klass=klass,
+                                   deadline_ms=deadline_ms, tenant=tenant)
                     self._leaders[key] = req
         t_probe1 = time.monotonic()
         self._recorder.observe_stage("cache_probe", bucket,
@@ -442,6 +498,12 @@ class YCHGService:
             blocked=self._scheduler.blocked,
             shed_by_bucket=tuple(
                 sorted(self._scheduler.shed_by_bucket.items())),
+            shed_by_class=tuple(
+                sorted(self._scheduler.shed_by_class.items())),
+            shed_by_tenant=tuple(
+                sorted(self._scheduler.shed_by_tenant.items())),
+            shed_deadline=self._scheduler.shed_deadline,
+            shed_quota=self._scheduler.shed_quota,
             backend=self.engine.resolve_backend(),
             peer_hits=self.cache.peer_hits,
             peer_misses=self.cache.peer_misses,
@@ -479,9 +541,15 @@ class YCHGService:
             # scheduler can flush before submit() returns), so fall back
             # through the race-free stamps
             start = r.t_admitted or r.t_gate or r.t_submit
+            klass = r.klass or self.config.default_class
             self._recorder.observe_stage("queue_wait", bucket,
-                                         max(0.0, t0 - start))
-            r.trace.add("scheduler.queue_wait", start, t0)
+                                         max(0.0, t0 - start), klass=klass)
+            # class/tenant ride the queue-wait span as metadata: the wait
+            # is the one number traffic shaping changes per class
+            meta = {"klass": klass}
+            if r.tenant is not None:
+                meta["tenant"] = r.tenant
+            r.trace.add("scheduler.queue_wait", start, t0, **meta)
         stack = pad_stack([r.mask for r in requests], side, batch_size,
                           np.dtype(dtype))
         # the host->device transfer of THIS bucket starts here, while the

@@ -1,0 +1,117 @@
+"""`benchmarks/check_bench_regression.py` suite: the CI bench gate.
+
+The gate is a subprocess contract (CI invokes it and trusts the exit
+code), so these tests run it as a subprocess and assert on exit codes
+and output — no wall clocks, no engine, just JSON files in tmp_path.
+
+Two families:
+
+  * **missing/malformed sections fail loudly** — the PR 10 bugfix. The
+    pre-fix gate compared an EMPTY baseline against anything and
+    printed "bench gate passed" (exit 0), and crashed with a bare
+    traceback on a non-object section file. Both are now clean FAIL
+    lines and a nonzero exit: a gate that silently passes on a
+    malformed archive is worse than no gate.
+  * **the slo section** — the committed ``BENCH_slo.json`` passes, the
+    ``--simulate-regression`` self-test trips nonzero, and pointing
+    ``--slo`` at an archive without the slo scenarios fails.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+GATE = REPO / "benchmarks" / "check_bench_regression.py"
+
+
+def run_gate(*args: str) -> "subprocess.CompletedProcess[str]":
+    return subprocess.run(
+        [sys.executable, str(GATE), *args],
+        capture_output=True, text=True, cwd=REPO, timeout=60)
+
+
+def write_json(path: Path, obj) -> str:
+    path.write_text(json.dumps(obj))
+    return str(path)
+
+
+# ------------------------- missing/malformed sections (PR 10 bugfix)
+
+
+def test_empty_baseline_fails_instead_of_passing(tmp_path):
+    """Pre-fix: zero baseline scenarios meant zero checks and a clean
+    'bench gate passed' exit 0 — the silent-pass bug this PR fixes."""
+    empty = {"mode": "quick", "scenarios": []}
+    baseline = write_json(tmp_path / "baseline.json", empty)
+    fresh = write_json(tmp_path / "fresh.json", empty)
+    r = run_gate("--baseline", baseline, "--fresh", fresh)
+    assert r.returncode != 0
+    assert "no scenarios" in r.stdout
+
+
+def test_non_object_section_file_fails_cleanly(tmp_path):
+    """A section file holding a JSON array (not an object) must be a
+    FAIL line and exit 1 — pre-fix it was an AttributeError traceback."""
+    bad = write_json(tmp_path / "fleet.json", [1, 2, 3])
+    r = run_gate("--fleet", bad)
+    assert r.returncode != 0
+    assert "not a JSON object" in r.stdout
+    assert "Traceback" not in r.stderr
+
+
+def test_unreadable_section_file_fails_cleanly(tmp_path):
+    r = run_gate("--slo", str(tmp_path / "does_not_exist.json"))
+    assert r.returncode != 0
+    assert "cannot read" in r.stdout
+    assert "Traceback" not in r.stderr
+
+
+def test_invalid_json_section_file_fails_cleanly(tmp_path):
+    bad = tmp_path / "scene.json"
+    bad.write_text("{not json")
+    r = run_gate("--scene", str(bad))
+    assert r.returncode != 0
+    assert "not valid JSON" in r.stdout
+    assert "Traceback" not in r.stderr
+
+
+# --------------------------------------------------- the slo section
+
+
+def test_committed_slo_archive_passes():
+    r = run_gate("--slo", str(REPO / "BENCH_slo.json"))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "slo gate" in r.stdout and "ok" in r.stdout
+
+
+def test_slo_simulate_regression_self_test_trips():
+    """CI's negative self-test: the degraded archive MUST exit nonzero,
+    tripping every slo check family."""
+    r = run_gate("--slo", str(REPO / "BENCH_slo.json"),
+                 "--simulate-regression")
+    assert r.returncode != 0
+    assert "batch_sheds 0" in r.stdout
+    assert "quota_sheds 0" in r.stdout
+    assert "dead_sheds 0" in r.stdout
+
+
+def test_slo_section_missing_scenarios_fails(tmp_path):
+    """An archive without the slo scenarios (e.g. the wrong BENCH file)
+    must fail each required row by name, not pass by vacuity."""
+    not_slo = write_json(tmp_path / "slo.json",
+                         {"scenarios": [{"scenario": "something_else"}]})
+    r = run_gate("--slo", not_slo)
+    assert r.returncode != 0
+    for row in ("traffic_classes", "deadline_shed", "tenant_quota"):
+        assert f"no {row} scenario" in r.stdout
+
+
+def test_other_sections_still_pass_on_committed_archives():
+    """The PR 10 rework of main() must not break the existing section
+    gates against their committed archives."""
+    r = run_gate("--fleet", str(REPO / "BENCH_fleet.json"),
+                 "--scene", str(REPO / "BENCH_scene.json"),
+                 "--ops", str(REPO / "BENCH_ops.json"))
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -358,6 +358,136 @@ def test_client_survives_malformed_retry_after_header():
         t.join(5)
 
 
+# -------------------------------------------------- traffic shaping (wire)
+
+
+def test_http_classed_request_bit_identical_and_shares_the_cache():
+    """docs/traffic.md bit-identity invariant: class/deadline/tenant
+    shape *when* a request runs, never *what* it computes — they stay
+    out of the cache key, so a fully-decorated wire request is served
+    from the entry an undecorated in-process submit populated, and the
+    result is bit-identical."""
+    mask = _mask((24, 30), seed=70)
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0,
+        tenant_rate=1000.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        want = svc.submit(mask).result(timeout=TIMEOUT).to_host()
+        before = svc.metrics().cache_hits
+        got = client.analyze(mask, klass="interactive",
+                             deadline_ms=60_000.0, tenant="acme")
+        _assert_host_equal(got, want)
+        assert svc.metrics().cache_hits == before + 1
+
+
+def test_traffic_fields_absent_means_absent_bytes():
+    """A request without traffic kwargs sends NO new headers and NO new
+    RPC frame keys — the pre-traffic-class wire format, unchanged."""
+    from repro.frontend.client import _put_traffic_fields, _traffic_headers
+
+    assert _traffic_headers(None, None, None) == {}
+    frame = {"op": "analyze", "id": 1}
+    _put_traffic_fields(frame, None, None, None)
+    assert frame == {"op": "analyze", "id": 1}
+    assert _traffic_headers("batch", 250, "acme") == {
+        protocol.TRAFFIC_CLASS_HEADER: "batch",
+        protocol.TRAFFIC_DEADLINE_HEADER: "250.0",
+        protocol.TRAFFIC_TENANT_HEADER: "acme",
+    }
+
+
+def test_http_malformed_traffic_headers_are_400_not_500():
+    """An unparseable deadline header and an unknown class are client
+    errors (400), never a 500 or a dropped connection."""
+    import http.client
+
+    mask = _mask((16, 16), seed=71)
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=2, max_delay_ms=1.0))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        # the client refuses to build a non-numeric deadline, so craft
+        # the malformed header with a raw connection
+        conn = http.client.HTTPConnection("127.0.0.1", srv.port)
+        try:
+            conn.request(
+                "POST", "/v1/analyze",
+                json.dumps({"mask": protocol.encode_array(mask)}),
+                {protocol.TRAFFIC_DEADLINE_HEADER: "soon",
+                 "Content-Type": "application/json"})
+            resp = conn.getresponse()
+            body = json.loads(resp.read())
+            assert resp.status == 400
+            assert "deadline" in body["error"]
+        finally:
+            conn.close()
+        with pytest.raises(FrontendError) as exc_info:
+            client.analyze(mask, klass="vip")
+        assert exc_info.value.status == 400
+        assert "unknown traffic class" in str(exc_info.value)
+
+
+def test_http_deadline_and_quota_sheds_are_typed_429s():
+    """``deadline_ms=0`` is dead on arrival -> 429 ``kind="deadline"``
+    at the clamp-floor Retry-After (cold estimator: zero lateness); an
+    exhausted one-token tenant bucket -> 429 ``kind="quota"`` at the
+    30s clamp (starvation refill rate), while another tenant admits
+    freely — all deterministic, and all visible on /metrics."""
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(16,), max_batch=2, max_delay_ms=1.0,
+        tenant_rate=0.001, tenant_burst=1))
+    with svc, ServerThread(svc) as srv, \
+            YCHGClient("127.0.0.1", srv.port) as client:
+        with pytest.raises(FrontendOverloaded) as dead:
+            client.analyze(_mask((16, 16), seed=72), deadline_ms=0.0)
+        assert dead.value.kind == "deadline"
+        assert dead.value.status == 429
+        assert dead.value.retry_after_s == pytest.approx(0.05)
+        client.analyze(_mask((16, 16), seed=73), tenant="acme")  # the burst
+        with pytest.raises(FrontendOverloaded) as quota:
+            client.analyze(_mask((16, 16), seed=74), tenant="acme")
+        assert quota.value.kind == "quota"
+        assert quota.value.retry_after_s == pytest.approx(30.0)
+        client.analyze(_mask((16, 16), seed=75), tenant="beta")  # isolated
+        text = client.metrics_text()
+        assert "ychg_shed_deadline_total 1" in text
+        assert "ychg_shed_quota_total 1" in text
+        assert 'ychg_shed_tenant_total{tenant="acme"} 1' in text
+        assert 'tenant="beta"' not in text
+
+
+def test_rpc_traffic_fields_bit_identical_and_typed_deadline_error():
+    """The RPC twin of the traffic contract: frame fields select the
+    policy (a dead deadline sheds with ``kind="deadline"``) without
+    touching the result bytes of an admitted classed request."""
+    mask = _mask((14, 18), seed=76)
+    svc = YCHGService(config=ServiceConfig(
+        bucket_sides=(32,), max_batch=2, max_delay_ms=1.0))
+    with svc, ServerThread(svc, rpc_port=0) as srv:
+        async def go():
+            client = await AsyncRPCClient(
+                "127.0.0.1", srv.rpc_port).connect()
+            try:
+                out = await client.analyze(mask, klass="interactive",
+                                           tenant="acme")
+                try:
+                    await client.analyze(_mask((14, 18), seed=77),
+                                         deadline_ms=0.0)
+                    shed = None
+                except FrontendOverloaded as e:
+                    shed = e
+            finally:
+                await client.aclose()
+            return out, shed
+
+        got, shed = asyncio.run(go())
+        want = svc.submit(mask).result(timeout=TIMEOUT).to_host()
+        _assert_host_equal(got, want)
+        assert shed is not None and shed.kind == "deadline"
+        assert shed.retry_after_s == pytest.approx(0.05)
+
+
 # ---------------------------------------------------------- RPC transport
 
 

@@ -18,9 +18,13 @@ import time
 import pytest
 
 from repro.service.scheduler import (
+    DeadlineExceeded,
+    DrainRate,
     Scheduler,
     SchedulerConfig,
     ServiceOverloaded,
+    TenantQuotaExceeded,
+    TokenBucket,
     pick_sub_batch,
     sub_batch_ladder,
 )
@@ -33,6 +37,10 @@ class Req:
     name: str
     bucket: tuple = ("b", "uint8")
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
+    # traffic-shaping fields (absent = default class, no deadline/tenant)
+    klass: str = None
+    deadline_ms: float = None
+    tenant: str = None
 
 
 class FakeDispatch:
@@ -535,3 +543,223 @@ def test_close_drains_pending_and_inflight():
     assert [b for _, _, b in fake.dispatches] == [4]   # sub-batch on drain
     with pytest.raises(RuntimeError, match="closed"):
         sched.submit(Req("post"))
+
+
+# --------------------------------------- traffic classes (PR 10 tentpole)
+
+
+def test_class_priority_preempts_lower_classes():
+    """Strict priority across classes: with a batch backlog and one
+    request in each higher class enqueued before the loop runs, dispatch
+    order is interactive, standard, then the whole batch backlog — the
+    class outranks both arrival order and DRR round order."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=True)
+    for i in range(16):
+        sched.submit(Req(f"b{i}", bucket=("B", "u8"), klass="batch"))
+    sched.submit(Req("s0", bucket=("B", "u8"), klass="standard"))
+    sched.submit(Req("i0", bucket=("B", "u8"), klass="interactive"))
+    sched.start()
+    sched.close()
+    first = [names[0] for _, names, _ in fake.dispatches]
+    assert first == ["i0", "s0", "b0", "b8"]
+
+
+def test_class_preemption_is_per_flush_not_per_backlog():
+    """An interactive arrival mid-batch-drain jumps the remaining batch
+    flushes: preemption granularity is one flush, never the backlog."""
+    fake = FakeDispatch(gated=True)
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=True, inflight_jobs=1)
+    for i in range(24):                       # three batch-class flushes
+        sched.submit(Req(f"b{i}", bucket=("B", "u8"), klass="batch"))
+    sched.start()
+    # inflight_jobs=1 parks the scheduler retiring flush 0 (flush 1 is
+    # already in flight); the THIRD batch flush has not dispatched yet
+    # when the interactive one lands
+    _wait_until(lambda: 0 in fake.entered and fake.entered[0].is_set(),
+                "first batch flush to park mid-complete")
+    sched.submit(Req("i0", bucket=("B", "u8"), klass="interactive"))
+    fake.open_gates()
+    sched.close()
+    first = [names[0] for _, names, _ in fake.dispatches]
+    assert first.index("i0") < first.index("b16"), (
+        f"interactive request did not preempt the remaining batch "
+        f"backlog: dispatch order {first}")
+
+
+def test_classes_share_one_buckets_drr_within_a_class():
+    """Within one class DRR fairness is unchanged: two buckets of the
+    same class interleave per round exactly as the classless scheduler
+    did (the class tuple wraps the flow key, it does not replace DRR)."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=8, max_delay_ms=0.0,
+                           fair=True)
+    for i in range(16):
+        sched.submit(Req(f"h{i}", bucket=("HOT", "u8"), klass="batch"))
+    sched.submit(Req("c0", bucket=("COLD", "u8"), klass="batch"))
+    sched.start()
+    sched.close()
+    order = [(b, len(names)) for b, names, _ in fake.dispatches]
+    assert order == [(("HOT", "u8"), 8), (("COLD", "u8"), 1),
+                     (("HOT", "u8"), 8)]
+
+
+def test_unknown_class_raises_and_default_class_applies():
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0)
+    with pytest.raises(ValueError, match="unknown traffic class"):
+        sched.submit(Req("x", klass="platinum"))
+    sched.submit(Req("plain"))               # no klass -> default_class
+    assert sched.class_of(Req("plain")) == "standard"
+    sched.start()
+    sched.close()
+    assert ("plain",) in fake.completions
+
+
+def test_traffic_class_config_validation():
+    with pytest.raises(ValueError, match="classes"):
+        SchedulerConfig(classes=())
+    with pytest.raises(ValueError, match="classes"):
+        SchedulerConfig(classes=("a", "a"))
+    with pytest.raises(ValueError, match="default_class"):
+        SchedulerConfig(default_class="nope")
+    with pytest.raises(ValueError, match="tenant_rate"):
+        SchedulerConfig(tenant_rate=-1.0)
+
+
+# ------------------------------------------- deadline sheds (PR 10)
+
+
+def _seed_rate(sched, rate):
+    """White-box drain-rate seeding (the ``sched._deficit`` idiom):
+    synthetic (now, completed) samples pin ``rate()`` exactly, so the
+    admission arithmetic below is deterministic — no wall clocks."""
+    sched._drain_rate.observe(0, now=0.0)
+    sched._drain_rate.observe(int(rate * 10), now=10.0)
+    assert sched._drain_rate.rate() == pytest.approx(rate)
+
+
+def test_deadline_shed_is_deterministic_with_injected_rate():
+    """depth=3 and a seeded 2/s drain rate predict (3+1)/2 = 2.0s of
+    queue delay: a 1999ms deadline sheds (typed error, counted), a
+    2001ms deadline is admitted. Pure arithmetic, no sleeps."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0)
+    for i in range(3):
+        sched.submit(Req(f"p{i}", bucket=(f"B{i}", "u8")))
+    _seed_rate(sched, 2.0)
+    assert sched.predicted_wait_s() == pytest.approx(2.0)
+    with pytest.raises(DeadlineExceeded, match="deadline 1999"):
+        sched.submit(Req("tight", deadline_ms=1999.0))
+    assert sched.shed_deadline == 1
+    assert sched.shed_by_class == {"standard": 1}
+    sched.submit(Req("loose", deadline_ms=2001.0))   # meetable: admitted
+    sched.start()
+    sched.close()
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert "loose" in dispatched and "tight" not in dispatched
+
+
+def test_deadline_retry_after_is_clamped_honest_lateness():
+    """Retry-After for a deadline shed is the predicted lateness
+    (predicted delay minus the deadline), clamped to [0.05, 30]."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0)
+    for i in range(9):
+        sched.submit(Req(f"p{i}", bucket=(f"B{i}", "u8")))
+    _seed_rate(sched, 1.0)                   # predicted = 10.0s
+    with pytest.raises(DeadlineExceeded) as ei:
+        sched.submit(Req("d", deadline_ms=4000.0))
+    assert ei.value.retry_after_s == pytest.approx(6.0)   # 10.0 - 4.0
+    with pytest.raises(DeadlineExceeded) as ei:
+        sched.submit(Req("d2", deadline_ms=9990.0))
+    assert ei.value.retry_after_s == 0.05                 # floor clamp
+    sched.close()
+
+
+def test_cold_estimator_never_sheds_but_nonpositive_deadline_does():
+    """With no drain-rate samples the predicted delay is unknown: a
+    positive deadline must be admitted (a cold estimator never justifies
+    a shed); a deadline <= 0 is already dead and sheds regardless."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0)
+    for i in range(50):
+        sched.submit(Req(f"p{i}", bucket=(f"B{i}", "u8")))
+    assert sched.predicted_wait_s() is None
+    sched.submit(Req("hopeful", deadline_ms=1.0))    # admitted while cold
+    with pytest.raises(DeadlineExceeded):
+        sched.submit(Req("dead", deadline_ms=0.0))
+    sched.start()
+    sched.close()
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert "hopeful" in dispatched and "dead" not in dispatched
+
+
+def test_drain_rate_unit_algebra():
+    dr = DrainRate()
+    assert dr.rate() is None                 # cold
+    dr.observe(5, now=1.0)
+    assert dr.rate() is None                 # one sample
+    dr.observe(5, now=2.0)
+    assert dr.rate() is None                 # no forward progress
+    dr.observe(9, now=3.0)
+    assert dr.rate() == pytest.approx(2.0)   # (9-5)/(3-1)
+
+
+# ---------------------------------------------- tenant quotas (PR 10)
+
+
+def test_token_bucket_refill_algebra():
+    """Exact refill arithmetic with synthetic timestamps: burst spends
+    first, then admission tracks rate, and the wait quote is the exact
+    time until one whole token exists."""
+    tb = TokenBucket(rate=2.0, burst=2)
+    assert tb.take(0.0) == 0.0               # burst token 1
+    assert tb.take(0.0) == 0.0               # burst token 2
+    assert tb.take(0.0) == pytest.approx(0.5)   # empty: 1 token / 2 per s
+    assert tb.take(0.25) == pytest.approx(0.25)  # refilled 0.5, need 0.5 more
+    assert tb.take(0.75) == 0.0              # 1.5 banked: spend one
+    tb2 = TokenBucket(rate=1.0, burst=2)
+    tb2.take(0.0)
+    tb2.take(0.0)
+    assert tb2.take(100.0) == 0.0            # refill capped at burst...
+    assert tb2.take(100.0) == 0.0
+    assert tb2.take(100.0) == pytest.approx(1.0)   # ...never 98 banked
+    with pytest.raises(ValueError, match="rate"):
+        TokenBucket(rate=0.0, burst=1)
+    with pytest.raises(ValueError, match="burst"):
+        TokenBucket(rate=1.0, burst=0.5)
+
+
+def test_tenant_quota_sheds_one_tenant_not_the_other():
+    """Over-quota sheds are per tenant (typed error, per-tenant counter)
+    and NEVER block — even under overload_policy="block" — while an
+    un-tenanted or under-quota request admits freely."""
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0,
+                           tenant_rate=0.001, tenant_burst=1,
+                           overload_policy="block")
+    sched.submit(Req("a0", bucket=("A", "u8"), tenant="acme"))
+    with pytest.raises(TenantQuotaExceeded, match="acme") as ei:
+        sched.submit(Req("a1", bucket=("A", "u8"), tenant="acme"))
+    assert ei.value.retry_after_s == 30.0    # honest wait, ceiling clamp
+    assert sched.shed_quota == 1
+    assert sched.shed_by_tenant == {"acme": 1}
+    sched.submit(Req("z0", bucket=("A", "u8"), tenant="zeta"))  # own bucket
+    sched.submit(Req("p0", bucket=("A", "u8")))       # no tenant: no quota
+    sched.start()
+    sched.close()
+    dispatched = {n for _, names, _ in fake.dispatches for n in names}
+    assert dispatched == {"a0", "z0", "p0"}
+
+
+def test_tenant_quota_unlimited_when_rate_unset():
+    fake = FakeDispatch()
+    sched = fake.scheduler(autostart=False, max_batch=1, max_delay_ms=0.0)
+    for i in range(20):                      # tenant_rate=0.0: no limiter
+        sched.submit(Req(f"t{i}", bucket=(f"B{i}", "u8"), tenant="acme"))
+    sched.start()
+    sched.close()
+    assert sched.shed_quota == 0 and len(fake.completions) == 20
